@@ -1,0 +1,47 @@
+"""Cache-bookkeeping overhead (the paper's claim: 'cache-related operations
+... introduce very little overhead'): prepare_ids cost vs the raw lookup, and
+transmitter cost vs buffer size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, timeit
+from repro.core import cached_embedding as ce
+
+
+def bench_cache_overhead(t: Table):
+    vocab, dim, n_ids = 1_000_000, 64, 16384
+    cfg = ce.CachedEmbeddingConfig(vocab_sizes=(vocab,), dim=dim, ids_per_step=n_ids,
+                                   cache_ratio=0.05)
+    st = ce.init_state(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray((rng.zipf(1.4, n_ids) % vocab).astype(np.int32))
+
+    prep = jax.jit(lambda s, i: ce.prepare_ids(cfg, s, i))
+    st, slots = prep(st, ids)  # warm
+    sec_prep = timeit(lambda: prep(st, ids))
+
+    gather = jax.jit(lambda s, sl: ce.gather_slots(s, sl))
+    sec_gather = timeit(lambda: gather(st, slots))
+
+    dense = jax.jit(lambda w, i: jnp.take(w, i, axis=0))
+    sec_dense = timeit(lambda: dense(st.full["weight"], ids))
+
+    t.add("cacheops/prepare_ids", sec_prep * 1e6,
+          f"vs_dense_lookup={sec_prep/sec_dense:.2f}x; gather={sec_gather*1e6:.0f}us")
+
+    for buf in (1024, 8192, 65536):
+        cfg_b = ce.CachedEmbeddingConfig(vocab_sizes=(vocab,), dim=dim,
+                                         ids_per_step=n_ids, cache_ratio=0.05,
+                                         buffer_rows=buf)
+        st_b = ce.init_state(jax.random.PRNGKey(0), cfg_b, warm=False)
+        prep_b = jax.jit(lambda s, i: ce.prepare_ids(cfg_b, s, i))
+        st_b, _ = prep_b(st_b, ids)
+        sec_b = timeit(lambda: prep_b(st_b, ids))
+        t.add(f"cacheops/buffer_rows_{buf}", sec_b * 1e6,
+              f"rounds={-(-cfg_b.unique_size//buf)}")
+
+
+ALL = [bench_cache_overhead]

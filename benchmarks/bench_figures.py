@@ -1,0 +1,203 @@
+"""One benchmark per paper table/figure (see DESIGN.md §7 index).
+
+All run on the CPU host; where the paper reports GPU-testbed absolutes we
+report (a) our measured numbers and (b) the bandwidth-model projection onto
+the paper's hardware, clearly labelled `derived`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import A100_HBM_BW, DDR4_BW, PCIE3_BW, Table, timeit
+from repro.core import cached_embedding as ce
+from repro.core import freq
+from repro.core.policies import Policy
+from repro.data import synth
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.nn.embedding_bag import embedding_bag
+
+
+# --------------------------------------------------------------------------
+# Fig. 1 — EmbeddingBag throughput (device vs host is a bandwidth statement)
+# --------------------------------------------------------------------------
+
+
+def fig1_embedding_bag(t: Table):
+    vocab, dim = 200_000, 128
+    table = jnp.asarray(np.random.default_rng(0).normal(size=(vocab, dim)).astype(np.float32))
+    for batch in (1024, 8192, 65536):
+        n = batch * 26
+        ids = jnp.asarray(np.random.default_rng(1).integers(0, vocab, n).astype(np.int32))
+        seg = jnp.asarray(np.repeat(np.arange(batch * 26 // 26 * 26 // 26), 26)[:n].astype(np.int32))
+        seg = jnp.asarray(np.arange(n, dtype=np.int32) // 26)
+        fn = jax.jit(lambda tb, i, s: embedding_bag(tb, i, s, batch))
+        sec = timeit(fn, table, ids, seg)
+        bytes_moved = n * dim * 4
+        eff_bw = bytes_moved / sec
+        # the paper's Fig-1 ratio: HBM-bound GPU vs DRAM-bound CPU
+        proj_speedup = A100_HBM_BW / DDR4_BW
+        t.add(
+            f"fig1/embedding_bag_b{batch}",
+            sec * 1e6,
+            f"eff_bw={eff_bw/1e9:.1f}GB/s; A100-vs-CPU model speedup={proj_speedup:.0f}x",
+        )
+
+
+# --------------------------------------------------------------------------
+# Fig. 2 — id frequency skew of the synthetic datasets
+# --------------------------------------------------------------------------
+
+
+def fig2_freq_skew(t: Table):
+    for name, vocab, a in (("criteo-like", 1_000_000, 1.2), ("avazu-like", 300_000, 1.3)):
+        spec = synth.ZipfSparseSpec(vocab_sizes=(vocab,), zipf_a=a)
+        counts = freq.collect_counts(synth.count_stream(spec, 8192, 12, seed=0), vocab)
+        cov = freq.coverage(counts, [0.0014, 0.00012, 0.1])
+        t.add(
+            f"fig2/skew_{name}",
+            0.0,
+            f"top0.14%={cov[0.0014]:.2f}; top0.012%={cov[0.00012]:.2f}; top10%={cov[0.1]:.2f}",
+        )
+
+
+# --------------------------------------------------------------------------
+# Figs. 5/6 — AUROC vs cache ratio (accuracy parity)
+# --------------------------------------------------------------------------
+
+
+def _train_auc(cache_ratio: float, steps: int = 20, seed: int = 0):
+    cfg = DLRMConfig(vocab_sizes=(4096, 2048, 1024), embed_dim=16, batch_size=256,
+                     cache_ratio=cache_ratio, lr=0.5, bottom_mlp=(64, 16), top_mlp=(64,))
+    model = DLRM(cfg)
+    state = model.init(jax.random.PRNGKey(seed))
+    spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+    step = jax.jit(model.train_step)
+    auc = loss = 0.0
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 256, seed, i).items()}
+        state, m = step(state, batch)
+        auc, loss = float(m["auc"]), float(m["loss"])
+    return auc, loss, float(m["hit_rate"])
+
+
+def fig56_accuracy_vs_ratio(t: Table):
+    base_auc, base_loss, _ = _train_auc(1.0)
+    for ratio in (0.015, 0.05, 0.25):
+        auc, loss, hit = _train_auc(ratio)
+        t.add(
+            f"fig5/auroc_ratio_{ratio}",
+            0.0,
+            f"auc={auc:.4f}; delta_vs_uncached={abs(auc-base_auc):.5f}; hit_rate={hit:.3f}",
+        )
+
+
+# --------------------------------------------------------------------------
+# Figs. 7/8 — device memory vs cache ratio (paper config accounting)
+# --------------------------------------------------------------------------
+
+
+def fig78_memory(t: Table):
+    from repro.configs.shapes import AVAZU_VOCABS, CRITEO_VOCABS
+
+    for name, vocabs, batch in (("criteo", CRITEO_VOCABS, 16384), ("avazu", AVAZU_VOCABS, 65536)):
+        full_gb = sum(vocabs) * 128 * 4 / 1e9
+        for ratio in (0.015, 0.05, 0.1, 1.0):
+            cfg = ce.CachedEmbeddingConfig(
+                vocab_sizes=tuple(vocabs), dim=128,
+                ids_per_step=batch * len(vocabs), cache_ratio=ratio,
+                max_unique_per_step=1 << 19,
+            )
+            b = ce.device_bytes(cfg)
+            fast_gb = b["fast_tier_bytes"] / 1e9
+            t.add(
+                f"fig7/mem_{name}_ratio{ratio}",
+                0.0,
+                f"fast_tier={fast_gb:.2f}GB; full_table={full_gb:.2f}GB; saving={100*(1-fast_gb/full_gb):.0f}%",
+            )
+
+
+# --------------------------------------------------------------------------
+# Figs. 9/10 — throughput vs cache ratio (measured step + modeled transfer)
+# --------------------------------------------------------------------------
+
+
+def fig910_throughput(t: Table):
+    batch = 1024
+    for ratio in (0.015, 0.1, 0.5):
+        cfg = DLRMConfig(vocab_sizes=(65536, 32768, 16384), embed_dim=32, batch_size=batch,
+                         cache_ratio=ratio, lr=0.5, bottom_mlp=(64, 32), top_mlp=(64,))
+        model = DLRM(cfg)
+        state = model.init(jax.random.PRNGKey(0))
+        spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+        step = jax.jit(model.train_step)
+        bt = {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, 0).items()}
+        state, m = step(state, bt)  # warm compile + warm cache
+        # measure steady-state steps (fresh zipf batch each time is host-side)
+        batches = [
+            {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, i).items()}
+            for i in range(1, 5)
+        ]
+        import time as _time
+
+        t0 = _time.perf_counter()
+        for bt_i in batches:
+            state, m = step(state, bt_i)
+        jax.block_until_ready(state["emb"].cache.cached_rows["weight"])
+        sec = (_time.perf_counter() - t0) / len(batches)
+        hit = float(state["emb"].cache.hit_rate())
+        # paper-testbed projection: PCIe transfer of missed rows dominates
+        miss_rows = batch * 3 * (1 - hit)
+        pcie_s = miss_rows * 128 * 4 * 2 / PCIE3_BW  # in + evict out, dim-128 rows
+        t.add(
+            f"fig9/throughput_ratio{ratio}",
+            sec * 1e6,
+            f"samples_per_s={batch/sec:.0f}; hit_rate={hit:.3f}; modeled_pcie_ms={pcie_s*1e3:.2f}",
+        )
+
+
+# --------------------------------------------------------------------------
+# beyond-paper: eviction-policy ablation (hit rate at fixed ratio)
+# --------------------------------------------------------------------------
+
+
+def policy_ablation(t: Table):
+    for pol in (Policy.FREQ_LFU, Policy.LRU, Policy.RUNTIME_LFU, Policy.UVM_ROW):
+        cfg = ce.CachedEmbeddingConfig(
+            vocab_sizes=(100_000,), dim=16, ids_per_step=4096,
+            cache_ratio=0.05, policy=pol,
+        )
+        st = ce.init_state(jax.random.PRNGKey(0), cfg,
+                           counts=_zipf_counts(100_000))
+        rng = np.random.default_rng(0)
+        step = jax.jit(lambda s, i: ce.prepare_ids(cfg, s, i))
+        for i in range(12):
+            ids = _zipf_ids(rng, 100_000, 4096)
+            st, _ = step(st, jnp.asarray(ids))
+        t.add(f"ablation/policy_{pol.value}", 0.0, f"hit_rate={float(st.cache.hit_rate()):.4f}")
+
+
+def _zipf_counts(vocab):
+    rng = np.random.default_rng(42)
+    return np.bincount(_zipf_ids(rng, vocab, 200_000), minlength=vocab)
+
+
+def _zipf_ids(rng, vocab, n):
+    from repro.data.synth import _zipf_ids as z
+
+    # raw ids ARE popularity-ranked in the synthetic stream; shuffle the id
+    # space with a fixed permutation so the freq module has real work to do.
+    ids = z(rng, vocab, n, 1.2)
+    perm = np.random.default_rng(7).permutation(vocab)
+    return perm[ids].astype(np.int32)
+
+
+ALL = [
+    fig1_embedding_bag,
+    fig2_freq_skew,
+    fig56_accuracy_vs_ratio,
+    fig78_memory,
+    fig910_throughput,
+    policy_ablation,
+]

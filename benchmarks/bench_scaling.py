@@ -1,0 +1,86 @@
+"""Figs. 13/14 — multi-device scaling (1..8 fake CPU devices, subprocess so
+the parent keeps a single device).  Measures the hybrid-parallel DLRM train
+step: column-TP embedding + DP dense, the paper's §4.4 layout."""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import Table
+
+_CHILD = """
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.core import cached_embedding as ce
+from repro.data import synth
+from repro.models.dlrm import DLRM, DLRMConfig
+import repro.dist.partitioning as dist
+
+n_dev = {n_dev}
+cfg = DLRMConfig(vocab_sizes=(65536, 32768, 16384, 16384), embed_dim=32,
+                 batch_size=2048, cache_ratio=0.1, lr=0.5,
+                 bottom_mlp=(64, 32), top_mlp=(64,))
+model = DLRM(cfg)
+state = model.init(jax.random.PRNGKey(0))
+spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+
+if n_dev == 1:
+    step = jax.jit(model.train_step)
+    rules = {{}}
+    mesh = None
+else:
+    mesh = make_mesh((n_dev // 2 if n_dev > 2 else 1, 2) if n_dev > 2 else (1, n_dev),
+                     ("data", "model"))
+    especs = ce.shard_specs(model.emb_cfg_train, mode="column")
+    sh = lambda s: jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), s,
+                                          is_leaf=lambda x: isinstance(x, P))
+    state_specs = {{
+        "params": jax.tree_util.tree_map(lambda _: P(), state["params"]),
+        "opt": jax.tree_util.tree_map(lambda _: P(), state["opt"]),
+        "emb": especs, "step": P(),
+    }}
+    bspecs = {{"dense": P("data", None), "sparse": P("data", None), "label": P("data")}}
+    rules = {{"batch": ("data",)}}
+    with dist.axis_rules(mesh, rules):
+        step = jax.jit(model.train_step, in_shardings=(sh(state_specs), sh(bspecs)))
+    state = jax.device_put(state, sh(state_specs))
+
+batches = [{{k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 2048, 0, i).items()}}
+           for i in range(6)]
+with dist.axis_rules(mesh, rules) if mesh else __import__("contextlib").nullcontext():
+    state, m = step(state, batches[0])  # compile + warm
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for b in batches[1:]:
+        state, m = step(state, b)
+    jax.block_until_ready(m["loss"])
+sec = (time.perf_counter() - t0) / (len(batches) - 1)
+print(f"RESULT {{sec*1e6:.1f}} {{2048/sec:.0f}}")
+"""
+
+
+def bench_scaling(t: Table):
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    for n_dev in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+        env["PYTHONPATH"] = str(repo / "src")
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD.format(n_dev=n_dev)],
+            capture_output=True, text=True, env=env, timeout=600,
+        )
+        line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")]
+        if not line:
+            t.add(f"fig13/scaling_dev{n_dev}", 0.0, f"FAILED: {out.stderr[-200:]}")
+            continue
+        us, sps = line[0].split()[1:3]
+        t.add(f"fig13/scaling_dev{n_dev}", float(us), f"samples_per_s={sps} (host-emulated devices)")
+
+
+ALL = [bench_scaling]

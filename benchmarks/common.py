@@ -1,0 +1,42 @@
+"""Benchmark utilities: timing + the A100/PCIe performance model used to
+project CPU-host measurements onto the paper's testbed numbers."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# paper testbed (Table 2) + TPU-target constants
+PCIE3_BW = 16e9  # bytes/s, PCIe 3.0 x16 (paper's GPU interconnect)
+A100_HBM_BW = 2.0e12  # bytes/s
+DDR4_BW = 3.2e10  # bytes/s per socket (EPYC 7543, 8ch DDR4-3200)
+TPU_HOST_LINK = 100e9  # bytes/s host DMA (v5e host)
+TPU_HBM_BW = 819e9
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (device-synchronized)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Table:
+    """Collects (name, us_per_call, derived) rows and prints the CSV."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    def extend(self, other: "Table"):
+        self.rows.extend(other.rows)

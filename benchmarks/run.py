@@ -1,0 +1,44 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (and mirrors them into
+results/bench.csv).  Usage: ``PYTHONPATH=src python -m benchmarks.run``
+(optionally ``--only fig9``).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--skip-scaling", action="store_true",
+                    help="skip the multi-process scaling benchmark")
+    args = ap.parse_args()
+
+    from benchmarks import bench_cache_ops, bench_figures, bench_scaling
+    from benchmarks.common import Table
+
+    fns = list(bench_figures.ALL) + list(bench_cache_ops.ALL)
+    if not args.skip_scaling:
+        fns += list(bench_scaling.ALL)
+
+    t = Table()
+    print("name,us_per_call,derived")
+    for fn in fns:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            fn(t)
+        except Exception as e:  # keep the harness running; report the failure
+            t.add(f"{fn.__name__}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+    out = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench.csv"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text("name,us_per_call,derived\n" + "\n".join(
+        f"{n},{u:.1f},{d}" for n, u, d in t.rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

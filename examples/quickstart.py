@@ -1,0 +1,52 @@
+"""Quickstart: the frequency-aware software cache in 60 lines.
+
+Builds a 100k-row embedding table whose slow tier would live in host DRAM on
+a real TPU, serves it through a 2%-capacity device cache, and shows the three
+paper claims in miniature: exact lookups, high hit rate on skewed traffic,
+bounded per-step transfer.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cached_embedding as ce
+from repro.core import freq
+
+VOCAB, DIM, BATCH = 100_000, 64, 4096
+
+# --- static module: scan the dataset once for id frequencies (paper §4.2) --
+rng = np.random.default_rng(0)
+train_ids = (rng.zipf(1.3, size=(200, BATCH)) % VOCAB).astype(np.int64)
+counts = freq.collect_counts(iter(train_ids), VOCAB)
+print(f"skew: top 1% of ids = {freq.coverage(counts, [0.01])[0.01]:.0%} of accesses")
+
+cfg = ce.CachedEmbeddingConfig(
+    vocab_sizes=(VOCAB,), dim=DIM, ids_per_step=BATCH,
+    cache_ratio=0.02,            # 2% of rows live on-device
+    buffer_rows=1024,            # bounded transmitter buffer (paper §4.3)
+)
+state = ce.init_state(jax.random.PRNGKey(0), cfg, counts=counts)
+print(f"cache: {cfg.capacity} / {cfg.vocab} rows on the fast tier")
+
+# --- training-style loop through the cache ---------------------------------
+@jax.jit
+def lookup(state, ids):
+    state, slots = ce.prepare_ids(cfg, state, ids)   # Algorithm 1 (on device)
+    return state, ce.gather_slots(state, slots)      # differentiable gather
+
+for step in range(30):
+    ids = jnp.asarray(train_ids[step % len(train_ids)], jnp.int32)
+    state, emb = lookup(state, ids)
+
+print(f"hit rate after 30 steps: {float(state.cache.hit_rate()):.1%}")
+print(f"rows moved host->device: {int(state.cache.misses)}")
+print(f"rows evicted device->host: {int(state.cache.evictions)}")
+
+# --- exactness: flush and compare against the dense table ------------------
+flushed = ce.flush_state(cfg, state)
+ids = jnp.asarray(train_ids[0][:16], jnp.int32)
+_, emb = lookup(state, jnp.asarray(train_ids[0], jnp.int32))
+ref = ce.dense_reference_lookup(flushed, ids[:, None])[:, 0]
+print("cache == dense table:", bool(jnp.allclose(emb[:16], ref)))

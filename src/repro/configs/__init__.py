@@ -1,0 +1,42 @@
+"""Arch registry: ``--arch <id>`` resolves here.
+
+The 10 assigned architectures plus the paper's own DLRM configs.
+"""
+from repro.configs import (
+    dien,
+    din,
+    dlrm_avazu,
+    dlrm_criteo,
+    fm,
+    gatedgcn,
+    gemma3_27b,
+    grok_1_314b,
+    internlm2_20b,
+    mind,
+    olmoe_1b_7b,
+    smollm_360m,
+)
+
+REGISTRY = {
+    a.name: a
+    for a in (
+        grok_1_314b.ARCH,
+        olmoe_1b_7b.ARCH,
+        gemma3_27b.ARCH,
+        smollm_360m.ARCH,
+        internlm2_20b.ARCH,
+        gatedgcn.ARCH,
+        din.ARCH,
+        dien.ARCH,
+        fm.ARCH,
+        mind.ARCH,
+        dlrm_criteo.ARCH,
+        dlrm_avazu.ARCH,
+    )
+}
+
+ASSIGNED = [n for n in REGISTRY if not n.startswith("dlrm")]
+
+
+def get(name: str):
+    return REGISTRY[name]

@@ -1,0 +1,211 @@
+"""Cell machinery: every (arch x input-shape) pair resolves to a ``Cell`` —
+a step function + ShapeDtypeStruct args + PartitionSpec trees + logical-axis
+rules — which ``launch.dryrun`` lowers and compiles on the production mesh.
+
+Per-family builders live here; per-arch files define the exact published
+config and its rule table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cached_embedding as ce
+import repro.dist.partitioning as dist
+from repro.nn import transformer as T
+
+__all__ = ["Cell", "dp_axes", "lm_state_specs", "replicated_like", "emb_state_specs", "Arch"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    step_fn: Callable
+    args: Tuple[Any, ...]  # pytree of ShapeDtypeStruct, positional
+    in_specs: Tuple[Any, ...]  # PartitionSpec pytrees matching args
+    rules: Dict[str, Any]
+    donate: Tuple[int, ...] = ()
+    note: str = ""
+
+
+@dataclasses.dataclass
+class Arch:
+    """One assigned architecture: config + cells + reduced smoke runner."""
+
+    name: str
+    family: str  # lm | gnn | recsys
+    shapes: Tuple[str, ...]
+    build_cell: Callable[..., Optional[Cell]]  # (shape, mesh_axes) -> Cell | None (skip)
+    smoke: Callable[[], Dict[str, Any]]  # tiny CPU run; returns metrics
+    notes: str = ""
+
+
+def dp_axes(mesh_axes: Sequence[str]) -> Tuple[str, ...]:
+    """The data-parallel mesh axes ('pod' composes with 'data')."""
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def replicated_like(tree: Any) -> Any:
+    """Fully-replicated PartitionSpec tree matching ``tree``'s structure."""
+    return jax.tree_util.tree_map(lambda _: P(), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def lm_state_specs(model, cfg: T.TransformerConfig, rules: Dict[str, Any]) -> Dict[str, Any]:
+    """PartitionSpec tree for the LM train state under ``rules``."""
+    axes = T.lm_param_axes(cfg)
+    with dist.axis_rules(None, rules):
+        pspecs = dist.specs_for_axes(axes)
+    return {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs},
+        "step": P(),
+    }
+
+
+def lm_cell(
+    arch: str,
+    shape: str,
+    model,
+    cfg: T.TransformerConfig,
+    kind: str,
+    batch: int,
+    seq: int,
+    rules: Dict[str, Any],
+) -> Cell:
+    dp = rules["batch"]
+    if kind == "train":
+        state_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        batch_specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+        args = (state_shapes, model.train_specs(batch, seq))
+        in_specs = (lm_state_specs(model, cfg, rules), batch_specs)
+        step = model.train_step
+        donate = (0,)
+    elif kind == "prefill":
+        params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))["params"]
+        args = (params_shapes, model.prefill_specs(batch, seq))
+        in_specs = (
+            lm_state_specs(model, cfg, rules)["params"],
+            {"tokens": P(dp, None)},
+        )
+        step = model.prefill_step
+        donate = ()
+    elif kind == "decode":
+        params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))["params"]
+        specs = model.decode_specs(batch, seq)
+        kv_seq = rules.get("kv_seq")
+        heads = rules.get("kv_heads_eff")
+
+        def cache_spec(leaf):
+            if len(leaf.shape) == 5:  # [G, B, S, H, hd]
+                return P(None, dp, kv_seq, heads, None)
+            return P(dp, kv_seq, heads, None)  # [B, S, H, hd]
+
+        cache_specs = jax.tree_util.tree_map(cache_spec, specs["caches"])
+        args = (params_shapes, specs["caches"], specs["token"], specs["pos"])
+        in_specs = (
+            lm_state_specs(model, cfg, rules)["params"],
+            cache_specs,
+            P(dp, None),
+            P(),
+        )
+        step = model.decode_fn
+        donate = (1,)
+    else:
+        raise ValueError(kind)
+    return Cell(arch, shape, kind, step, args, in_specs, rules, donate)
+
+
+# ---------------------------------------------------------------------------
+# Recsys family
+# ---------------------------------------------------------------------------
+
+
+def emb_state_specs(emb_cfg: ce.CachedEmbeddingConfig, mode: str) -> Any:
+    return ce.shard_specs(emb_cfg, mode=mode)
+
+
+def recsys_state_specs(state_shapes, emb_cfg, mode: str) -> Dict[str, Any]:
+    specs = {
+        "params": replicated_like(state_shapes["params"]),
+        "opt": replicated_like(state_shapes["opt"]),
+        "emb": emb_state_specs(emb_cfg, mode),
+        "step": P(),
+    }
+    return specs
+
+
+def recsys_cell(
+    arch: str,
+    shape: str,
+    model,
+    kind: str,
+    batch_specs: Dict[str, Any],
+    batch_in_specs: Dict[str, Any],
+    emb_cfg: ce.CachedEmbeddingConfig,
+    emb_mode: str,
+    rules: Dict[str, Any],
+) -> Cell:
+    state_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    state_specs = recsys_state_specs(state_shapes, emb_cfg, emb_mode)
+    if kind == "train":
+        step = model.train_step
+    elif kind == "serve":
+        step = model.serve_step
+    elif kind == "retrieval":
+        step = model.retrieval_score
+    else:
+        raise ValueError(kind)
+    return Cell(
+        arch,
+        shape,
+        kind,
+        step,
+        (state_shapes, batch_specs),
+        (state_specs, batch_in_specs),
+        rules,
+        donate=(0,) if kind == "train" else (),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def gnn_cell(
+    arch: str,
+    shape: str,
+    model,
+    kind: str,
+    batch_specs: Dict[str, Any],
+    batch_in_specs: Dict[str, Any],
+    rules: Dict[str, Any],
+) -> Cell:
+    state_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    state_specs = {
+        "params": replicated_like(state_shapes["params"]),
+        "opt": replicated_like(state_shapes["opt"]),
+        "step": P(),
+    }
+    step = model.train_step if kind == "train" else model.serve_step
+    return Cell(
+        arch,
+        shape,
+        kind,
+        step,
+        (state_shapes, batch_specs),
+        (state_specs, batch_in_specs),
+        rules,
+        donate=(0,) if kind == "train" else (),
+    )

@@ -1,0 +1,27 @@
+"""dien [arXiv:1809.03672]: embed_dim=18 seq_len=100 gru_dim=108 mlp=200-80,
+AUGRU interest evolution.  Same tables/cache layout as DIN."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import shapes as S
+from repro.configs.base import Arch
+from repro.configs.din import build_cell as din_build_cell, smoke as din_smoke
+from repro.models.recsys_models import DIENConfig, DIENModel
+
+CONFIG = DIENConfig(
+    n_items=10_000_000, n_cates=1_000_000, n_users=1_000_256,  # total % 512 == 0 (row-sharded tier)
+    embed_dim=18, seq_len=100, gru_dim=108, mlp=(200, 80),
+    batch_size=65536, cache_ratio=0.015, max_unique_per_step=1 << 22, lr=0.05,
+)
+
+def build_cell(shape, mesh_axes):
+    return din_build_cell(shape, mesh_axes, config=CONFIG, arch_name="dien",
+                          model_cls=DIENModel)
+
+def smoke():
+    def mk(**kw):
+        return DIENConfig(gru_dim=12, **kw)
+    return din_smoke(config=mk, model_cls=DIENModel)
+
+ARCH = Arch("dien", "recsys", S.RECSYS_SHAPES, build_cell, smoke,
+            notes="AUGRU; retrieval stage scores on GRU1 interest states (DESIGN.md)")

@@ -1,0 +1,38 @@
+"""DLRM on Avazu — the paper's second config (batch 64k, lr 5e-2)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import shapes as S
+from repro.configs.base import Arch, dp_axes, recsys_cell
+from repro.data import synth
+from repro.models.dlrm import DLRM, DLRMConfig
+
+CONFIG = DLRMConfig(
+    vocab_sizes=S.AVAZU_VOCABS, n_dense=8, embed_dim=128,
+    batch_size=65536, cache_ratio=0.015, lr=5e-2, max_unique_per_step=1 << 20,
+)
+
+PAPER_SHAPES = ("paper_64k",)
+
+def build_cell(shape, mesh_axes):
+    dp = dp_axes(mesh_axes)
+    model = DLRM(CONFIG)
+    specs = model.input_specs(CONFIG.batch_size)
+    in_specs = {"dense": P(dp, None), "sparse": P(dp, None), "label": P(dp)}
+    return recsys_cell("dlrm-avazu", shape, model, "train", specs, in_specs,
+                       model.emb_cfg_train, "column", {"batch": dp, "seq": None})
+
+def smoke():
+    cfg = DLRMConfig(vocab_sizes=(64, 32), n_dense=8, embed_dim=8, batch_size=8,
+                     cache_ratio=0.5, lr=0.05, bottom_mlp=(16, 8), top_mlp=(16,))
+    m = DLRM(cfg)
+    st = m.init(jax.random.PRNGKey(0))
+    b = synth.sparse_batch(synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=8), 8, 0, 0)
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    st, metrics = jax.jit(m.train_step)(st, b)
+    return {"loss": float(metrics["loss"]), "finite": bool(jnp.isfinite(metrics["loss"])),
+            "logits_shape": ()}
+
+ARCH = Arch("dlrm-avazu", "recsys", PAPER_SHAPES, build_cell, smoke,
+            notes="the paper's Avazu config")

@@ -1,0 +1,42 @@
+"""DLRM on Criteo Kaggle — the paper's own evaluation config (§5.1):
+embed dim 128, bottom MLP 512-256-128, top MLP 1024-1024-512-256-1,
+batch 16k, SGD lr=1.0, cache ratio 1.5%%."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import shapes as S
+from repro.configs.base import Arch, dp_axes, recsys_cell
+from jax.sharding import PartitionSpec as P
+from repro.data import synth
+from repro.models.dlrm import DLRM, DLRMConfig
+
+CONFIG = DLRMConfig(
+    vocab_sizes=S.CRITEO_VOCABS, n_dense=13, embed_dim=128,
+    batch_size=16384, cache_ratio=0.015, lr=1.0, max_unique_per_step=1 << 19,
+)
+
+PAPER_SHAPES = ("paper_16k",)
+
+def build_cell(shape, mesh_axes):
+    dp = dp_axes(mesh_axes)
+    model = DLRM(CONFIG)
+    specs = model.input_specs(CONFIG.batch_size)
+    in_specs = {"dense": P(dp, None), "sparse": P(dp, None), "label": P(dp)}
+    emb_cfg = model.emb_cfg_train
+    return recsys_cell("dlrm-criteo", shape, model, "train", specs, in_specs,
+                       emb_cfg, "column", {"batch": dp, "seq": None})
+
+def smoke():
+    cfg = DLRMConfig(vocab_sizes=(128, 64, 256), embed_dim=16, batch_size=16,
+                     cache_ratio=0.3, lr=0.1,
+                     bottom_mlp=(32, 16), top_mlp=(32, 16))
+    m = DLRM(cfg)
+    st = m.init(jax.random.PRNGKey(0))
+    b = synth.sparse_batch(synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13), 16, 0, 0)
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    st, metrics = jax.jit(m.train_step)(st, b)
+    return {"loss": float(metrics["loss"]), "finite": bool(jnp.isfinite(metrics["loss"])),
+            "logits_shape": ()}
+
+ARCH = Arch("dlrm-criteo", "recsys", PAPER_SHAPES, build_cell, smoke,
+            notes="the paper's model; column-TP cache, dim 128")

@@ -1,0 +1,55 @@
+"""fm [Rendle ICDM'10]: 39 sparse fields, embed_dim=10, 2-way interactions via
+the O(nk) sum-square trick.  Tables served through the frequency-aware cache
+(row-sharded slow tier: dim 10 cannot split over model=16 — DESIGN.md)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import shapes as S
+from repro.configs.base import Arch, Cell, dp_axes, recsys_cell
+from repro.data import synth
+from repro.models.recsys_models import FMConfig, FMModel
+
+CONFIG = FMConfig(
+    vocab_sizes=S.FM_VOCABS, embed_dim=10, batch_size=65536,
+    cache_ratio=0.015, max_unique_per_step=1 << 21, lr=0.05,
+)
+
+def _rules(mesh_axes):
+    dp = dp_axes(mesh_axes)
+    return {"batch": dp, "seq": None}
+
+def build_cell(shape, mesh_axes):
+    kind, batch = S.RECSYS_DEFS[shape]
+    dp = dp_axes(mesh_axes)
+    model = FMModel(CONFIG)
+    if kind == "retrieval":
+        specs = model.input_specs(1, n_candidates=S.N_CANDIDATES)
+        in_specs = {"sparse": P(None, None), "candidates": P(dp)}
+        emb_cfg = model.emb_cfg(1, writeback=False)
+    else:
+        specs = model.input_specs(batch)
+        in_specs = {"sparse": P(dp, None), "label": P(dp)}
+        emb_cfg = model.emb_cfg(batch, writeback=(kind == "train"))
+    return recsys_cell("fm", shape, FMModel(CONFIG if kind == "train" else _serve_cfg(batch, kind)),
+                       kind, specs, in_specs, emb_cfg, "row", _rules(mesh_axes))
+
+def _serve_cfg(batch, kind):
+    import dataclasses
+    return dataclasses.replace(CONFIG, batch_size=batch if kind != "retrieval" else 1)
+
+def smoke():
+    cfg = FMConfig(vocab_sizes=(64,) * 6, embed_dim=4, batch_size=16, cache_ratio=0.3)
+    m = FMModel(cfg)
+    st = m.init(jax.random.PRNGKey(0))
+    b = synth.sparse_batch(synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes), 16, 0, 0)
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    st, metrics = jax.jit(m.train_step)(st, b)
+    sc, _ = jax.jit(m.retrieval_score)(st, {
+        "sparse": b["sparse"][:1, :5], "candidates": jnp.arange(32, dtype=jnp.int32)})
+    return {"loss": float(metrics["loss"]),
+            "finite": bool(jnp.isfinite(metrics["loss"])) and bool(jnp.isfinite(sc).all()),
+            "logits_shape": tuple(sc.shape)}
+
+ARCH = Arch("fm", "recsys", S.RECSYS_SHAPES, build_cell, smoke,
+            notes="cache row-mode (dim 10 < tp); retrieval = context-factored FM scan")

@@ -1,0 +1,30 @@
+"""gemma3-27b [hf:google/gemma-3]: 62L d_model=5376 32H (GQA kv=16)
+d_ff=21504 vocab=262144, 5:1 local:global sliding-window (window 1024),
+head_dim 128 (decoupled from d_model/n_heads).
+
+long_500k RUNS for this arch: local layers keep a 1024-token ring-buffer KV,
+global layers shard the 512k KV over the data axis (flash-decoding style
+split-softmax, realized by SPMD from the kv_seq sharding rule).
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import BF16, make_lm_arch
+from repro.nn.layers import Dtypes
+from repro.nn.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, d_head=128,
+    d_ff=21504, vocab=262144, pattern=("local",) * 5 + ("global",),
+    window=1024, dtypes=BF16, remat=True,
+)
+
+SMOKE = TransformerConfig(
+    n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+    vocab=256, pattern=("local",) * 5 + ("global",), window=8, kv_repeat=2,
+    dtypes=Dtypes(param=jnp.float32, compute=jnp.float32), block_q=16, block_k=16,
+)
+
+ARCH = make_lm_arch(
+    "gemma3-27b", CONFIG, long_ok=True, smoke_cfg=SMOKE,
+    notes="5:1 local:global; long_500k runs with data-sharded global KV",
+)

@@ -1,0 +1,30 @@
+"""grok-1-314b [hf:xai-org/grok-1]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2.
+
+Sharding: 8 big experts < model=16 -> in-expert TP (d_ff over model, experts
+unsharded, no all-to-all); kv heads replicated 2x so the 16-way model axis
+shards attention (Megatron KV-duplication); FSDP over data; full attention ->
+long_500k skipped (DESIGN.md).
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import BF16, make_lm_arch
+from repro.nn.layers import Dtypes
+from repro.nn.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=32768,
+    vocab=131072, ffn="moe", n_experts=8, top_k=2, kv_repeat=2,
+    dtypes=BF16, remat=True, moe_impl="shard_map",  # §Perf grok_train it2
+)
+
+SMOKE = TransformerConfig(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+    ffn="moe", n_experts=8, top_k=2, kv_repeat=2,
+    dtypes=Dtypes(param=jnp.float32, compute=jnp.float32), block_q=16, block_k=16,
+)
+
+ARCH = make_lm_arch(
+    "grok-1-314b", CONFIG, moe="tp", tp_kv_param=False, long_ok=False, smoke_cfg=SMOKE,
+    notes="MoE 8e top-2; in-expert TP; kv_repeat=2; long_500k skipped (full attn)",
+)

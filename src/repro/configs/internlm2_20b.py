@@ -1,0 +1,27 @@
+"""internlm2-20b [arXiv:2403.17297]: 48L d_model=6144 48H (GQA kv=8)
+d_ff=16384 vocab=92544.
+
+kv_repeat=2 (8 kv heads -> 16 for the model axis); full attention ->
+long_500k skipped.
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import BF16, make_lm_arch
+from repro.nn.layers import Dtypes
+from repro.nn.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab=92544, kv_repeat=2, dtypes=BF16, remat=True,
+)
+
+SMOKE = TransformerConfig(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+    kv_repeat=2, dtypes=Dtypes(param=jnp.float32, compute=jnp.float32),
+    block_q=16, block_k=16,
+)
+
+ARCH = make_lm_arch(
+    "internlm2-20b", CONFIG, tp_kv_param=False, long_ok=False, smoke_cfg=SMOKE,
+    notes="dense GQA; kv_repeat=2; long_500k skipped (full attn)",
+)

@@ -1,0 +1,113 @@
+"""Shared machinery for the 5 assigned LM archs.
+
+Shapes (assignment):
+  train_4k     seq 4096,  global batch 256   -> train_step (fwd+bwd+adamw)
+  prefill_32k  seq 32768, global batch 32    -> prefill forward
+  decode_32k   kv 32768,  global batch 128   -> one-token decode vs KV cache
+  long_500k    kv 524288, global batch 1     -> sub-quadratic archs only
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Arch, Cell, dp_axes, lm_cell
+from repro.models.lm import LMModel
+from repro.nn import transformer as T
+from repro.nn.layers import Dtypes
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SHAPE_DEFS = {
+    "train_4k": ("train", 256, 4096),
+    "prefill_32k": ("prefill", 32, 32768),
+    "decode_32k": ("decode", 128, 32768),
+    "long_500k": ("decode", 1, 524288),
+}
+
+# bf16 weights + fp32 Adam moments: 314B params / 256 chips needs
+# 2.45 (p) + 4.9 (m) + 4.9 (v) = 12.3 GB/chip, inside the v5e 16 GB budget.
+BF16 = Dtypes(param=jnp.bfloat16, compute=jnp.bfloat16)
+
+
+def lm_rules(
+    mesh_axes: Sequence[str],
+    kind: str,
+    *,
+    tp_attn: bool = True,
+    tp_kv_param: bool = True,
+    moe: Optional[str] = None,  # None | "ep" | "tp"
+    kv_seq=None,
+    fsdp: bool = True,
+) -> Dict[str, object]:
+    dp = dp_axes(mesh_axes)
+    return {
+        "batch": dp,
+        "seq": None,
+        "embed": "data" if fsdp else None,  # FSDP/ZeRO param shard
+        "heads": "model" if tp_attn else None,
+        "kv_heads": "model" if (tp_attn and tp_kv_param) else None,
+        "kv_heads_eff": "model" if tp_attn else None,
+        "mlp": "model",
+        "vocab": "model",
+        "layer_groups": None,
+        "experts": "model" if moe == "ep" else None,
+        "expert_mlp": "model" if moe == "tp" else None,
+        "kv_seq": kv_seq,
+    }
+
+
+def make_lm_arch(
+    name: str,
+    cfg: T.TransformerConfig,
+    *,
+    moe: Optional[str] = None,
+    tp_attn: bool = True,
+    tp_kv_param: bool = True,
+    long_ok: bool = False,
+    long_kv_seq: Optional[str] = "data",
+    smoke_cfg: T.TransformerConfig,
+    notes: str = "",
+) -> Arch:
+    def build_cell(shape: str, mesh_axes: Sequence[str]) -> Optional[Cell]:
+        if shape == "long_500k" and not long_ok:
+            return None  # pure full-attention arch: documented skip (DESIGN.md)
+        kind, batch, seq = SHAPE_DEFS[shape]
+        kv_seq = long_kv_seq if shape == "long_500k" else None
+        rules = lm_rules(
+            mesh_axes, kind, tp_attn=tp_attn, tp_kv_param=tp_kv_param, moe=moe, kv_seq=kv_seq
+        )
+        if shape == "long_500k":
+            # batch=1: the data axis belongs to the sharded KV sequence
+            # (flash-decoding split), not to batch.
+            rules["batch"] = None
+        model = LMModel(cfg)
+        return lm_cell(name, shape, model, cfg, kind, batch, seq, rules)
+
+    def smoke() -> Dict[str, object]:
+        model = LMModel(smoke_cfg, lr=1e-3)
+        state = model.init(jax.random.PRNGKey(0))
+        b, s = 2, 16
+        toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, smoke_cfg.vocab)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+        state, metrics = jax.jit(model.train_step)(state, batch)
+        caches = T.init_decode_caches(smoke_cfg, b, s, dtype=jnp.float32)
+        logits, caches = jax.jit(model.decode_fn)(
+            state["params"], caches, toks[:, :1], jnp.zeros((), jnp.int32)
+        )
+        return {
+            "loss": float(metrics["loss"]),
+            "logits_shape": tuple(logits.shape),
+            "finite": bool(jnp.isfinite(metrics["loss"]))
+            and bool(jnp.isfinite(logits).all()),
+        }
+
+    return Arch(
+        name=name,
+        family="lm",
+        shapes=LM_SHAPES,
+        build_cell=build_cell,
+        smoke=smoke,
+        notes=notes,
+    )

@@ -1,0 +1,28 @@
+"""olmoe-1b-7b [arXiv:2409.02060]: 16L d_model=2048 16H (GQA kv=16) d_ff=1024
+vocab=50304, MoE 64 experts top-8.
+
+Sharding: 64 small experts >= model=16 -> true EP (experts over model,
+all-to-all dispatch); full attention -> long_500k skipped.
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import BF16, make_lm_arch
+from repro.nn.layers import Dtypes
+from repro.nn.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1024,
+    vocab=50304, ffn="moe", n_experts=64, top_k=8, dtypes=BF16, remat=True,
+    moe_impl="shard_map",  # §Perf olmoe it4
+)
+
+SMOKE = TransformerConfig(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=32, vocab=256,
+    ffn="moe", n_experts=8, top_k=4,
+    dtypes=Dtypes(param=jnp.float32, compute=jnp.float32), block_q=16, block_k=16,
+)
+
+ARCH = make_lm_arch(
+    "olmoe-1b-7b", CONFIG, moe="ep", long_ok=False, smoke_cfg=SMOKE,
+    notes="MoE 64e top-8; expert parallel over model axis; long_500k skipped (full attn)",
+)

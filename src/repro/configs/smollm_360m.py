@@ -1,0 +1,29 @@
+"""smollm-360m [hf:HuggingFaceTB/SmolLM-360M]: 32L d_model=960 15H (GQA kv=5)
+d_ff=2560 vocab=49152 (llama arch).
+
+15 heads are indivisible by model=16: at 360M params the production layout is
+(FSDP-)data parallel for attention with TP only on FFN (2560/16) and vocab
+(49152/16) — attention params replicated over the model axis (DESIGN.md).
+Full attention -> long_500k skipped.
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import BF16, make_lm_arch
+from repro.nn.layers import Dtypes
+from repro.nn.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, d_head=64,
+    d_ff=2560, vocab=49152, dtypes=BF16, remat=True,
+)
+
+SMOKE = TransformerConfig(
+    n_layers=2, d_model=60, n_heads=3, n_kv_heads=1, d_head=20, d_ff=160,
+    vocab=256, dtypes=Dtypes(param=jnp.float32, compute=jnp.float32),
+    block_q=16, block_k=16,
+)
+
+ARCH = make_lm_arch(
+    "smollm-360m", CONFIG, tp_attn=False, long_ok=False, smoke_cfg=SMOKE,
+    notes="15 heads indivisible by tp=16 -> attention DP, FFN/vocab TP; long_500k skipped",
+)

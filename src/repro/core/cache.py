@@ -1,0 +1,294 @@
+"""The dynamic module (paper §4.3, Algorithm 1) as a functional, jittable JAX op.
+
+State layout (all device-resident, mirroring the paper's "green boxes"):
+
+  cached_rows   pytree; each leaf [capacity, ...]   the CUDA-Cached-Weight analogue
+                (leaf 0 is the weight; extra leaves carry per-row optimizer state)
+  slot_to_row   int32 [capacity]   freq-ranked row held by each slot (-1 = empty)
+                (the paper's ``cached_idx_map``)
+  row_to_slot   int32 [vocab]      inverse map (-1 = not cached); 4 B/row ~= 0.8 %
+                overhead of a dim-128 fp32 table, same trade the paper makes
+  last_used / use_count  int32 [capacity]  only read by non-paper policies
+  counters      hit/miss/transfer telemetry (int64 scalars)
+
+Shapes are static: each ``prepare`` call ingests a fixed-size padded id vector,
+takes a fixed-size ``unique``, and drives the bounded-buffer transmitter for a
+fixed number of rounds — the compile-time promotion of the paper's "strictly
+limit the buffer size / complete the transfer multiple times".
+
+Invariant (tested property): after ``prepare``, every id of the batch maps to
+a resident slot, and lookups through the cache are bit-identical to lookups
+into an uncached table — the cache is pure data movement, which is why the
+paper's accuracy matches the baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transmitter
+from repro.core.policies import Policy, eviction_key
+
+__all__ = ["CacheConfig", "CacheState", "init_cache", "prepare", "lookup_slots", "flush", "warmup"]
+
+_EMPTY = jnp.array(-1, jnp.int32)
+_BIG = jnp.iinfo(jnp.int32).max // 2
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    vocab: int  # total rows of the (concatenated, freq-ordered) table
+    capacity: int  # cached rows (= cache_ratio * vocab)
+    ids_per_step: int  # static size of the flattened id vector per prepare()
+    buffer_rows: int = 65536  # transmitter staging-block rows per round
+    policy: Policy = Policy.FREQ_LFU
+    writeback: bool = True  # False for inference (cache rows stay clean)
+    protect_via_inverse: bool = True  # beyond-paper DEFAULT: O(K) scatter via
+    # the inverse map instead of the paper's isin for the eviction "backlist"
+    # (bit-identical; XLA lowers the isin as a [C x K] outer compare — the
+    # entire memory roofline term of every recsys cell. False = paper-faithful
+    # ablation. See EXPERIMENTS.md §Perf fm.)
+    max_unique_per_step: int = 0  # 0 = worst case (= ids_per_step); smaller
+    # values bound the per-step unique buffer (the same philosophy as the
+    # paper's strict buffer limit).  Overflow — more distinct rows in a batch
+    # than the bound — is counted in ``state.uniq_overflows`` and must stay 0
+    # for exactness (the trainer asserts this; tests property-check it).
+
+    def __post_init__(self):
+        if self.capacity < self.unique_size:
+            raise ValueError(
+                f"cache capacity {self.capacity} must hold one batch's unique rows "
+                f"(<= {self.unique_size})"
+            )
+
+    @property
+    def unique_size(self) -> int:
+        # number of distinct rows a step may touch
+        k = min(self.ids_per_step, self.vocab)
+        if self.max_unique_per_step:
+            k = min(k, self.max_unique_per_step)
+        return k
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CacheState:
+    cached_rows: Any  # pytree, leaves [capacity, ...]
+    slot_to_row: jnp.ndarray  # int32 [capacity]
+    row_to_slot: jnp.ndarray  # int32 [vocab]
+    last_used: jnp.ndarray  # int32 [capacity]
+    use_count: jnp.ndarray  # int32 [capacity]
+    step: jnp.ndarray  # int32 []
+    hits: jnp.ndarray  # int32 [] id-level hits (telemetry; x64 is off)
+    misses: jnp.ndarray  # int32 [] unique-row misses (= rows moved host->device)
+    evictions: jnp.ndarray  # int32 [] rows written back device->host
+    uniq_overflows: jnp.ndarray  # int32 [] steps whose distinct rows > unique_size
+
+    def hit_rate(self) -> jnp.ndarray:
+        tot = self.hits + self.misses
+        return jnp.where(tot > 0, self.hits / jnp.maximum(tot, 1), 0.0)
+
+
+def init_cache(cfg: CacheConfig, row_tree_example: Any) -> CacheState:
+    """Empty cache; ``row_tree_example`` gives per-row leaf shapes/dtypes.
+
+    ``row_tree_example`` leaves have shape [..row dims..]; cached leaves get a
+    leading ``capacity`` dim.
+    """
+    def z(leaf):
+        return jnp.zeros((cfg.capacity,) + tuple(leaf.shape), leaf.dtype)
+
+    return CacheState(
+        cached_rows=jax.tree_util.tree_map(z, row_tree_example),
+        slot_to_row=jnp.full((cfg.capacity,), -1, jnp.int32),
+        row_to_slot=jnp.full((cfg.vocab,), -1, jnp.int32),
+        last_used=jnp.zeros((cfg.capacity,), jnp.int32),
+        use_count=jnp.zeros((cfg.capacity,), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+        hits=jnp.zeros((), jnp.int32),
+        misses=jnp.zeros((), jnp.int32),
+        evictions=jnp.zeros((), jnp.int32),
+        uniq_overflows=jnp.zeros((), jnp.int32),
+    )
+
+
+def prepare(
+    cfg: CacheConfig,
+    full_rows: Any,
+    state: CacheState,
+    rows: jnp.ndarray,
+) -> Tuple[Any, CacheState, jnp.ndarray]:
+    """Algorithm 1 ``PrepareCache``: make every row of ``rows`` resident.
+
+    Args:
+      full_rows: pytree of the full (freq-ordered) table, leaves [vocab, ...].
+      rows: int32 [ids_per_step] freq-ranked row per id (-1 padding). Callers
+        translate raw ids through ``idx_map`` first.
+
+    Returns (full_rows', state', slots) where ``slots`` maps each input lane to
+    its resident cache slot (-1 for padding lanes).
+    """
+    k = cfg.unique_size
+    # geometry comes from the STATE (a serve-time cfg may quote a smaller
+    # capacity than the state it operates on — guards must use real sizes)
+    capacity = state.slot_to_row.shape[0]
+    vocab = state.row_to_slot.shape[0]
+    valid = rows >= 0
+
+    # --- id-level hit telemetry (before any movement) ----------------------
+    pre_slots = state.row_to_slot.at[jnp.where(valid, rows, 0)].get(mode="fill", fill_value=-1)
+    id_hits = jnp.sum((pre_slots >= 0) & valid)
+
+    # --- unique needed rows (fixed size k, padded with -1 at the end) ------
+    # jnp.unique sorts ascending; map padding to +inf-like sentinel then back.
+    big_rows = jnp.where(valid, rows, jnp.iinfo(jnp.int32).max)
+    uniq = jnp.unique(big_rows, size=k, fill_value=jnp.iinfo(jnp.int32).max)
+    uniq_valid = uniq != jnp.iinfo(jnp.int32).max
+    uniq = jnp.where(uniq_valid, uniq, -1)
+
+    # overflow detection: did the batch contain more distinct rows than k?
+    # (jnp.unique(size=k) silently keeps the k smallest — count the truth.)
+    srt = jnp.sort(big_rows)
+    n_distinct_valid = jnp.sum(
+        (jnp.diff(srt) != 0) & (srt[1:] != jnp.iinfo(jnp.int32).max)
+    ) + (srt[0] != jnp.iinfo(jnp.int32).max).astype(jnp.int32)
+    overflow = (n_distinct_valid > k).astype(jnp.int32)
+
+    uniq_slots = state.row_to_slot.at[jnp.where(uniq_valid, uniq, 0)].get(mode="fill", fill_value=-1)
+    miss = (uniq_slots < 0) & uniq_valid
+    n_miss = jnp.sum(miss)
+
+    # --- victim selection (Algorithm 1 lines 15-26) ------------------------
+    # "backlist": rows needed now must not be evicted.
+    if cfg.protect_via_inverse:
+        # a slot needs protection iff it currently holds a needed (hit) row;
+        # we already know those slots from the inverse map: O(K) scatter.
+        hit_slots = jnp.where((uniq_slots >= 0) & uniq_valid, uniq_slots, capacity)
+        protected = (
+            jnp.zeros((capacity,), bool).at[hit_slots].set(True, mode="drop")
+        )
+    else:
+        protected = jnp.isin(state.slot_to_row, jnp.where(uniq_valid, uniq, -7)) & (
+            state.slot_to_row >= 0
+        )
+    key = eviction_key(cfg.policy, state.slot_to_row, state.last_used, state.use_count)
+    key = jnp.where(state.slot_to_row < 0, _BIG, key)  # empty slots evict first
+    key = jnp.where(protected, -_BIG, key)  # protected slots evict last
+    order = jnp.argsort(key, descending=True)
+    victim_slots = order[:k].astype(jnp.int32)
+
+    lane = jnp.arange(k)
+    active = lane < n_miss  # one victim per actual miss
+
+    # --- compact miss rows to the front -------------------------------------
+    perm = jnp.argsort(jnp.where(miss, 0, 1), stable=True)
+    miss_rows = jnp.where(active, uniq[perm], -1)
+
+    # --- write-back evicted rows (device -> host tier) ----------------------
+    victim_rows = state.slot_to_row[victim_slots]
+    evict_active = active & (victim_rows >= 0)
+    if cfg.writeback:
+        full_rows = transmitter.move_rows(
+            state.cached_rows,
+            full_rows,
+            victim_slots,
+            victim_rows,
+            evict_active,
+            buffer_rows=cfg.buffer_rows,
+        )
+    row_to_slot = state.row_to_slot.at[jnp.where(evict_active, victim_rows, vocab)].set(
+        -1, mode="drop"
+    )
+
+    # --- load missed rows (host tier -> device) -----------------------------
+    cached_rows = transmitter.move_rows(
+        full_rows,
+        state.cached_rows,
+        miss_rows,
+        victim_slots,
+        active,
+        buffer_rows=cfg.buffer_rows,
+    )
+    slot_to_row = state.slot_to_row.at[jnp.where(active, victim_slots, capacity)].set(
+        jnp.where(active, miss_rows, -1), mode="drop"
+    )
+    row_to_slot = row_to_slot.at[jnp.where(active, miss_rows, vocab)].set(
+        jnp.where(active, victim_slots, -1), mode="drop"
+    )
+
+    # --- recency / runtime-frequency bookkeeping ----------------------------
+    step = state.step + 1
+    touched_slots = row_to_slot.at[jnp.where(uniq_valid, uniq, 0)].get(mode="fill", fill_value=-1)
+    touch = jnp.where(uniq_valid, touched_slots, capacity)
+    last_used = state.last_used.at[touch].set(step, mode="drop")
+    use_count = state.use_count.at[touch].add(1, mode="drop")
+    # loaded rows start fresh
+    fresh = jnp.where(active, victim_slots, capacity)
+    use_count = use_count.at[fresh].set(1, mode="drop")
+
+    new_state = CacheState(
+        cached_rows=cached_rows,
+        slot_to_row=slot_to_row,
+        row_to_slot=row_to_slot,
+        last_used=last_used,
+        use_count=use_count,
+        step=step,
+        hits=state.hits + id_hits.astype(jnp.int32),
+        misses=state.misses + n_miss.astype(jnp.int32),
+        evictions=state.evictions + jnp.sum(evict_active).astype(jnp.int32),
+        uniq_overflows=state.uniq_overflows + overflow,
+    )
+    # NB: negative indices WRAP in jax even with mode='fill'; mask explicitly.
+    slots = jnp.where(valid, row_to_slot.at[jnp.where(valid, rows, 0)].get(mode="fill", fill_value=-1), -1)
+    return full_rows, new_state, slots
+
+
+def lookup_slots(state: CacheState, slots: jnp.ndarray, leaf: str | int = 0) -> jnp.ndarray:
+    """Gather cached rows by slot; -1 (padding) lanes return zero rows."""
+    leaves = jax.tree_util.tree_leaves(state.cached_rows)
+    w = leaves[leaf] if isinstance(leaf, int) else state.cached_rows[leaf]
+    safe = jnp.where(slots >= 0, slots, w.shape[0])  # negatives would wrap
+    return jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
+
+
+def flush(cfg: CacheConfig, full_rows: Any, state: CacheState) -> Tuple[Any, CacheState]:
+    """Write every resident row back to the full table (checkpoint barrier).
+
+    After ``flush`` the full table is authoritative; the cache stays warm
+    (rows remain resident and clean).
+    """
+    slots = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    rows = state.slot_to_row
+    active = rows >= 0
+    full_rows = transmitter.move_rows(
+        state.cached_rows, full_rows, slots, rows, active, buffer_rows=cfg.buffer_rows
+    )
+    return full_rows, state
+
+
+def warmup(
+    cfg: CacheConfig, full_rows: Any, state: CacheState
+) -> Tuple[Any, CacheState]:
+    """Paper §4.3 cache warm-up: pre-fill with the hottest (lowest-rank) rows."""
+    n = min(cfg.capacity, cfg.vocab)
+    rows = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    active = rows < n
+    rows = jnp.where(active, rows, -1)
+    slots = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    cached_rows = transmitter.move_rows(
+        full_rows, state.cached_rows, rows, slots, active, buffer_rows=cfg.buffer_rows
+    )
+    slot_to_row = jnp.where(active, rows, -1).astype(jnp.int32)
+    row_to_slot = state.row_to_slot.at[jnp.where(active, rows, cfg.vocab)].set(
+        jnp.where(active, slots, -1), mode="drop"
+    )
+    return full_rows, dataclasses.replace(
+        state,
+        cached_rows=cached_rows,
+        slot_to_row=slot_to_row,
+        row_to_slot=row_to_slot,
+    )

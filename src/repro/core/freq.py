@@ -1,0 +1,113 @@
+"""Static frequency module (paper §4.2).
+
+Collects id-frequency statistics of the target dataset *before* training,
+reorders the embedding table rows from most- to least-frequent, and builds
+``idx_map`` (raw id -> frequency-ranked row index).  With rows ordered this
+way, LFU eviction degenerates to "evict the largest row index" (paper §4.3),
+which is a single masked argsort on device.
+
+All functions here are host-side / numpy (they run once, before training);
+the resulting arrays are placed on device and consumed by ``core.cache``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "FreqStats",
+    "collect_counts",
+    "collect_counts_sampled",
+    "build_freq_stats",
+    "concat_table_offsets",
+    "coverage",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqStats:
+    """Output of the static module.
+
+    Attributes:
+      idx_map:    int32 [vocab]  raw id -> frequency-ranked row (rank 0 = hottest).
+      inv_map:    int32 [vocab]  frequency-ranked row -> raw id (the reorder perm).
+      counts:     int64 [vocab]  raw-id occurrence counts (as collected).
+      vocab:      total number of rows across all (concatenated) tables.
+    """
+
+    idx_map: np.ndarray
+    inv_map: np.ndarray
+    counts: np.ndarray
+    vocab: int
+
+    def reorder_rows(self, weight: np.ndarray) -> np.ndarray:
+        """Reorder a [vocab, dim] table so row r holds the r-th most frequent id."""
+        assert weight.shape[0] == self.vocab
+        return weight[self.inv_map]
+
+    def top_fraction_coverage(self, frac: float) -> float:
+        """Fraction of total accesses covered by the top-``frac`` hottest ids."""
+        k = max(1, int(round(frac * self.vocab)))
+        sorted_counts = self.counts[self.inv_map]  # descending
+        tot = sorted_counts.sum()
+        return float(sorted_counts[:k].sum() / max(tot, 1))
+
+
+def collect_counts(id_batches: Iterable[np.ndarray], vocab: int) -> np.ndarray:
+    """Scan the dataset once and count id occurrences (paper: 'simply scan')."""
+    counts = np.zeros((vocab,), dtype=np.int64)
+    for ids in id_batches:
+        np.add.at(counts, ids.reshape(-1).astype(np.int64), 1)
+    return counts
+
+
+def collect_counts_sampled(
+    id_batches: Iterable[np.ndarray],
+    vocab: int,
+    sample_rate: float,
+    seed: int = 0,
+) -> np.ndarray:
+    """Sampled counting for very large datasets (paper cites [Adnan et al. 2021]).
+
+    Keeps each batch with probability ``sample_rate``; unbiased up to scaling,
+    and ranking (all the cache needs) is preserved in expectation.
+    """
+    rng = np.random.default_rng(seed)
+    counts = np.zeros((vocab,), dtype=np.int64)
+    for ids in id_batches:
+        if rng.random() <= sample_rate:
+            np.add.at(counts, ids.reshape(-1).astype(np.int64), 1)
+    return counts
+
+
+def build_freq_stats(counts: np.ndarray) -> FreqStats:
+    """Build the reorder permutation and idx_map from raw counts.
+
+    ``inv_map`` sorts ids by descending count (stable, so ties keep raw order —
+    deterministic across hosts, which matters because every data rank must
+    derive the *identical* cache bookkeeping).
+    """
+    vocab = int(counts.shape[0])
+    # stable descending sort: sort ascending on negated counts.
+    inv_map = np.argsort(-counts, kind="stable").astype(np.int32)
+    idx_map = np.empty_like(inv_map)
+    idx_map[inv_map] = np.arange(vocab, dtype=np.int32)
+    return FreqStats(idx_map=idx_map, inv_map=inv_map, counts=counts.astype(np.int64), vocab=vocab)
+
+
+def concat_table_offsets(vocab_sizes: Sequence[int]) -> np.ndarray:
+    """Offsets for concatenating per-field tables into one big table (paper §5.1).
+
+    Raw (field f, local id i) maps to global id ``offsets[f] + i``.
+    """
+    return np.concatenate([[0], np.cumsum(np.asarray(vocab_sizes, dtype=np.int64))[:-1]]).astype(
+        np.int64
+    )
+
+
+def coverage(counts: np.ndarray, top_fracs: Sequence[float]) -> dict:
+    """Paper Fig. 2 statistic: access share of the top-x%% hottest ids."""
+    stats = build_freq_stats(counts)
+    return {f: stats.top_fraction_coverage(f) for f in top_fracs}

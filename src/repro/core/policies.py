@@ -1,0 +1,46 @@
+"""Eviction policies.
+
+The paper's policy is FREQ_LFU: rows are statically ordered by dataset
+frequency, so "least frequently used" == "largest row index" — eviction is a
+single masked argsort, no runtime counters (paper §4.3).
+
+For ablation (and as the TorchRec-UVM stand-in baseline) we also provide
+recency (LRU / UVM row paging) and a runtime-counter LFU.  All policies share
+one code path in ``core.cache``: they only differ in the per-slot eviction
+*key* (higher key = evicted earlier).  Empty slots always evict first and
+slots holding rows needed by the current batch never evict (Algorithm 1's
+"backlist").
+"""
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+__all__ = ["Policy", "eviction_key"]
+
+_BIG = jnp.iinfo(jnp.int32).max // 2
+
+
+class Policy(enum.Enum):
+    FREQ_LFU = "freq_lfu"  # the paper: static frequency rank (row index)
+    LRU = "lru"  # least-recently-used (runtime recency)
+    RUNTIME_LFU = "runtime_lfu"  # classical LFU with runtime counters
+    UVM_ROW = "uvm_row"  # TorchRec-UVM stand-in: LRU keys + row-granular transfer
+
+
+def eviction_key(
+    policy: Policy,
+    slot_to_row: jnp.ndarray,
+    last_used: jnp.ndarray,
+    use_count: jnp.ndarray,
+) -> jnp.ndarray:
+    """Per-slot eviction key; argsort(key, descending) gives the victim order."""
+    if policy is Policy.FREQ_LFU:
+        # rows are frequency-ranked: larger row index == less frequent.
+        return slot_to_row.astype(jnp.int32)
+    if policy in (Policy.LRU, Policy.UVM_ROW):
+        return -(last_used.astype(jnp.int32))  # oldest access first
+    if policy is Policy.RUNTIME_LFU:
+        return -(use_count.astype(jnp.int32))  # fewest uses first
+    raise ValueError(policy)

@@ -1,0 +1,95 @@
+"""The data transmitter (paper §4.3): bounded-buffer, blocked row movement.
+
+The paper packs scattered embedding rows into contiguous blocks on the source
+device, ships the block across the slow link (PCI-e there; host<->HBM DMA on a
+TPU host), and scatters on the target — with a strictly limited buffer, so a
+big transfer completes in multiple rounds.
+
+JAX/XLA adaptation: shapes must be static, so the transmitter has a fixed
+per-round budget ``buffer_rows`` and always executes ``ceil(K / buffer_rows)``
+rounds over the (padded) index arrays.  Inactive lanes use out-of-bounds
+indices with ``mode='drop'`` / ``mode='fill'`` so they are hardware no-ops.
+The pack -> move -> scatter structure is kept explicit (``pack`` is a gather
+into a contiguous [buffer_rows, ...] staging block — exactly the paper's
+buffer) so that on TPU the staging block is what crosses the host/device
+boundary.
+
+Rows are pytrees: every leaf has a leading "row" dimension; auxiliary per-row
+state (e.g. row-wise Adagrad accumulators) moves together with the weights.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["move_rows", "gather_rows", "scatter_rows", "num_rounds"]
+
+
+def num_rounds(k: int, buffer_rows: int) -> int:
+    return -(-k // buffer_rows)
+
+
+def gather_rows(tree: Any, idx: jnp.ndarray) -> Any:
+    """Pack: gather rows ``idx`` of every leaf into a contiguous block.
+
+    Out-of-bounds / negative indices produce zero rows (``mode='fill'``).
+    """
+    def g(leaf):
+        safe = jnp.where(idx >= 0, idx, leaf.shape[0])  # negatives would wrap
+        return jnp.take(leaf, safe, axis=0, mode="fill", fill_value=0)
+
+    return jax.tree_util.tree_map(g, tree)
+
+
+def scatter_rows(tree: Any, idx: jnp.ndarray, block: Any, active: jnp.ndarray) -> Any:
+    """Unpack: scatter ``block`` rows into ``tree`` at ``idx`` where ``active``.
+
+    Inactive lanes are redirected out of bounds and dropped.
+    """
+    n = jax.tree_util.tree_leaves(tree)[0].shape[0]
+    safe_idx = jnp.where(active, idx, n)  # n == OOB -> dropped
+
+    def s(leaf, blk):
+        return leaf.at[safe_idx].set(blk, mode="drop")
+
+    return jax.tree_util.tree_map(s, tree, block)
+
+
+def move_rows(
+    src_tree: Any,
+    dst_tree: Any,
+    src_idx: jnp.ndarray,
+    dst_idx: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    buffer_rows: int,
+) -> Any:
+    """Move rows ``src_idx`` of ``src_tree`` to positions ``dst_idx`` of ``dst_tree``.
+
+    ``active`` masks real lanes; all arrays have static length K.  The move is
+    performed in ``ceil(K/buffer_rows)`` rounds through a [buffer_rows, ...]
+    staging block.  Returns the updated ``dst_tree``.  Designed to be called
+    from inside a jitted step (it is pure; no own jit so the caller fuses it).
+    """
+    k = src_idx.shape[0]
+    buffer_rows = min(buffer_rows, k)
+    rounds = num_rounds(k, buffer_rows)
+    pad = rounds * buffer_rows - k
+    if pad:
+        src_idx = jnp.concatenate([src_idx, jnp.full((pad,), -1, src_idx.dtype)])
+        dst_idx = jnp.concatenate([dst_idx, jnp.full((pad,), -1, dst_idx.dtype)])
+        active = jnp.concatenate([active, jnp.zeros((pad,), bool)])
+
+    def body(r, dst):
+        s = r * buffer_rows
+        si = jax.lax.dynamic_slice_in_dim(src_idx, s, buffer_rows)
+        di = jax.lax.dynamic_slice_in_dim(dst_idx, s, buffer_rows)
+        ac = jax.lax.dynamic_slice_in_dim(active, s, buffer_rows)
+        block = gather_rows(src_tree, jnp.where(ac, si, -1))  # pack (staging buffer)
+        return scatter_rows(dst, di, block, ac)  # move + unpack
+
+    if rounds == 1:
+        return body(0, dst_tree)
+    return jax.lax.fori_loop(0, rounds, body, dst_tree)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import Prefetcher
+from repro.data import graphs, synth

@@ -1,0 +1,63 @@
+"""Host data pipeline: background prefetch + exact checkpoint-resume.
+
+Batches are pure functions of (seed, step) so resuming at step N after a
+restart replays the identical stream on any topology — a requirement for
+elastic rescaling (DESIGN.md §5).  A small thread pool prefetches ``depth``
+batches ahead so host-side generation (incl. neighbor sampling) overlaps
+device compute, complementing JAX's async dispatch.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+__all__ = ["Prefetcher"]
+
+
+class Prefetcher:
+    """Wrap ``make_batch(step) -> dict`` with background prefetch from ``start_step``."""
+
+    def __init__(self, make_batch: Callable[[int], Dict], start_step: int = 0, depth: int = 2):
+        self.make_batch = make_batch
+        self.depth = depth
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._next = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._next
+        while not self._stop.is_set():
+            try:
+                batch = self.make_batch(step)
+            except Exception as e:  # surface in consumer
+                self._q.put(e)
+                return
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item  # (step, batch)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,45 @@
+"""Jit'd wrapper for the embedding-bag kernel.
+
+Densifies (sorted) CSR-style segment ids into [num_segments, max_bag] and
+invokes the Pallas kernel; handles the mean combiner and empty bags.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+INTERPRET = True  # flip to False on real TPU
+
+
+def densify(flat_ids: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int, max_bag: int):
+    """[N] (sorted segments) -> [num_segments, max_bag] id matrix, -1 padded."""
+    n = flat_ids.shape[0]
+    starts = jnp.searchsorted(segment_ids, jnp.arange(num_segments), side="left")
+    pos = jnp.arange(n) - starts[segment_ids]
+    slot = jnp.where(pos < max_bag, segment_ids * max_bag + pos, num_segments * max_bag)
+    dense = jnp.full((num_segments * max_bag,), -1, jnp.int32)
+    dense = dense.at[slot].set(flat_ids, mode="drop")
+    return dense.reshape(num_segments, max_bag)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "combiner", "max_bag"))
+def embedding_bag(
+    table: jnp.ndarray,
+    flat_ids: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_segments: int,
+    combiner: str = "sum",
+    max_bag: int = 0,
+) -> jnp.ndarray:
+    if max_bag <= 0:
+        max_bag = int(flat_ids.shape[0])  # worst case (one hot bag)
+    dense = densify(flat_ids, segment_ids, num_segments, max_bag)
+    out = embedding_bag_pallas(table, dense, interpret=INTERPRET)
+    if combiner == "mean":
+        valid = jnp.sum((dense >= 0).astype(jnp.float32), axis=1)
+        out = out / jnp.maximum(valid, 1)[:, None].astype(out.dtype)
+    return out

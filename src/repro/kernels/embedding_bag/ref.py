@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,  # [V, D]
+    flat_ids: jnp.ndarray,  # [N] int32, -1 = padding
+    segment_ids: jnp.ndarray,  # [N] int32, SORTED non-decreasing
+    num_segments: int,
+    combiner: str = "sum",
+) -> jnp.ndarray:
+    safe = jnp.where(flat_ids >= 0, flat_ids, table.shape[0])  # negatives wrap in jax
+    rows = jnp.take(table, safe, axis=0, mode="fill", fill_value=0)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(
+            (flat_ids >= 0).astype(table.dtype), segment_ids, num_segments=num_segments
+        )
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel (dense masked softmax)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, H, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Sk, D]
+    v: jnp.ndarray,  # [B, Hkv, Sk, D]
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    scores = scores / np.sqrt(d)
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= (qi - ki) < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

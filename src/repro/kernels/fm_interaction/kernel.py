@@ -1,0 +1,40 @@
+"""Pallas TPU FM interaction: fused sum-square-trick pooling.
+
+One grid step per batch block: loads a [block_b, F, D] tile into VMEM,
+computes 0.5 * ((sum_f v)^2 - sum_f v^2) . sum_d entirely in registers, and
+writes a [block_b] partial.  F*D per sample is tiny (recsys: 39 x 10), so the
+block_b dimension is what keeps the MXU/VPU busy; the fusion avoids
+materializing the [B, D] sum and [B, F, D] square in HBM, which is what the
+XLA path does (3 HBM round-trips -> 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(v_ref, out_ref):
+    v = v_ref[...].astype(jnp.float32)  # [bb, F, D]
+    s = v.sum(axis=1)  # [bb, D]
+    sq = (v * v).sum(axis=1)
+    out_ref[...] = (0.5 * (s * s - sq).sum(axis=-1)).astype(out_ref.dtype)
+
+
+def fm_interaction_pallas(
+    v: jnp.ndarray,  # [B, F, D]
+    block_b: int = 1024,
+    interpret: bool = True,  # CPU container: validate in interpret mode
+) -> jnp.ndarray:
+    b, f, d = v.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0, "batch must divide block_b"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, f, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), v.dtype),
+        interpret=interpret,
+    )(v)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the FM-interaction kernel (pads batch to block size)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fm_interaction.kernel import fm_interaction_pallas
+
+INTERPRET = True  # flip to False on real TPU
+
+
+@jax.jit
+def fm_interaction(v: jnp.ndarray) -> jnp.ndarray:
+    b = v.shape[0]
+    block = min(1024, b)
+    pad = (-b) % block
+    if pad:
+        v = jnp.concatenate([v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
+    out = fm_interaction_pallas(v, block_b=block, interpret=INTERPRET)
+    return out[:b]

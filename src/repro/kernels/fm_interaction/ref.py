@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the FM pairwise-interaction kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(v: jnp.ndarray) -> jnp.ndarray:
+    """v [B, F, D] -> [B]: sum_{i<j} <v_i, v_j> via the sum-square trick."""
+    s = v.sum(axis=-2)
+    sq = (v * v).sum(axis=-2)
+    return 0.5 * (s * s - sq).sum(axis=-1)
+
+
+def fm_interaction_naive(v: jnp.ndarray) -> jnp.ndarray:
+    """O(F^2) literal definition (cross-check for the trick itself)."""
+    g = jnp.einsum("bfd,bgd->bfg", v, v)
+    f = v.shape[-2]
+    iu, ju = jnp.triu_indices(f, k=1)
+    return g[:, iu, ju].sum(-1)

@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analysis for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape long_500k
+
+Results stream into results/dryrun.json (incremental; completed cells are
+skipped on re-run unless --force).
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY
+import repro.dist.partitioning as dist
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+def shardings_for(mesh, spec_tree):
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def run_cell(arch_name: str, shape: str, multi_pod: bool, extra_tag: str = "",
+             cell_override=None):
+    """Lower + compile one cell; returns the roofline record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    arch = REGISTRY[arch_name]
+    cell = cell_override or arch.build_cell(shape, mesh.axis_names)
+    if cell is None:
+        return {"skipped": True, "reason": "shape inapplicable (see DESIGN.md)"}
+
+    t0 = time.time()
+    with dist.axis_rules(mesh, cell.rules):
+        in_sh = shardings_for(mesh, cell.in_specs)
+        fn = jax.jit(cell.step_fn, in_shardings=in_sh, donate_argnums=cell.donate)
+        lowered = fn.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    rec = roofline.analyze_compiled(compiled)
+    rec.update(
+        arch=arch_name, shape=shape, kind=cell.kind,
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_devices=int(mesh.size),
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        note=cell.note + extra_tag,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS / "dryrun.json"))
+    args = ap.parse_args()
+
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    archs = list(REGISTRY) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for name in archs:
+        arch = REGISTRY[name]
+        shapes = arch.shapes if args.shape == "all" else [
+            s for s in args.shape.split(",") if s in arch.shapes
+        ]
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{name}/{shape}/{'multi' if mp else 'single'}"
+                if key in results and not args.force and "error" not in results[key]:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[run ] {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = run_cell(name, shape, mp)
+                    results[key] = rec
+                    if rec.get("skipped"):
+                        print(f"[skip] {key}: {rec['reason']}")
+                    else:
+                        print(
+                            f"[ ok ] {key} compile={rec['compile_s']}s "
+                            f"flops/dev={rec['flops_per_device']:.3e} "
+                            f"dominant={rec['dominant']} "
+                            f"frac={rec['roofline_fraction']:.3f}"
+                        )
+                except Exception as e:
+                    traceback.print_exc()
+                    results[key] = {"error": f"{type(e).__name__}: {e}", "elapsed_s": time.time() - t0}
+                    failures.append(key)
+                out_path.write_text(json.dumps(results, indent=1, default=str))
+    print(f"\ndone. {len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

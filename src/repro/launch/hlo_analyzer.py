@@ -1,0 +1,445 @@
+"""Roofline accounting from post-optimization HLO text (per-device program).
+
+Why not ``compiled.cost_analysis()``:
+  * XLA counts every ``while`` body ONCE (verified in tests) — scanned models
+    (layer-group scans, chunked attention, the transmitter's bounded-buffer
+    loop) are undercounted by their trip counts;
+  * "bytes accessed" charges gathers/scatters the FULL operand, overcounting
+    cache/embedding programs (the paper's core!) by orders of magnitude.
+
+This analyzer walks the computation graph:
+  * ``while`` bodies x ``known_trip_count`` (XLA annotates it; default 1);
+  * per-instruction byte model at fusion granularity (one HBM round trip per
+    buffer — the TPU cost model): fusions charge result + params, EXCEPT
+    params consumed only by ``gather`` (charged at touched-rows size) and
+    scatter-rooted fusions (result charged at 3x updates, read-modify-write);
+  * flops: dot = 2 * out * K (contracting dims); CPU-backend oneDNN matmul
+    custom-calls estimated via K = sqrt(lhs*rhs/out / batch); elementwise =
+    output elements; sort = n log n;
+  * collectives: ring-model wire bytes by kind and group size, x trip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r"known_trip_count[^\d]*(\d+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.*?)\s*\{\s*$")
+# result type: either a (tuple type ...) — may contain /*index=N*/ comments
+# but never nested parens — or a single scalar/array type token.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},]+))\s+([\w\-]+)\((.*)$"
+)
+_MATMUL_TARGETS = ("matmul", "dot", "gemm", "conv")
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    return [
+        (dt, [int(d) for d in dims.split(",") if d])
+        for dt, dims in _SHAPE_RE.findall(text)
+        if dt in _DTYPE_BYTES
+    ]
+
+
+def _bytes_of_type(text: str) -> int:
+    return sum(
+        _DTYPE_BYTES[dt] * math.prod(dims) for dt, dims in _parse_shapes(text)
+    )
+
+
+def _elems_of_type(text: str) -> int:
+    return sum(math.prod(dims) for _, dims in _parse_shapes(text))
+
+
+def _split_top(s: str) -> List[str]:
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: List[str]  # operand instruction/param names (no %)
+    rest: str  # text after the operand list (attributes)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]  # param name -> type
+    param_order: List[str]
+    instrs: List[Instr]
+    types: Dict[str, str]  # every defined name -> result type
+    root: Optional[str] = None
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        h = _HEADER_RE.match(line)
+        if h:
+            is_entry, name, params_text, _ = h.groups()
+            params: Dict[str, str] = {}
+            order: List[str] = []
+            for p in _split_top(params_text):
+                m = re.match(r"%?([\w.\-]+)\s*:\s*(.*)", p)
+                if m:
+                    params[m.group(1)] = m.group(2)
+                    order.append(m.group(1))
+            cur = Computation(name, params, order, [], dict(params))
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, tail = m.groups()
+        # split operand list from attributes
+        depth, end = 1, len(tail)
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        opnds_text, rest = tail[:end], tail[end + 1:]
+        operands = []
+        for part in _split_top(opnds_text):
+            mm = re.search(r"%([\w.\-]+)\s*$", part)
+            if mm:
+                operands.append(mm.group(1))
+        ins = Instr(name, rtype, op, operands, rest)
+        cur.instrs.append(ins)
+        cur.types[name] = rtype
+        if "ROOT" in line:
+            cur.root = name
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.wire_bytes += o.wire_bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.wire_bytes * f,
+                    {k: v * f for k, v in self.coll.items()})
+
+
+def _group_size(text: str) -> int:
+    m = _GROUPS_IOTA_RE.search(text)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(text)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+def _wire(kind: str, out_bytes: float, g: int) -> float:
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / max(g, 1)
+    if kind == "all-reduce":
+        return 2 * out_bytes * (g - 1) / max(g, 1)
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / max(g, 1)
+    return out_bytes  # collective-permute
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out = _elems_of_type(ins.result_type)
+    m = _CONTRACT.search(ins.rest)
+    lhs_type = comp.types.get(ins.operands[0], "") if ins.operands else ""
+    lhs = _parse_shapes(lhs_type)
+    if m and lhs:
+        k = 1
+        for d in (int(x) for x in m.group(1).split(",") if x):
+            dims = lhs[0][1]
+            if d < len(dims):
+                k *= dims[d]
+        return 2.0 * out * k
+    return 2.0 * out
+
+
+def _matmul_custom_flops(ins: Instr, comp: Computation) -> float:
+    out = max(_elems_of_type(ins.result_type), 1)
+    shp = []
+    for o in ins.operands[:2]:
+        s = _parse_shapes(comp.types.get(o, ""))
+        shp.append(math.prod(s[0][1]) if s else 1)
+    if len(shp) < 2:
+        return 2.0 * out
+    lhs_e, rhs_e = max(shp[0], 1), max(shp[1], 1)
+    # batch detection: shared leading dims across all three
+    out_dims = _parse_shapes(ins.result_type)
+    od = out_dims[0][1] if out_dims else []
+    lhs_dims = _parse_shapes(comp.types.get(ins.operands[0], ""))
+    ld = lhs_dims[0][1] if lhs_dims else []
+    b = 1
+    for i in range(min(len(od), len(ld)) - 2):
+        if od[i] == ld[i]:
+            b *= od[i]
+        else:
+            break
+    k2 = lhs_e * rhs_e / max(out, 1) / max(b, 1)
+    return 2.0 * out * math.sqrt(max(k2, 1.0))
+
+
+class Analyzer:
+    def __init__(self, comps: Dict[str, Computation]):
+        self.comps = comps
+        self.memo: Dict[str, Cost] = {}
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self.memo:
+            return self.memo[name]
+        self.memo[name] = Cost()  # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return Cost()
+        total = Cost()
+        for ins in comp.instrs:
+            total += self.instr_cost(ins, comp)
+        self.memo[name] = total
+        return total
+
+    # -- fusion internals ---------------------------------------------------
+    def _fusion_param_usage(self, fname: str):
+        """param index -> ('gather', touched_bytes) | ('scatter',) | ('dense',)."""
+        comp = self.comps.get(fname)
+        if comp is None:
+            return {}, False
+        usage: Dict[str, List[Tuple[str, Instr]]] = {p: [] for p in comp.params}
+        for ins in comp.instrs:
+            for i, o in enumerate(ins.operands):
+                if o in usage:
+                    usage[o].append((ins.op, ins, i) if False else (ins.op, ins))
+        # does a scatter/dynamic-update-slice feed the root?
+        root_scatterish = False
+        if comp.root:
+            seen = {comp.root}
+            frontier = [comp.root]
+            while frontier:
+                n = frontier.pop()
+                ins = next((i for i in comp.instrs if i.name == n), None)
+                if ins is None:
+                    continue
+                if ins.op in ("scatter", "dynamic-update-slice", "select-and-scatter"):
+                    root_scatterish = True
+                    break
+                if ins.op in ("bitcast", "tuple", "copy", "transpose", "reshape", "get-tuple-element"):
+                    for o in ins.operands:
+                        if o not in seen:
+                            seen.add(o)
+                            frontier.append(o)
+        return usage, root_scatterish
+
+    def _fusion_cost(self, ins: Instr, comp: Computation) -> Cost:
+        c = Cost()
+        called = _CALLS_RE.search(ins.rest)
+        fname = called.group(1) if called else None
+        fcomp = self.comps.get(fname) if fname else None
+        out_bytes = _bytes_of_type(ins.result_type)
+
+        if fcomp is None:
+            c.bytes += out_bytes + self._operand_bytes(ins, comp)
+            c.flops += _elems_of_type(ins.result_type)
+            return c
+
+        usage, root_scatterish = self._fusion_param_usage(fname)
+
+        # inner flops (+ nested control flow, e.g. while inside a call)
+        scatter_updates = 0
+        for fin in fcomp.instrs:
+            if fin.op == "dot":
+                c.flops += _dot_flops(fin, fcomp)
+            elif fin.op == "custom-call" and any(t in fin.rest for t in _MATMUL_TARGETS):
+                c.flops += _matmul_custom_flops(fin, fcomp)
+            elif fin.op == "while":
+                c += self._while_cost(fin)
+            elif fin.op in ("scatter", "dynamic-update-slice", "select-and-scatter"):
+                upd = fin.operands[2] if fin.op == "scatter" and len(fin.operands) > 2 else (
+                    fin.operands[1] if len(fin.operands) > 1 else None
+                )
+                if upd:
+                    scatter_updates += _bytes_of_type(fcomp.types.get(upd, ""))
+            else:
+                c.flops += _elems_of_type(fin.result_type)
+
+        # result write
+        if root_scatterish:
+            c.bytes += 3 * max(scatter_updates, 1)  # RMW of touched rows
+        else:
+            c.bytes += out_bytes
+
+        # param reads
+        for idx, pname in enumerate(fcomp.param_order):
+            ptype = fcomp.params[pname]
+            uses = usage.get(pname, [])
+            if uses and all(op == "gather" and u.operands and u.operands[0] == pname
+                            for op, u in uses):
+                touched = sum(_bytes_of_type(u.result_type) for _, u in uses)
+                c.bytes += min(touched, _bytes_of_type(ptype))
+            elif uses and all(
+                op in ("scatter", "dynamic-update-slice") and u.operands
+                and u.operands[0] == pname for op, u in uses
+            ):
+                pass  # covered by the RMW charge
+            else:
+                c.bytes += _bytes_of_type(ptype)
+        return c
+
+    def _operand_bytes(self, ins: Instr, comp: Computation) -> int:
+        return sum(_bytes_of_type(comp.types.get(o, "")) for o in ins.operands)
+
+    def _while_cost(self, ins: Instr) -> Cost:
+        trips = 1
+        tm = _TRIP_RE.search(ins.rest)
+        if tm:
+            trips = int(tm.group(1))
+        c = Cost()
+        b = _BODY_RE.search(ins.rest)
+        if b:
+            c += self.computation_cost(b.group(1)).scaled(trips)
+        cond = _COND_RE.search(ins.rest)
+        if cond:
+            c += self.computation_cost(cond.group(1)).scaled(trips)
+        return c
+
+    def instr_cost(self, ins: Instr, comp: Computation) -> Cost:
+        op = ins.op
+        c = Cost()
+        if op in ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+                  "after-all", "partition-id", "replica-id", "copy-start", "copy-done"):
+            return c
+        if op == "while":
+            return self._while_cost(ins)
+        if op == "call":
+            m = _TOAPPLY_RE.search(ins.rest) or _CALLS_RE.search(ins.rest)
+            if m:
+                c += self.computation_cost(m.group(1))
+            return c
+        if op == "conditional":
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", ins.rest)
+            if branches:
+                costs = [self.computation_cost(b.strip().lstrip("%"))
+                         for b in branches[0].split(",")]
+                if costs:
+                    c += max(costs, key=lambda x: x.flops + x.bytes)
+            return c
+        if op == "fusion":
+            return self._fusion_cost(ins, comp)
+
+        out_bytes = _bytes_of_type(ins.result_type)
+        out_elems = _elems_of_type(ins.result_type)
+        kind = op.replace("-start", "")
+        if kind in _COLL_KINDS:
+            g = _group_size(ins.rest)
+            w = _wire(kind, out_bytes, g)
+            c.wire_bytes += w
+            c.coll[kind] = c.coll.get(kind, 0.0) + w
+            c.bytes += 2 * out_bytes
+            return c
+        if op.endswith("-done") or op.endswith("-update"):
+            return c
+        if op == "dot":
+            c.flops += _dot_flops(ins, comp)
+            c.bytes += out_bytes + self._operand_bytes(ins, comp)
+            return c
+        if op == "custom-call":
+            if any(t in ins.rest for t in _MATMUL_TARGETS):
+                c.flops += _matmul_custom_flops(ins, comp)
+            c.bytes += out_bytes + self._operand_bytes(ins, comp)
+            return c
+        if op == "gather":
+            idx = _bytes_of_type(comp.types.get(ins.operands[1], "")) if len(ins.operands) > 1 else 0
+            c.bytes += 2 * out_bytes + idx
+            return c
+        if op in ("scatter", "select-and-scatter"):
+            upd = _bytes_of_type(comp.types.get(ins.operands[2], "")) if len(ins.operands) > 2 else out_bytes
+            idx = _bytes_of_type(comp.types.get(ins.operands[1], "")) if len(ins.operands) > 1 else 0
+            c.bytes += 3 * upd + idx
+            c.flops += _elems_of_type(comp.types.get(ins.operands[2], "")) if len(ins.operands) > 2 else 0
+            return c
+        if op == "dynamic-slice":
+            c.bytes += 2 * out_bytes
+            return c
+        if op == "dynamic-update-slice":
+            upd = _bytes_of_type(comp.types.get(ins.operands[1], "")) if len(ins.operands) > 1 else out_bytes
+            c.bytes += 3 * upd
+            return c
+        if op == "sort":
+            n = max(out_elems, 2)
+            c.flops += n * math.log2(n)
+            c.bytes += 2 * (out_bytes + self._operand_bytes(ins, comp))
+            return c
+        if op in ("reduce", "reduce-window", "map", "select-and-scatter"):
+            c.flops += self._operand_bytes(ins, comp) // 4 + out_elems
+            c.bytes += out_bytes + self._operand_bytes(ins, comp)
+            return c
+        c.flops += out_elems
+        c.bytes += out_bytes + self._operand_bytes(ins, comp)
+        return c
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        return Cost()
+    # only the entry's reachable graph is charged; fusion computations are
+    # accounted at their call sites.
+    return Analyzer(comps).computation_cost(entry)

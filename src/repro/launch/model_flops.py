@@ -1,0 +1,130 @@
+"""Analytic MODEL_FLOPS per (arch x shape) — the *useful* flops a perfect
+implementation would execute, used for the §Roofline ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat recompute, dispatch waste, padding).
+
+Conventions: train = 3x forward (bwd = 2x fwd; remat overhead is exactly what
+the ratio should expose, so it is NOT included here); prefill/serve = 1x
+forward; decode = one-token forward incl. attention reads over the KV cache.
+Causal attention scores count the triangle (x0.5).  All values are GLOBAL
+flops; divide by chips for per-device.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import REGISTRY
+from repro.configs.lm_common import SHAPE_DEFS as LM_SHAPES
+
+
+def _lm_fwd_flops(cfg, tokens: int, seq: int, decode: bool = False) -> float:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    L = cfg.n_layers
+    proj = 2 * d * (hq * hd + 2 * hkv * hd) + 2 * hq * hd * d  # qkv + o
+    if cfg.ffn == "moe":
+        ffn = 2 * 3 * d * cfg.d_ff * cfg.top_k + 2 * d * cfg.n_experts
+    else:
+        ffn = 2 * 3 * d * cfg.d_ff
+    # attention context per token
+    n_local = sum(1 for k in (cfg.pattern * L)[:L] if k == "local")
+    n_global = L - n_local
+    if decode:
+        ctx_g, ctx_l = seq, min(cfg.window, seq)
+        attn_per_layer_g = 4 * ctx_g * hq * hd
+        attn_per_layer_l = 4 * ctx_l * hq * hd
+    else:
+        attn_per_layer_g = 4 * seq * hq * hd * 0.5
+        attn_per_layer_l = 4 * min(cfg.window, seq) * hq * hd * 0.75
+    attn = n_global * attn_per_layer_g + n_local * attn_per_layer_l
+    vocab = 2 * d * cfg.vocab
+    return tokens * (L * (proj + ffn) + attn + vocab)
+
+
+def _gnn_fwd_flops(n_nodes: int, n_edges: int, d: int, layers: int, d_feat: int) -> float:
+    dense = 5 * 2 * n_nodes * d * d  # A,B,C,U,V
+    edges = 12 * n_edges * d  # gate, messages, normalization
+    return layers * (dense + edges) + 2 * n_nodes * d_feat * d
+
+
+def _gru_flops(tokens: int, seq: int, d_in: int, d_h: int) -> float:
+    return tokens * seq * 2 * 3 * (d_in * d_h + d_h * d_h)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """GLOBAL useful flops for the cell (0.0 = not modelled)."""
+    a = REGISTRY[arch]
+    if a.family == "lm":
+        import importlib
+
+        mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+        cfg = mod.CONFIG
+        kind, batch, seq = LM_SHAPES[shape]
+        if kind == "train":
+            return 3 * _lm_fwd_flops(cfg, batch * seq, seq)
+        if kind == "prefill":
+            return _lm_fwd_flops(cfg, batch * seq, seq)
+        return _lm_fwd_flops(cfg, batch, seq, decode=True)
+
+    if arch == "gatedgcn":
+        from repro.configs.gatedgcn import SHAPE_CFG
+
+        kind, n, e, d_feat, n_cls, task, _ = SHAPE_CFG[shape]
+        return 3 * _gnn_fwd_flops(n, e, 70, 16, d_feat)
+
+    if arch.startswith("dlrm"):
+        import importlib
+
+        mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+        c = mod.CONFIG
+        f1 = len(c.vocab_sizes) + 1
+        bot = 2 * sum(a * b for a, b in zip((c.n_dense,) + c.bottom_mlp[:-1], c.bottom_mlp))
+        inter = 2 * f1 * f1 * c.embed_dim
+        top_in = c.embed_dim + f1 * (f1 - 1) // 2
+        top = 2 * sum(a * b for a, b in zip((top_in,) + c.top_mlp, c.top_mlp + (1,)))
+        return 3 * c.batch_size * (bot + inter + top)
+
+    # recsys
+    from repro.configs import din as din_mod, dien as dien_mod, fm as fm_mod, mind as mind_mod
+    from repro.configs.shapes import N_CANDIDATES, RECSYS_DEFS
+
+    kind, batch = RECSYS_DEFS[shape]
+    n = N_CANDIDATES if kind == "retrieval" else batch
+    mult = 3 if kind == "train" else 1
+
+    if arch == "fm":
+        c = fm_mod.CONFIG
+        f, d = len(c.vocab_sizes), c.embed_dim
+        return mult * n * (4 * f * d)
+    if arch in ("din", "dien"):
+        c = din_mod.CONFIG if arch == "din" else dien_mod.CONFIG
+        d, t = c.embed_dim, c.seq_len
+        attn_in = 8 * d
+        attn = t * 2 * (attn_in * 80 + 80 * 40 + 40)
+        mlp = 2 * (5 * d * 200 + 200 * 80 + 80)
+        if arch == "dien":
+            gru = _gru_flops(1, t, 2 * d, c.gru_dim) + _gru_flops(1, t, c.gru_dim, c.gru_dim)
+            per = gru + attn + mlp
+            if kind == "retrieval":
+                per = _gru_flops(1, t, 2 * d, c.gru_dim) / n + t * 2 * c.gru_dim * 2  # shared GRU
+        else:
+            per = attn + mlp
+        return mult * n * per
+    if arch == "mind":
+        c = mind_mod.CONFIG
+        d, t, k = c.embed_dim, c.seq_len, c.n_interests
+        caps = 2 * t * d * d + c.capsule_iters * (2 * k * t * d * 2)
+        if kind == "retrieval":
+            return caps + n * 2 * k * d
+        return mult * n * (caps + 2 * k * d)
+    return 0.0
+
+
+def all_model_flops() -> Dict[str, float]:
+    out = {}
+    for name, arch in REGISTRY.items():
+        for shape in arch.shapes:
+            try:
+                out[f"{name}/{shape}"] = model_flops(name, shape)
+            except Exception:
+                out[f"{name}/{shape}"] = 0.0
+    return out

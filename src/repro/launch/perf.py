@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimbing driver: named variants of the three chosen cells,
+each re-lowered + re-analyzed on the single-pod mesh, streamed to
+results/perf.json.
+
+  PYTHONPATH=src python -m repro.launch.perf --exp olmoe --variant it1
+  PYTHONPATH=src python -m repro.launch.perf --exp all
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+# ---------------------------------------------------------------------------
+# variant builders: () -> Cell
+# ---------------------------------------------------------------------------
+
+
+def _olmoe_cell(rule_overrides=None, cfg_overrides=None, rules_kw=None):
+    from repro.configs import olmoe_1b_7b as O
+    from repro.configs.base import lm_cell
+    from repro.configs.lm_common import lm_rules
+    from repro.models.lm import LMModel
+
+    cfg = dataclasses.replace(O.CONFIG, **(cfg_overrides or {}))
+    rules = lm_rules(("data", "model"), "train", moe="ep", **(rules_kw or {}))
+    rules.update(rule_overrides or {})
+    return lm_cell("olmoe-1b-7b", "train_4k", LMModel(cfg), cfg, "train", 256, 4096, rules)
+
+
+def _grok_train_cell(rule_overrides=None, cfg_overrides=None):
+    from repro.configs import grok_1_314b as G
+    from repro.configs.base import lm_cell
+    from repro.configs.lm_common import lm_rules
+    from repro.models.lm import LMModel
+
+    cfg = dataclasses.replace(G.CONFIG, **(cfg_overrides or {}))
+    rules = lm_rules(("data", "model"), "train", moe="tp", tp_kv_param=False)
+    rules.update(rule_overrides or {})
+    return lm_cell("grok-1-314b", "train_4k", LMModel(cfg), cfg, "train", 256, 4096, rules)
+
+
+def _grok_decode_cell(rule_overrides=None, cfg_overrides=None):
+    from repro.configs import grok_1_314b as G
+    from repro.configs.base import lm_cell
+    from repro.configs.lm_common import lm_rules
+    from repro.models.lm import LMModel
+
+    cfg = dataclasses.replace(G.CONFIG, **(cfg_overrides or {}))
+    rules = lm_rules(("data", "model"), "decode", moe="tp", tp_kv_param=False)
+    rules.update(rule_overrides or {})
+    return lm_cell("grok-1-314b", "decode_32k", LMModel(cfg), cfg, "decode", 128, 32768, rules)
+
+
+def _fm_cell(cfg_overrides=None, emb_mode="row"):
+    import dataclasses as dc
+
+    from repro.configs import fm as F
+    from repro.configs import shapes as S
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.base import recsys_cell
+    from repro.models.recsys_models import FMModel
+
+    cfg = dc.replace(F.CONFIG, **(cfg_overrides or {}))
+    model = FMModel(cfg)
+    specs = model.input_specs(cfg.batch_size)
+    in_specs = {"sparse": P(("data",), None), "label": P(("data",))}
+    emb_cfg = model.emb_cfg(cfg.batch_size, writeback=True)
+    return recsys_cell("fm", "train_batch", model, "train", specs, in_specs,
+                       emb_cfg, emb_mode, {"batch": ("data",), "seq": None})
+
+
+EXPERIMENTS = {
+    # most collective-bound baseline cell
+    "olmoe": {
+        "it1_local_dispatch": lambda: _olmoe_cell(
+            rule_overrides={"exp_dp": ("data",)},
+            cfg_overrides={"moe_dp_groups": 16}),
+        "it2_local_dispatch_cf1": lambda: _olmoe_cell(
+            rule_overrides={"exp_dp": ("data",)},
+            cfg_overrides={"moe_dp_groups": 16, "capacity_factor": 1.0}),
+        "it3_local_no_fsdp": lambda: _olmoe_cell(
+            rule_overrides={"exp_dp": ("data",)},
+            cfg_overrides={"moe_dp_groups": 16}, rules_kw={"fsdp": False}),
+        "it4_shard_map": lambda: _olmoe_cell(
+            cfg_overrides={"moe_impl": "shard_map"}),
+        "it5_shard_map_no_fsdp": lambda: _olmoe_cell(
+            cfg_overrides={"moe_impl": "shard_map"}, rules_kw={"fsdp": False}),
+    },
+    # bonus: the same lever on the heaviest collective cell (grok train)
+    "grok_train": {
+        "it1_local_dispatch": lambda: _grok_train_cell(
+            rule_overrides={"exp_dp": ("data",)},
+            cfg_overrides={"moe_dp_groups": 16}),
+        "it2_shard_map": lambda: _grok_train_cell(
+            cfg_overrides={"moe_impl": "shard_map"}),
+    },
+    # worst-roofline-fraction family (memory-bound decode)
+    "grok": {
+        "it1_int8_kv": lambda: _grok_decode_cell(cfg_overrides={"kv_cache_int8": True}),
+        "it2_seq_shard_cache": lambda: _grok_decode_cell(
+            rule_overrides={"kv_seq": "model", "kv_heads_eff": None},
+            cfg_overrides={"kv_repeat": 1}),
+        "it3_int8_plus_seqshard": lambda: _grok_decode_cell(
+            rule_overrides={"kv_seq": "model", "kv_heads_eff": None},
+            cfg_overrides={"kv_repeat": 1, "kv_cache_int8": True}),
+    },
+    # most paper-representative cell (cached-embedding train step)
+    "fm": {
+        "it1_bf16_table": lambda: _fm_cell(
+            cfg_overrides={"emb_dtype": __import__("jax.numpy", fromlist=["bfloat16"]).bfloat16}),
+        "it2_inverse_protect": lambda: _fm_cell(
+            cfg_overrides={"protect_via_inverse": True}),
+        "it3_tight_unique": lambda: _fm_cell(
+            cfg_overrides={"max_unique_per_step": 1 << 20}),
+        "it4_combined": lambda: _fm_cell(
+            cfg_overrides={
+                "emb_dtype": __import__("jax.numpy", fromlist=["bfloat16"]).bfloat16,
+                "protect_via_inverse": True,
+                "max_unique_per_step": 1 << 20,
+            }),
+    },
+}
+
+
+def run_variant(exp: str, name: str, builder):
+    import repro.dist.partitioning as dist
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.launch import roofline
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    cell = builder()
+    t0 = time.time()
+    with dist.axis_rules(mesh, cell.rules):
+        in_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), cell.in_specs,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        compiled = jax.jit(cell.step_fn, in_shardings=in_sh,
+                           donate_argnums=cell.donate).lower(*cell.args).compile()
+    rec = roofline.analyze_compiled(compiled)
+    rec.update(experiment=exp, variant=name, compile_s=round(time.time() - t0, 1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="all")
+    ap.add_argument("--variant", default="all")
+    ap.add_argument("--out", default=str(RESULTS / "perf.json"))
+    args = ap.parse_args()
+    out_path = pathlib.Path(args.out)
+    results = json.loads(out_path.read_text()) if out_path.exists() else {}
+    for exp, variants in EXPERIMENTS.items():
+        if args.exp != "all" and args.exp != exp:
+            continue
+        for name, builder in variants.items():
+            if args.variant != "all" and args.variant not in name:
+                continue
+            key = f"{exp}/{name}"
+            print(f"[run] {key}", flush=True)
+            try:
+                rec = run_variant(exp, name, builder)
+                results[key] = rec
+                print(f"[ ok] {key}: compute={rec['compute_s']:.3e} "
+                      f"memory={rec['memory_s']:.3e} coll={rec['collective_s']:.3e} "
+                      f"dominant={rec['dominant']} frac={rec['roofline_fraction']:.3f}")
+            except Exception as e:
+                import traceback
+                traceback.print_exc()
+                results[key] = {"error": str(e)}
+            out_path.write_text(json.dumps(results, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

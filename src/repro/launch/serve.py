@@ -1,0 +1,71 @@
+"""Serving launcher: batched scoring with the cache in read-only mode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mind --requests 2000
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.data import synth
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mind", choices=["mind", "din", "dlrm-criteo"])
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--batch", type=int, default=256)
+    args = ap.parse_args()
+
+    if args.arch == "mind":
+        from repro.models.recsys_models import MINDConfig, MINDModel
+
+        cfg = MINDConfig(n_items=200_000, n_users=20_000, embed_dim=32, seq_len=50,
+                         batch_size=args.batch, cache_ratio=0.05)
+        model = MINDModel(cfg)
+        pad = {"hist_items": np.zeros((cfg.seq_len,), np.int32),
+               "hist_len": np.zeros((), np.int32), "user": np.zeros((), np.int32),
+               "target_item": np.zeros((), np.int32), "label": np.zeros((), np.float32)}
+        mk = lambda s: synth.recsys_batch(cfg.n_items, cfg.n_users, cfg.seq_len,
+                                          args.batch, 1, s)
+    elif args.arch == "din":
+        from repro.models.recsys_models import DINConfig, DINModel
+
+        cfg = DINConfig(n_items=200_000, n_cates=20_000, n_users=20_000, embed_dim=18,
+                        seq_len=50, batch_size=args.batch, cache_ratio=0.05)
+        model = DINModel(cfg)
+        pad = {k: np.zeros(s, np.int32) for k, s in (
+            ("hist_items", (cfg.seq_len,)), ("hist_cates", (cfg.seq_len,)),
+            ("hist_len", ()), ("target_item", ()), ("target_cate", ()), ("user", ()))}
+        pad["label"] = np.zeros((), np.float32)
+        mk = lambda s: synth.recsys_batch(cfg.n_items, cfg.n_users, cfg.seq_len,
+                                          args.batch, 1, s, n_cates=cfg.n_cates)
+    else:
+        from repro.models.dlrm import DLRM, DLRMConfig
+
+        cfg = DLRMConfig(vocab_sizes=(100_000, 50_000), embed_dim=32, batch_size=args.batch,
+                         cache_ratio=0.05, bottom_mlp=(64, 32), top_mlp=(64,))
+        model = DLRM(cfg)
+        pad = {"dense": np.zeros((13,), np.float32), "sparse": np.zeros((2,), np.int32),
+               "label": np.zeros((), np.float32)}
+        spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+        mk = lambda s: synth.sparse_batch(spec, args.batch, 1, s)
+
+    state = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model.serve_step, state, batch_size=args.batch, pad_example=pad)
+    n = 0
+    step = 0
+    while n < args.requests:
+        b = mk(step)
+        engine.score(b)
+        n += args.batch
+        step += 1
+    print("stats:", engine.stats.summary())
+    print(f"cache hit rate: {float(engine.state['emb'].cache.hit_rate()):.1%}")
+
+
+if __name__ == "__main__":
+    main()

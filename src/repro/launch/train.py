@@ -1,0 +1,114 @@
+"""Training launcher: ``--arch <id>`` selects a registry architecture and runs
+the fault-tolerant trainer on synthetic data (CPU-scale shapes by default;
+the production mesh path is exercised by ``launch.dryrun``).
+
+  PYTHONPATH=src python -m repro.launch.train --arch dlrm-criteo --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch din --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cached_embedding as ce
+from repro.data import graphs, synth
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _recsys_runner(arch: str, batch: int):
+    if arch.startswith("dlrm"):
+        from repro.models.dlrm import DLRM, DLRMConfig
+
+        cfg = DLRMConfig(vocab_sizes=(100_000, 50_000, 20_000), embed_dim=32,
+                         batch_size=batch, cache_ratio=0.02, lr=0.3,
+                         bottom_mlp=(64, 32), top_mlp=(64,))
+        model = DLRM(cfg)
+        spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+        make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
+        emb_cfg = model.emb_cfg_train
+    elif arch == "fm":
+        from repro.models.recsys_models import FMConfig, FMModel
+
+        cfg = FMConfig(vocab_sizes=(100_000,) * 6, embed_dim=10, batch_size=batch, cache_ratio=0.02)
+        model = FMModel(cfg)
+        spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes)
+        make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
+        emb_cfg = model.emb_cfg()
+    elif arch in ("din", "dien", "mind"):
+        from repro.models.recsys_models import (DIENConfig, DIENModel, DINConfig,
+                                                DINModel, MINDConfig, MINDModel)
+
+        if arch == "mind":
+            cfg = MINDConfig(n_items=200_000, n_users=20_000, embed_dim=32,
+                             seq_len=50, batch_size=batch, cache_ratio=0.05)
+            model = MINDModel(cfg)
+            make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
+                cfg.n_items, cfg.n_users, cfg.seq_len, batch, 0, s).items()}
+        else:
+            kw = dict(n_items=200_000, n_cates=20_000, n_users=20_000, embed_dim=18,
+                      seq_len=50, batch_size=batch, cache_ratio=0.05)
+            cfg = DINConfig(**kw) if arch == "din" else DIENConfig(gru_dim=36, **kw)
+            model = (DINModel if arch == "din" else DIENModel)(cfg)
+            make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
+                cfg.n_items, cfg.n_users, cfg.seq_len, batch, 0, s, n_cates=cfg.n_cates).items()}
+        emb_cfg = model.emb_cfg()
+    else:
+        raise ValueError(arch)
+
+    def flush(state):
+        return dict(state, emb=ce.flush_state(emb_cfg, state["emb"]))
+
+    return model, make, flush
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.arch == "gatedgcn":
+        from repro.models.gatedgcn import GatedGCNConfig, GatedGCNModel
+
+        model = GatedGCNModel(GatedGCNConfig(d_feat=32, n_classes=8, n_layers=8, d_hidden=32))
+        indptr, indices, _ = graphs.random_graph_csr(20_000, 100_000, 0)
+        feats = np.random.default_rng(0).normal(size=(20_000, 32)).astype(np.float32)
+        labels = (feats[:, 0] > 0).astype(np.int32)
+        make = lambda s: {k: jnp.asarray(v) for k, v in graphs.sampled_batch(
+            indptr, indices, feats, labels, 256, (10, 5), 0, s).items()}
+        flush = None
+    elif args.arch in ("grok-1-314b", "olmoe-1b-7b", "gemma3-27b", "smollm-360m", "internlm2-20b"):
+        import importlib
+
+        from repro.models.lm import LMModel
+
+        mod = importlib.import_module(f"repro.configs.{args.arch.replace('-', '_')}")
+        model = LMModel(mod.SMOKE, lr=1e-3)  # reduced config for CPU training
+        make = lambda s: {k: jnp.asarray(v) for k, v in synth.seq_batch(
+            mod.SMOKE.vocab, 8, 64, 0, s).items()}
+        flush = None
+    else:
+        model, make, flush = _recsys_runner(args.arch, args.batch)
+
+    trainer = Trainer(
+        TrainerConfig(max_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=25),
+        init_fn=lambda: model.init(jax.random.PRNGKey(0)),
+        step_fn=jax.jit(model.train_step),
+        make_batch=make,
+        flush_fn=flush,
+        on_straggler=lambda s, dt: print(f"[straggler] step {s}: {dt*1e3:.0f} ms"),
+    )
+    trainer.run()
+    h = trainer.history
+    print(f"\narch={args.arch} steps={len(h)} loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
+    if "hit_rate" in h[-1]:
+        print(f"cache hit rate: {h[-1]['hit_rate']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.models.gatedgcn import GatedGCNConfig, GatedGCNModel
+from repro.models.lm import LMModel
+from repro.models.recsys_models import (
+    DIENConfig,
+    DIENModel,
+    DINConfig,
+    DINModel,
+    FMConfig,
+    FMModel,
+    MINDConfig,
+    MINDModel,
+)

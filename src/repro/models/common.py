@@ -1,0 +1,83 @@
+"""Shared model scaffolding: losses, metrics, the cached-embedding train-step
+pattern (prepare -> diff gather -> synchronous row update)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cached_embedding as ce
+from repro.optim.optimizers import Optimizer
+
+__all__ = ["bce_with_logits", "softmax_xent", "auc_proxy", "EmbTrainStep"]
+
+
+def bce_with_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def auc_proxy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Fast pairwise-ranking AUC estimate (exact when no score ties)."""
+    s = logits.astype(jnp.float32).reshape(-1)
+    y = labels.astype(jnp.float32).reshape(-1)
+    order = jnp.argsort(s)
+    ranks = jnp.zeros_like(s).at[order].set(jnp.arange(1, s.size + 1, dtype=jnp.float32))
+    n_pos = jnp.sum(y)
+    n_neg = y.size - n_pos
+    auc = (jnp.sum(ranks * y) - n_pos * (n_pos + 1) / 2) / jnp.maximum(n_pos * n_neg, 1.0)
+    return jnp.where((n_pos > 0) & (n_neg > 0), auc, 0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbTrainStep:
+    """Builds the jittable cached-embedding train step shared by all recsys archs.
+
+    ``fwd(dense_params, emb_rows, batch) -> (logits, aux_dict)`` where
+    ``emb_rows = gather(cached_weight, slots)`` happens inside so gradients
+    reach the cached rows.
+    """
+
+    emb_cfg: ce.CachedEmbeddingConfig
+    optimizer: Optimizer
+    collect_ids: Callable[[Dict[str, jnp.ndarray]], jnp.ndarray]  # batch -> flat global ids
+    fwd: Callable[..., Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
+    loss: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray] = bce_with_logits
+    emb_lr: float = 0.05
+
+    def __call__(self, state: Dict[str, Any], batch: Dict[str, jnp.ndarray]):
+        ids = self.collect_ids(batch)  # [ids_per_step] int32 global ids (-1 pad)
+        emb_state, slots = ce.prepare_ids(self.emb_cfg, state["emb"], ids)
+
+        def loss_fn(dense_params, cached_w):
+            safe = jnp.where(slots >= 0, slots, cached_w.shape[0])  # negatives wrap
+            rows = jnp.take(cached_w, safe, axis=0, mode="fill", fill_value=0)
+            logits, aux = self.fwd(dense_params, rows, batch)
+            return self.loss(logits, batch["label"]), (logits, aux)
+
+        (loss_val, (logits, aux)), grads = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+            state["params"], emb_state.cache.cached_rows["weight"]
+        )
+        params, opt_state = self.optimizer.update(
+            grads[0], state["opt"], state["params"], state["step"]
+        )
+        emb_state = ce.apply_row_grads(self.emb_cfg, emb_state, grads[1], self.emb_lr)
+        metrics = {
+            "loss": loss_val,
+            "auc": auc_proxy(logits, batch["label"]),
+            "hit_rate": emb_state.cache.hit_rate(),
+            "cache_misses": emb_state.cache.misses,
+            "uniq_overflows": emb_state.cache.uniq_overflows,
+            **aux,
+        }
+        new_state = dict(state, params=params, opt=opt_state, emb=emb_state, step=state["step"] + 1)
+        return new_state, metrics

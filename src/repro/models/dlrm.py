@@ -1,0 +1,143 @@
+"""DLRM (Naumov et al. 2019) — the paper's evaluation model, embeddings served
+through the frequency-aware software cache.
+
+Paper §5.1 configuration: embedding dim 128 for every table, bottom MLP
+512-256-128 over 13 dense features, dot-product feature interaction, top MLP
+1024-1024-512-256-1, SGD with constant LR.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cached_embedding as ce
+from repro.dist.partitioning import constrain, split_params
+from repro.models import common
+from repro.nn.layers import Dtypes, mlp, mlp_init
+from repro.optim import optimizers as opt_lib
+
+__all__ = ["DLRMConfig", "DLRM"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    vocab_sizes: Tuple[int, ...]  # 26 sparse features (Criteo) / 13 (Avazu)
+    n_dense: int = 13
+    embed_dim: int = 128
+    bottom_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256)
+    batch_size: int = 16384
+    cache_ratio: float = 0.015
+    buffer_rows: int = 65536
+    max_unique_per_step: int = 0
+    lr: float = 1.0  # paper: 1.0 (Criteo), 5e-2 (Avazu)
+    policy: Any = None  # core.Policy; None -> FREQ_LFU
+    dtypes: Dtypes = Dtypes(param=jnp.float32, compute=jnp.float32)
+    use_pallas: bool = False
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    def emb_cfg(self, batch_size: Optional[int] = None, writeback: bool = True):
+        from repro.core.policies import Policy
+
+        b = batch_size or self.batch_size
+        return ce.CachedEmbeddingConfig(
+            vocab_sizes=self.vocab_sizes,
+            dim=self.embed_dim,
+            ids_per_step=b * self.n_sparse,
+            cache_ratio=self.cache_ratio,
+            buffer_rows=self.buffer_rows,
+            policy=self.policy or Policy.FREQ_LFU,
+            writeback=writeback,
+            dtype=self.dtypes.param,
+            max_unique_per_step=self.max_unique_per_step,
+        )
+
+
+class DLRM:
+    def __init__(self, cfg: DLRMConfig):
+        self.cfg = cfg
+        f = cfg.n_sparse + 1  # embeddings + bottom-MLP output
+        self.top_in = cfg.embed_dim + f * (f - 1) // 2
+        self.optimizer = opt_lib.sgd(cfg.lr)
+
+    # ----- params ----------------------------------------------------------
+    def init(self, rng: jax.Array, counts: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_bot, k_top = jax.random.split(rng, 3)
+        params, _ = split_params(
+            {
+                "bottom": mlp_init(k_bot, (cfg.n_dense,) + cfg.bottom_mlp, cfg.dtypes),
+                "top": mlp_init(k_top, (self.top_in,) + cfg.top_mlp + (1,), cfg.dtypes),
+            }
+        )
+        emb = ce.init_state(k_emb, self.emb_cfg_train, counts=counts)
+        return {
+            "params": params,
+            "opt": self.optimizer.init(params),
+            "emb": emb,
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    @property
+    def emb_cfg_train(self):
+        return self.cfg.emb_cfg()
+
+    # ----- forward ----------------------------------------------------------
+    def interact(self, dense_vec: jnp.ndarray, emb: jnp.ndarray) -> jnp.ndarray:
+        """Dot-product interaction: pairwise dots of [dense_vec] + embeddings."""
+        b = dense_vec.shape[0]
+        z = jnp.concatenate([dense_vec[:, None, :], emb], axis=1)  # [B, F+1, D]
+        zz = jnp.einsum("bfd,bgd->bfg", z, z)
+        f = z.shape[1]
+        iu, ju = jnp.triu_indices(f, k=1)
+        return zz[:, iu, ju]  # [B, F*(F-1)/2]
+
+    def fwd(self, params, emb_rows, batch):
+        cfg = self.cfg
+        b = batch["dense"].shape[0]
+        emb = emb_rows.reshape(b, cfg.n_sparse, cfg.embed_dim)
+        emb = constrain(emb, "batch", None, None)
+        dense_vec = mlp(params["bottom"], batch["dense"].astype(cfg.dtypes.compute), cfg.dtypes, final_act=True)
+        x = jnp.concatenate([dense_vec, self.interact(dense_vec, emb)], axis=-1)
+        logits = mlp(params["top"], x, cfg.dtypes)[:, 0]
+        return logits, {}
+
+    # ----- steps -------------------------------------------------------------
+    def collect_ids(self, batch):
+        emb_state_offsets_needed = batch["sparse"]  # [B, F] local per-field ids
+        return emb_state_offsets_needed  # translated in train_step via globalize
+
+    def train_step(self, state, batch):
+        cfg = self.cfg
+        emb_cfg = self.emb_cfg_train
+        step = common.EmbTrainStep(
+            emb_cfg=emb_cfg,
+            optimizer=self.optimizer,
+            collect_ids=lambda b: ce.globalize(state["emb"], b["sparse"]).reshape(-1),
+            fwd=self.fwd,
+            emb_lr=cfg.lr,
+        )
+        return step(state, batch)
+
+    def serve_step(self, state, batch):
+        """Inference: cache read path without writeback bookkeeping cost."""
+        emb_cfg = self.cfg.emb_cfg(batch_size=batch["sparse"].shape[0], writeback=False)
+        emb_state, _, emb = ce.embed_onehot(emb_cfg, state["emb"], batch["sparse"])
+        logits, _ = self.fwd(state["params"], emb.reshape(-1, self.cfg.embed_dim), batch)
+        return logits, emb_state
+
+    # ----- specs -------------------------------------------------------------
+    def input_specs(self, batch_size: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        return {
+            "dense": jax.ShapeDtypeStruct((batch_size, cfg.n_dense), jnp.float32),
+            "sparse": jax.ShapeDtypeStruct((batch_size, cfg.n_sparse), jnp.int32),
+            "label": jax.ShapeDtypeStruct((batch_size,), jnp.float32),
+        }

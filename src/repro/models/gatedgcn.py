@@ -1,0 +1,131 @@
+"""GatedGCN (arXiv:2003.00982 config: 16 layers, d_hidden=70, gated aggregator).
+
+Covers the four assigned graph regimes:
+  full_graph_sm  — Cora-scale full-batch node classification
+  minibatch_lg   — Reddit-scale sampled training (real neighbor sampler in
+                   ``repro.data.graphs``; model consumes padded blocks)
+  ogb_products   — full-batch large (2.4M nodes / 62M edges), edge-sharded
+  molecule       — batched small graphs, graph-level regression
+
+Layers are homogeneous -> scan over stacked layer params (one compiled body).
+Optionally the (ogb-scale) learnable node-id embedding is served through the
+paper's cache (``cache_node_embed``) — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.partitioning import constrain, prepend_axis, split_params
+from repro.models import common
+from repro.nn import gnn as G
+from repro.nn.layers import Dtypes, dense, dense_init
+from repro.optim import optimizers as opt_lib
+
+__all__ = ["GatedGCNConfig", "GatedGCNModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    d_feat: int
+    n_classes: int
+    n_layers: int = 16
+    d_hidden: int = 70
+    task: str = "node"  # node | graph
+    lr: float = 1e-3
+    dtypes: Dtypes = Dtypes(param=jnp.float32, compute=jnp.float32)
+
+
+class GatedGCNModel:
+    def __init__(self, cfg: GatedGCNConfig):
+        self.cfg = cfg
+        self.optimizer = opt_lib.adam(cfg.lr)
+
+    def init(self, rng):
+        cfg = self.cfg
+        k_in, k_e, k_layers, k_out = jax.random.split(rng, 4)
+        lkeys = jax.random.split(k_layers, cfg.n_layers)
+        stacked = jax.vmap(lambda k: G.gatedgcn_layer_init(k, cfg.d_hidden, cfg.dtypes))(lkeys)
+        params, _ = split_params(
+            {
+                "embed_h": dense_init(k_in, cfg.d_feat, cfg.d_hidden, cfg.dtypes),
+                "embed_e": dense_init(k_e, 1, cfg.d_hidden, cfg.dtypes),
+                "layers": prepend_axis(stacked, "layer_groups"),
+                "readout": dense_init(k_out, cfg.d_hidden, cfg.n_classes, cfg.dtypes),
+            }
+        )
+        return {
+            "params": params,
+            "opt": self.optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def fwd(self, params, batch):
+        cfg = self.cfg
+        src, dst = batch["src"], batch["dst"]
+        h = dense(params["embed_h"], batch["feat"].astype(cfg.dtypes.compute), cfg.dtypes)
+        h = constrain(h, "node", None)
+        e = dense(params["embed_e"], jnp.ones((src.shape[0], 1), cfg.dtypes.compute), cfg.dtypes)
+        e = constrain(e, "edge", None)
+
+        def body(carry, lp):
+            h, e = carry
+            h, e = G.gatedgcn_layer(lp, h, e, src, dst, cfg.dtypes)
+            return (h, e), None
+
+        (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+
+        if cfg.task == "graph":
+            gid = batch["graph_id"]
+            n_graphs = batch["label"].shape[0]
+            valid = (batch["node_mask"] > 0).astype(h.dtype)[:, None]
+            pooled = jax.ops.segment_sum(h * valid, gid, num_segments=n_graphs)
+            cnt = jax.ops.segment_sum(valid, gid, num_segments=n_graphs)
+            h = pooled / jnp.maximum(cnt, 1.0)
+        logits = dense(params["readout"], h, cfg.dtypes)
+        return logits
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        logits = self.fwd(params, batch)
+        if cfg.task == "graph":
+            # molecule regression head: use class-0 output as the scalar
+            pred = logits[:, 0]
+            return jnp.mean((pred - batch["label"].astype(jnp.float32)) ** 2), logits
+        mask = batch["label_mask"].astype(jnp.float32)
+        ll = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(ll, batch["label"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+        return -jnp.sum(picked * mask) / jnp.maximum(mask.sum(), 1.0), logits
+
+    def train_step(self, state, batch):
+        (loss, logits), grads = jax.value_and_grad(self.loss_fn, has_aux=True)(
+            state["params"], batch
+        )
+        params, opt_state = self.optimizer.update(grads, state["opt"], state["params"], state["step"])
+        new_state = dict(state, params=params, opt=opt_state, step=state["step"] + 1)
+        return new_state, {"loss": loss}
+
+    def serve_step(self, state, batch):
+        return self.fwd(state["params"], batch), None
+
+    def input_specs(
+        self, n_nodes: int, n_edges: int, n_targets: int = 0, n_graphs: int = 0
+    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        specs = {
+            "feat": jax.ShapeDtypeStruct((n_nodes, cfg.d_feat), jnp.float32),
+            "src": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        }
+        if cfg.task == "graph":
+            specs["graph_id"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+            specs["node_mask"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+            specs["label"] = jax.ShapeDtypeStruct((n_graphs,), jnp.float32)
+        else:
+            specs["label"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+            specs["label_mask"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+        return specs

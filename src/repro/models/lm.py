@@ -1,0 +1,100 @@
+"""LM-family model wrapper: train / prefill / decode steps over
+``repro.nn.transformer`` with AdamW, grad clipping and optional gradient
+compression for the DP reduction.
+
+The paper's cache technique is inapplicable here (vocab tables fit in HBM —
+DESIGN.md §Arch-applicability); these archs exercise the framework's
+TP/FSDP/EP/long-context distribution paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.nn import transformer as T
+from repro.optim import optimizers as opt_lib
+from repro.optim.compression import Compressor
+
+__all__ = ["LMModel"]
+
+
+class LMModel:
+    def __init__(
+        self,
+        cfg: T.TransformerConfig,
+        lr: float = 3e-4,
+        clip_norm: float = 1.0,
+        aux_weight: float = 0.01,
+        compressor: str = "none",
+    ):
+        self.cfg = cfg
+        self.clip_norm = clip_norm
+        self.aux_weight = aux_weight
+        self.optimizer = opt_lib.adamw(lr)
+        self.compressor = Compressor(compressor)
+
+    def init(self, rng) -> Dict[str, Any]:
+        params, axes = T.init_lm(rng, self.cfg)
+        state = {
+            "params": params,
+            "opt": self.optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if self.compressor.codec == "int8":
+            state["comp"] = self.compressor.init(params)
+        self.param_axes = axes
+        return state
+
+    def loss_fn(self, params, batch):
+        logits, aux = T.forward(params, self.cfg, batch["tokens"])
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(
+            logits.astype(jnp.float32), batch["labels"][..., None], axis=-1
+        )[..., 0]
+        xent = jnp.mean(lse - ll)
+        return xent + self.aux_weight * aux, (xent, aux)
+
+    def train_step(self, state, batch):
+        (loss, (xent, aux)), grads = jax.value_and_grad(self.loss_fn, has_aux=True)(
+            state["params"], batch
+        )
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, self.clip_norm)
+        new_state = dict(state)
+        if self.compressor.codec != "none":
+            payload, sideband, comp_state = self.compressor.encode(grads, state.get("comp", ()))
+            grads = self.compressor.decode(payload, sideband, grads)
+            if self.compressor.codec == "int8":
+                new_state["comp"] = comp_state
+        params, opt_state = self.optimizer.update(grads, state["opt"], state["params"], state["step"])
+        new_state.update(params=params, opt=opt_state, step=state["step"] + 1)
+        return new_state, {"loss": loss, "xent": xent, "aux": aux, "grad_norm": gnorm}
+
+    def prefill_step(self, state_params, batch):
+        return T.prefill(state_params, self.cfg, batch["tokens"])
+
+    def decode_fn(self, params, caches, token, pos):
+        return T.decode_step(params, self.cfg, caches, token, pos)
+
+    # ----- specs ------------------------------------------------------------
+    def train_specs(self, batch: int, seq: int):
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+
+    def prefill_specs(self, batch: int, seq: int):
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+    def decode_specs(self, batch: int, kv_len: int):
+        caches = jax.eval_shape(
+            lambda: T.init_decode_caches(self.cfg, batch, kv_len)
+        )
+        return {
+            "caches": caches,
+            "token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }

@@ -1,0 +1,529 @@
+"""Assigned recsys archs — DIN, DIEN, FM, MIND — all with their (huge) sparse
+tables served through the paper's frequency-aware cache.
+
+Shared batch schema (synthetic Amazon/Taobao/Criteo-like):
+  DIN/DIEN: hist_items [B,T], hist_cates [B,T], hist_len [B], target_item [B],
+            target_cate [B], user [B], label [B]
+  MIND:     hist_items [B,T], hist_len [B], target_item [B], label [B]
+  FM:       sparse [B, 39], label [B]
+
+``retrieval_score`` (the retrieval_cand shape) scores one user against 10^6
+candidates as a batched matmul against the *full* (flushed) table — bulk
+scoring bypasses the cache bookkeeping by design (the cache accelerates the
+per-request user-side lookups; candidate scans read the authoritative tier).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cached_embedding as ce
+from repro.core.policies import Policy
+from repro.dist.partitioning import Param, constrain, split_params
+from repro.models import common
+from repro.nn import recsys as R
+from repro.nn.layers import Dtypes, mlp, mlp_init
+from repro.optim import optimizers as opt_lib
+
+__all__ = ["FMConfig", "FMModel", "DINConfig", "DINModel", "DIENConfig", "DIENModel", "MINDConfig", "MINDModel"]
+
+F32 = Dtypes(param=jnp.float32, compute=jnp.float32)
+
+
+def _emb_cfg(vocab_sizes, dim, ids_per_step, cache_ratio, writeback=True, max_unique=0,
+             policy=Policy.FREQ_LFU, dtype=jnp.float32, protect_via_inverse=True,
+             buffer_rows=65536):
+    return ce.CachedEmbeddingConfig(
+        vocab_sizes=tuple(vocab_sizes),
+        dim=dim,
+        ids_per_step=ids_per_step,
+        cache_ratio=cache_ratio,
+        policy=policy,
+        writeback=writeback,
+        max_unique_per_step=max_unique,
+        dtype=dtype,
+        protect_via_inverse=protect_via_inverse,
+        buffer_rows=buffer_rows,
+    )
+
+
+# ===========================================================================
+# FM (Rendle ICDM'10): 39 sparse fields, embed_dim 10, 2-way interactions.
+# Table payload is dim+1: columns [0:dim] factors, [dim] the linear weight —
+# one cache tier moves both together.
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    vocab_sizes: Tuple[int, ...]  # 39 fields
+    embed_dim: int = 10
+    batch_size: int = 65536
+    cache_ratio: float = 0.015
+    max_unique_per_step: int = 0
+    lr: float = 0.05
+    use_pallas: bool = False
+    emb_dtype: Any = jnp.float32
+    protect_via_inverse: bool = True
+    buffer_rows: int = 65536
+
+
+class FMModel:
+    def __init__(self, cfg: FMConfig):
+        self.cfg = cfg
+        self.optimizer = opt_lib.sgd(cfg.lr)
+
+    def emb_cfg(self, batch_size=None, writeback=True):
+        c = self.cfg
+        b = batch_size or c.batch_size
+        return _emb_cfg(
+            c.vocab_sizes, c.embed_dim + 1, b * len(c.vocab_sizes), c.cache_ratio,
+            writeback=writeback, max_unique=c.max_unique_per_step,
+            dtype=c.emb_dtype, protect_via_inverse=c.protect_via_inverse,
+            buffer_rows=c.buffer_rows,
+        )
+
+    def init(self, rng, counts: Optional[np.ndarray] = None):
+        k_emb, k_b = jax.random.split(rng)
+        params = {"bias": jnp.zeros((), jnp.float32)}
+        emb = ce.init_state(k_emb, self.emb_cfg(), counts=counts)
+        return {"params": params, "opt": self.optimizer.init(params), "emb": emb,
+                "step": jnp.zeros((), jnp.int32)}
+
+    def fwd(self, params, emb_rows, batch):
+        c = self.cfg
+        b, f = batch["sparse"].shape
+        rows = emb_rows.reshape(b, f, c.embed_dim + 1)
+        v, w = rows[..., : c.embed_dim], rows[..., c.embed_dim]
+        logits = params["bias"] + w.sum(-1) + R.fm_interaction(v, use_pallas=c.use_pallas)
+        return logits, {}
+
+    def train_step(self, state, batch):
+        step = common.EmbTrainStep(
+            emb_cfg=self.emb_cfg(batch["sparse"].shape[0]),
+            optimizer=self.optimizer,
+            collect_ids=lambda bt: ce.globalize(state["emb"], bt["sparse"]).reshape(-1),
+            fwd=self.fwd,
+            emb_lr=self.cfg.lr,
+        )
+        return step(state, batch)
+
+    def serve_step(self, state, batch):
+        emb_cfg = self.emb_cfg(batch["sparse"].shape[0], writeback=False)
+        ids = ce.globalize(state["emb"], batch["sparse"]).reshape(-1)
+        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
+        rows = ce.gather_slots(emb_state, slots)
+        logits, _ = self.fwd(state["params"], rows, batch)
+        return logits, emb_state
+
+    def retrieval_score(self, state, batch):
+        """1 user's 38 context fields vs n_cand candidates in field 38."""
+        c = self.cfg
+        ctx = batch["sparse"]  # [1, 38] fields 0..37
+        cands = batch["candidates"]  # [n_cand] local ids of field 38
+        emb_cfg = self.emb_cfg(1, writeback=False)
+        # user-side context rows via the cache tier
+        gctx = (ctx.astype(jnp.int32) + state["emb"].offsets[:-1]).reshape(-1)
+        pad = jnp.full((emb_cfg.ids_per_step - gctx.size,), -1, jnp.int32)
+        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], jnp.concatenate([gctx, pad]))
+        ctx_rows = ce.gather_slots(emb_state, slots)[: gctx.size]
+        vc, wc = ctx_rows[:, : c.embed_dim], ctx_rows[:, c.embed_dim]
+        # candidate rows: bulk scan of the full table (batched gather+dot, no loop)
+        rows_idx = emb_state.idx_map[cands + emb_state.offsets[-1]]
+        cand_rows = jnp.take(emb_state.full["weight"], rows_idx, axis=0)
+        vk, wk = cand_rows[:, : c.embed_dim], cand_rows[:, c.embed_dim]
+        # FM score restricted to terms involving the candidate + context-only terms
+        s_ctx = vc.sum(0)  # [D]
+        ctx_pair = 0.5 * ((s_ctx * s_ctx).sum() - (vc * vc).sum())
+        scores = state["params"]["bias"] + wc.sum() + ctx_pair + wk + vk @ s_ctx
+        return scores, emb_state
+
+    def input_specs(self, batch_size: int, n_candidates: int = 0):
+        c = self.cfg
+        if n_candidates:
+            return {
+                "sparse": jax.ShapeDtypeStruct((1, len(c.vocab_sizes) - 1), jnp.int32),
+                "candidates": jax.ShapeDtypeStruct((n_candidates,), jnp.int32),
+            }
+        return {
+            "sparse": jax.ShapeDtypeStruct((batch_size, len(c.vocab_sizes)), jnp.int32),
+            "label": jax.ShapeDtypeStruct((batch_size,), jnp.float32),
+        }
+
+
+# ===========================================================================
+# DIN (arXiv:1706.06978): target attention over behaviour history.
+# Tables: items, categories, users (embed_dim 18 each).
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    n_items: int = 10_000_000
+    n_cates: int = 1_000_000
+    n_users: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    batch_size: int = 65536
+    cache_ratio: float = 0.015
+    max_unique_per_step: int = 0
+    lr: float = 0.05
+    dtypes: Dtypes = F32
+
+
+class DINModel:
+    def __init__(self, cfg: DINConfig):
+        self.cfg = cfg
+        self.optimizer = opt_lib.sgd(cfg.lr)
+
+    @property
+    def vocab_sizes(self):
+        c = self.cfg
+        return (c.n_items, c.n_cates, c.n_users)
+
+    def ids_per_batch(self, b):
+        # hist items + hist cates + target item + target cate + user
+        return b * (2 * self.cfg.seq_len + 3)
+
+    def emb_cfg(self, batch_size=None, writeback=True):
+        c = self.cfg
+        b = batch_size or c.batch_size
+        return _emb_cfg(self.vocab_sizes, c.embed_dim, self.ids_per_batch(b), c.cache_ratio,
+                        writeback=writeback, max_unique=c.max_unique_per_step)
+
+    def init(self, rng, counts: Optional[np.ndarray] = None):
+        c = self.cfg
+        k_emb, k_attn, k_mlp = jax.random.split(rng, 3)
+        d = c.embed_dim
+        params, _ = split_params(
+            {
+                "attn": R.din_attention_init(k_attn, 2 * d, c.attn_mlp, c.dtypes),
+                "mlp": mlp_init(k_mlp, (d + 2 * (2 * d),) + c.mlp + (1,), c.dtypes),
+            }
+        )
+        emb = ce.init_state(k_emb, self.emb_cfg(), counts=counts)
+        return {"params": params, "opt": self.optimizer.init(params), "emb": emb,
+                "step": jnp.zeros((), jnp.int32)}
+
+    def collect_ids(self, emb_state, batch):
+        off = emb_state.offsets
+        b = batch["hist_items"].shape[0]
+        hist_mask = jnp.arange(self.cfg.seq_len)[None, :] < batch["hist_len"][:, None]
+        hi = jnp.where(hist_mask, batch["hist_items"] + off[0], -1)
+        hc = jnp.where(hist_mask, batch["hist_cates"] + off[1], -1)
+        ti = (batch["target_item"] + off[0])[:, None]
+        tc = (batch["target_cate"] + off[1])[:, None]
+        us = (batch["user"] + off[2])[:, None]
+        return jnp.concatenate([hi, hc, ti, tc, us], axis=1).reshape(-1).astype(jnp.int32)
+
+    def fwd(self, params, emb_rows, batch):
+        c = self.cfg
+        d, t = c.embed_dim, c.seq_len
+        b = batch["hist_items"].shape[0]
+        rows = emb_rows.reshape(b, 2 * t + 3, d)
+        hist = jnp.concatenate([rows[:, :t], rows[:, t : 2 * t]], axis=-1)  # [B,T,2D]
+        target = jnp.concatenate([rows[:, 2 * t], rows[:, 2 * t + 1]], axis=-1)  # [B,2D]
+        user = rows[:, 2 * t + 2]
+        mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
+        pooled = R.din_attention(params["attn"], hist, target, mask, c.dtypes)  # [B,2D]
+        x = jnp.concatenate([user, pooled, target], axis=-1)
+        x = constrain(x, "batch", None)
+        logits = mlp(params["mlp"], x, c.dtypes)[:, 0]
+        return logits, {}
+
+    def train_step(self, state, batch):
+        step = common.EmbTrainStep(
+            emb_cfg=self.emb_cfg(batch["hist_items"].shape[0]),
+            optimizer=self.optimizer,
+            collect_ids=lambda bt: self.collect_ids(state["emb"], bt),
+            fwd=self.fwd,
+            emb_lr=self.cfg.lr,
+        )
+        return step(state, batch)
+
+    def serve_step(self, state, batch):
+        emb_cfg = self.emb_cfg(batch["hist_items"].shape[0], writeback=False)
+        ids = self.collect_ids(state["emb"], batch)
+        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
+        rows = ce.gather_slots(emb_state, slots)
+        logits, _ = self.fwd(state["params"], rows, batch)
+        return logits, emb_state
+
+    def retrieval_score(self, state, batch):
+        """One user history vs n_cand candidate items (shared-user batched dot)."""
+        c = self.cfg
+        emb_cfg = self.emb_cfg(1, writeback=False)
+        b1 = {k: v for k, v in batch.items() if k not in ("candidates", "candidate_cates")}
+        b1.setdefault("target_item", jnp.zeros((1,), jnp.int32))
+        b1.setdefault("target_cate", jnp.zeros((1,), jnp.int32))
+        ids = self.collect_ids(state["emb"], b1)
+        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
+        rows = ce.gather_slots(emb_state, slots)
+        d, t = c.embed_dim, c.seq_len
+        rows = rows.reshape(1, 2 * t + 3, d)
+        hist = jnp.concatenate([rows[:, :t], rows[:, t : 2 * t]], axis=-1)
+        user = rows[:, 2 * t + 2]
+        mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
+
+        cands = batch["candidates"]  # [n_cand] item ids; category = item's cate id array
+        cand_cates = batch["candidate_cates"]
+        rowsi = emb_state.idx_map[cands + emb_state.offsets[0]]
+        rowsc = emb_state.idx_map[cand_cates + emb_state.offsets[1]]
+        ti = jnp.take(emb_state.full["weight"], rowsi, axis=0)
+        tc = jnp.take(emb_state.full["weight"], rowsc, axis=0)
+        targets = jnp.concatenate([ti, tc], axis=-1)  # [n_cand, 2D]
+
+        n = cands.shape[0]
+        histb = jnp.broadcast_to(hist, (n,) + hist.shape[1:])
+        maskb = jnp.broadcast_to(mask, (n, t))
+        pooled = R.din_attention(state["params"]["attn"], histb, targets, maskb, c.dtypes)
+        userb = jnp.broadcast_to(user, (n, d))
+        x = jnp.concatenate([userb, pooled, targets], axis=-1)
+        scores = mlp(state["params"]["mlp"], x, c.dtypes)[:, 0]
+        return scores, emb_state
+
+    def input_specs(self, batch_size: int, n_candidates: int = 0):
+        c = self.cfg
+        base = {
+            "hist_items": jax.ShapeDtypeStruct((batch_size, c.seq_len), jnp.int32),
+            "hist_cates": jax.ShapeDtypeStruct((batch_size, c.seq_len), jnp.int32),
+            "hist_len": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+            "target_item": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+            "target_cate": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+            "user": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        }
+        if n_candidates:
+            base.pop("target_item"), base.pop("target_cate")
+            base["candidates"] = jax.ShapeDtypeStruct((n_candidates,), jnp.int32)
+            base["candidate_cates"] = jax.ShapeDtypeStruct((n_candidates,), jnp.int32)
+            return base
+        base["label"] = jax.ShapeDtypeStruct((batch_size,), jnp.float32)
+        return base
+
+
+# ===========================================================================
+# DIEN (arXiv:1809.03672): GRU interest extraction + AUGRU evolution.
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig(DINConfig):
+    gru_dim: int = 108
+
+
+class DIENModel(DINModel):
+    def __init__(self, cfg: DIENConfig):
+        super().__init__(cfg)
+
+    def init(self, rng, counts: Optional[np.ndarray] = None):
+        c: DIENConfig = self.cfg  # type: ignore[assignment]
+        k_emb, k_g1, k_g2, k_attn, k_mlp = jax.random.split(rng, 5)
+        d = c.embed_dim
+        params, _ = split_params(
+            {
+                "gru1": R.gru_init(k_g1, 2 * d, c.gru_dim, c.dtypes),
+                "gru2": R.gru_init(k_g2, c.gru_dim, c.gru_dim, c.dtypes),
+                "attn_proj": {
+                    "w": Param(
+                        jax.random.normal(k_attn, (2 * d, c.gru_dim), c.dtypes.param)
+                        * (1.0 / np.sqrt(2 * d)),
+                        (None, None),
+                    )
+                },
+                "mlp": mlp_init(k_mlp, (d + 2 * d + c.gru_dim,) + c.mlp + (1,), c.dtypes),
+            }
+        )
+        emb = ce.init_state(k_emb, self.emb_cfg(), counts=counts)
+        return {"params": params, "opt": self.optimizer.init(params), "emb": emb,
+                "step": jnp.zeros((), jnp.int32)}
+
+    def fwd(self, params, emb_rows, batch):
+        c: DIENConfig = self.cfg  # type: ignore[assignment]
+        d, t = c.embed_dim, c.seq_len
+        b = batch["hist_items"].shape[0]
+        rows = emb_rows.reshape(b, 2 * t + 3, d)
+        hist = jnp.concatenate([rows[:, :t], rows[:, t : 2 * t]], axis=-1)
+        target = jnp.concatenate([rows[:, 2 * t], rows[:, 2 * t + 1]], axis=-1)
+        user = rows[:, 2 * t + 2]
+        mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
+
+        interest = R.gru(params["gru1"], hist, c.dtypes)  # [B,T,H]
+        # attention of target on interest states
+        tq = target @ params["attn_proj"]["w"].astype(c.dtypes.compute)  # [B,H]
+        att = jnp.einsum("bh,bth->bt", tq, interest) / np.sqrt(c.gru_dim)
+        att = jax.nn.softmax(jnp.where(mask, att, -1e30), axis=-1)
+        att = jnp.where(mask, att, 0.0)
+        final = R.augru(params["gru2"], interest, att, c.dtypes)[:, -1]  # [B,H]
+        x = jnp.concatenate([user, target, final], axis=-1)
+        logits = mlp(params["mlp"], x, c.dtypes)[:, 0]
+        return logits, {}
+
+    def retrieval_score(self, state, batch):
+        """Bulk candidate scoring for DIEN.
+
+        Serving-path adaptation (DESIGN.md): GRU1 interest extraction runs
+        once (target-independent); candidates are scored by target attention
+        over the interest states (the AUGRU evolution stage is skipped — a
+        full per-candidate AUGRU over 10^6 candidates is a ranking-stage
+        cost, not a retrieval-stage one).
+        """
+        c: DIENConfig = self.cfg  # type: ignore[assignment]
+        d, t = c.embed_dim, c.seq_len
+        emb_cfg = self.emb_cfg(1, writeback=False)
+        b1 = {k: v for k, v in batch.items() if k not in ("candidates", "candidate_cates")}
+        b1.setdefault("target_item", jnp.zeros((1,), jnp.int32))
+        b1.setdefault("target_cate", jnp.zeros((1,), jnp.int32))
+        ids = self.collect_ids(state["emb"], b1)
+        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
+        rows = ce.gather_slots(emb_state, slots).reshape(1, 2 * t + 3, d)
+        hist = jnp.concatenate([rows[:, :t], rows[:, t : 2 * t]], axis=-1)
+        mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
+        interest = R.gru(state["params"]["gru1"], hist, c.dtypes)[0]  # [T,H]
+
+        rowsi = emb_state.idx_map[batch["candidates"] + emb_state.offsets[0]]
+        rowsc = emb_state.idx_map[batch["candidate_cates"] + emb_state.offsets[1]]
+        ti = jnp.take(emb_state.full["weight"], rowsi, axis=0)
+        tc = jnp.take(emb_state.full["weight"], rowsc, axis=0)
+        targets = jnp.concatenate([ti, tc], axis=-1)  # [N, 2D]
+        tq = targets @ state["params"]["attn_proj"]["w"].astype(c.dtypes.compute)  # [N,H]
+        att = (tq @ interest.T) / np.sqrt(c.gru_dim)  # [N,T]
+        att = jax.nn.softmax(jnp.where(mask[0][None, :], att, -1e30), axis=-1)
+        pooled = att @ interest  # [N,H]
+        scores = jnp.einsum("nh,nh->n", tq, pooled)
+        return scores, emb_state
+
+
+# ===========================================================================
+# MIND (arXiv:1904.08030): multi-interest capsule routing.
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    n_items: int = 4_000_000
+    n_users: int = 1_000_000
+    embed_dim: int = 64
+    seq_len: int = 100
+    n_interests: int = 4
+    capsule_iters: int = 3
+    batch_size: int = 65536
+    cache_ratio: float = 0.015
+    max_unique_per_step: int = 0
+    label_pow: float = 2.0  # label-aware attention sharpness
+    lr: float = 0.05
+    dtypes: Dtypes = F32
+
+
+class MINDModel:
+    def __init__(self, cfg: MINDConfig):
+        self.cfg = cfg
+        self.optimizer = opt_lib.sgd(cfg.lr)
+
+    @property
+    def vocab_sizes(self):
+        return (self.cfg.n_items, self.cfg.n_users)
+
+    def ids_per_batch(self, b):
+        return b * (self.cfg.seq_len + 2)  # hist + target + user
+
+    def emb_cfg(self, batch_size=None, writeback=True):
+        c = self.cfg
+        b = batch_size or c.batch_size
+        return _emb_cfg(self.vocab_sizes, c.embed_dim, self.ids_per_batch(b), c.cache_ratio,
+                        writeback=writeback, max_unique=c.max_unique_per_step)
+
+    def init(self, rng, counts: Optional[np.ndarray] = None):
+        c = self.cfg
+        k_emb, k_s = jax.random.split(rng)
+        params = {"s_matrix": jax.random.normal(k_s, (c.embed_dim, c.embed_dim), jnp.float32)
+                  * (1.0 / np.sqrt(c.embed_dim))}
+        emb = ce.init_state(k_emb, self.emb_cfg(), counts=counts)
+        return {"params": params, "opt": self.optimizer.init(params), "emb": emb,
+                "step": jnp.zeros((), jnp.int32)}
+
+    def collect_ids(self, emb_state, batch):
+        off = emb_state.offsets
+        t = self.cfg.seq_len
+        mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
+        hi = jnp.where(mask, batch["hist_items"] + off[0], -1)
+        ti = (batch["target_item"] + off[0])[:, None]
+        us = (batch["user"] + off[1])[:, None]
+        return jnp.concatenate([hi, ti, us], axis=1).reshape(-1).astype(jnp.int32)
+
+    def interests(self, params, hist, mask):
+        c = self.cfg
+        return R.capsule_routing(
+            hist, mask, params["s_matrix"].astype(hist.dtype), c.n_interests, c.capsule_iters
+        )  # [B,K,D]
+
+    def fwd(self, params, emb_rows, batch):
+        c = self.cfg
+        t, d = c.seq_len, c.embed_dim
+        b = batch["hist_items"].shape[0]
+        rows = emb_rows.reshape(b, t + 2, d)
+        hist, target, user = rows[:, :t], rows[:, t], rows[:, t + 1]
+        mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
+        caps = self.interests(params, hist, mask)  # [B,K,D]
+        caps = caps + user[:, None, :] * 0.0  # user id participates via ids only
+        # label-aware attention: weight interests by target affinity^pow
+        aff = jnp.einsum("bkd,bd->bk", caps, target)
+        w = jax.nn.softmax(c.label_pow * aff, axis=-1)
+        u = jnp.einsum("bk,bkd->bd", w, caps)
+        logits = jnp.einsum("bd,bd->b", u, target)
+        return logits, {}
+
+    def train_step(self, state, batch):
+        step = common.EmbTrainStep(
+            emb_cfg=self.emb_cfg(batch["hist_items"].shape[0]),
+            optimizer=self.optimizer,
+            collect_ids=lambda bt: self.collect_ids(state["emb"], bt),
+            fwd=self.fwd,
+            emb_lr=self.cfg.lr,
+        )
+        return step(state, batch)
+
+    def serve_step(self, state, batch):
+        emb_cfg = self.emb_cfg(batch["hist_items"].shape[0], writeback=False)
+        ids = self.collect_ids(state["emb"], batch)
+        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
+        rows = ce.gather_slots(emb_state, slots)
+        logits, _ = self.fwd(state["params"], rows, batch)
+        return logits, emb_state
+
+    def retrieval_score(self, state, batch):
+        """Max-over-interests dot against 10^6 candidates (batched matmul)."""
+        c = self.cfg
+        emb_cfg = self.emb_cfg(1, writeback=False)
+        ids = self.collect_ids(
+            state["emb"],
+            dict(batch, target_item=jnp.zeros((1,), jnp.int32)),
+        )
+        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
+        rows = ce.gather_slots(emb_state, slots).reshape(1, c.seq_len + 2, c.embed_dim)
+        hist = rows[:, : c.seq_len]
+        mask = jnp.arange(c.seq_len)[None, :] < batch["hist_len"][:, None]
+        caps = self.interests(state["params"], hist, mask)[0]  # [K,D]
+        rowsi = emb_state.idx_map[batch["candidates"] + emb_state.offsets[0]]
+        cand = jnp.take(emb_state.full["weight"], rowsi, axis=0)  # [N,D]
+        scores = jnp.max(cand @ caps.T, axis=-1)  # [N]
+        return scores, emb_state
+
+    def input_specs(self, batch_size: int, n_candidates: int = 0):
+        c = self.cfg
+        base = {
+            "hist_items": jax.ShapeDtypeStruct((batch_size, c.seq_len), jnp.int32),
+            "hist_len": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+            "user": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        }
+        if n_candidates:
+            base["candidates"] = jax.ShapeDtypeStruct((n_candidates,), jnp.int32)
+            return base
+        base["target_item"] = jax.ShapeDtypeStruct((batch_size,), jnp.int32)
+        base["label"] = jax.ShapeDtypeStruct((batch_size,), jnp.float32)
+        return base

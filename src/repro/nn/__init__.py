@@ -1,0 +1,1 @@
+from repro.nn.layers import Dtypes

@@ -1,0 +1,53 @@
+"""EmbeddingBag for JAX: ragged gather + segment-reduce (no torch analogue).
+
+This is the *uncached* embedding path (used as the oracle/baseline and for
+tables small enough to live wholly in HBM).  The cached path is
+``repro.core.cached_embedding``; both share this module's bag semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag", "one_hot_lookup"]
+
+
+def one_hot_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """ids [..] -> [.., dim]; negative ids give zero rows."""
+    from repro.nn.indexing import take_rows
+
+    return take_rows(table, ids)
+
+
+def embedding_bag(
+    table: jnp.ndarray,  # [vocab, dim]
+    flat_ids: jnp.ndarray,  # [N] (negative = padding)
+    segment_ids: jnp.ndarray,  # [N] bag index per id, non-decreasing not required
+    num_segments: int,
+    combiner: str = "sum",
+    weights: Optional[jnp.ndarray] = None,  # [N] per-sample weights
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """torch.nn.EmbeddingBag(sum|mean|max) built from gather + segment ops."""
+    if use_pallas and combiner in ("sum", "mean") and weights is None:
+        from repro.kernels.embedding_bag import ops as eb_ops
+
+        return eb_ops.embedding_bag(table, flat_ids, segment_ids, num_segments, combiner)
+
+    from repro.nn.indexing import take_rows
+
+    rows = take_rows(table, flat_ids)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    valid = flat_ids >= 0
+    if combiner == "max":
+        rows = jnp.where(valid[:, None], rows, -jnp.inf)
+        out = jax.ops.segment_max(rows, segment_ids, num_segments=num_segments)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(valid.astype(out.dtype), segment_ids, num_segments=num_segments)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out

@@ -1,0 +1,121 @@
+"""GatedGCN message passing via segment ops (JAX has no SpMM beyond BCOO —
+edge-index scatter IS the system here), plus a real neighbor sampler.
+
+GatedGCN (arXiv:1711.07553, benchmarking-gnns arXiv:2003.00982 form):
+
+    e_ij' = e_ij + ReLU(Norm(A h_i + B h_j + C e_ij))
+    h_i'  = h_i + ReLU(Norm(U h_i + sum_j eta_ij * (V h_j)))
+    eta_ij = sigma(e_ij') / (sum_{j in N(i)} sigma(e_ij') + eps)
+
+Norm is LayerNorm (BatchNorm in the original; LayerNorm avoids cross-device
+batch statistics and is the common JAX adaptation — noted in DESIGN.md).
+Graphs are edge lists (src, dst) with -1 padding; message passing is
+``gather -> edge MLP -> segment_sum`` over destinations.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.partitioning import Param, constrain
+from repro.nn.layers import Dtypes, dense, dense_init, layernorm, layernorm_init
+
+__all__ = ["gatedgcn_layer_init", "gatedgcn_layer", "neighbor_sample"]
+
+
+def gatedgcn_layer_init(rng, d: int, dt: Dtypes):
+    ks = jax.random.split(rng, 5)
+    return {
+        "A": dense_init(ks[0], d, d, dt),
+        "B": dense_init(ks[1], d, d, dt),
+        "C": dense_init(ks[2], d, d, dt),
+        "U": dense_init(ks[3], d, d, dt),
+        "V": dense_init(ks[4], d, d, dt),
+        "ln_h": layernorm_init(d, dt),
+        "ln_e": layernorm_init(d, dt),
+    }
+
+
+def gatedgcn_layer(
+    p,
+    h: jnp.ndarray,  # [N, D] node features
+    e: jnp.ndarray,  # [E, D] edge features
+    src: jnp.ndarray,  # [E] int32 (-1 padding)
+    dst: jnp.ndarray,  # [E] int32 (-1 padding)
+    dt: Dtypes,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n = h.shape[0]
+    valid = (src >= 0) & (dst >= 0)
+
+    from repro.nn.indexing import take_rows
+
+    h_src = take_rows(h, src)
+    h_dst = take_rows(h, dst)
+
+    e_new = dense(p["A"], h_dst, dt) + dense(p["B"], h_src, dt) + dense(p["C"], e, dt)
+    e_new = constrain(e_new, "edge", None)
+    e_out = e + jax.nn.relu(layernorm(p["ln_e"], e_new, dt))
+
+    gate = jax.nn.sigmoid(e_new.astype(jnp.float32))
+    gate = jnp.where(valid[:, None], gate, 0.0)
+    msg = gate * dense(p["V"], h_src, dt).astype(jnp.float32)
+
+    seg = jnp.where(valid, dst, n)  # padding -> dropped bucket
+    agg = jax.ops.segment_sum(msg, seg, num_segments=n + 1)[:n]
+    den = jax.ops.segment_sum(gate, seg, num_segments=n + 1)[:n]
+    agg = agg / (den + 1e-6)
+
+    h_new = dense(p["U"], h, dt) + agg.astype(dt.compute)
+    h_out = h + jax.nn.relu(layernorm(p["ln_h"], h_new, dt))
+    h_out = constrain(h_out, "node", None)
+    return h_out, e_out
+
+
+# ---------------------------------------------------------------------------
+# Neighbor sampling (host-side, numpy) — required by the minibatch_lg shape.
+# ---------------------------------------------------------------------------
+
+
+def neighbor_sample(
+    indptr: np.ndarray,  # CSR [N+1]
+    indices: np.ndarray,  # CSR [nnz]
+    seeds: np.ndarray,  # [B] seed node ids
+    fanouts: Tuple[int, ...],  # e.g. (15, 10)
+    rng: np.random.Generator,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Uniform k-hop neighbor sampling -> padded subgraph edge list.
+
+    Returns (nodes [N_sub_max], src, dst, n_seed) where src/dst index into
+    ``nodes`` (local ids), padded with -1 to the static worst-case size:
+    N_sub_max = B * prod(1+f_i partials); E_max = B*f1 + B*f1*f2 + ...
+    Seeds occupy nodes[:B]. Duplicates are kept (standard GraphSAGE practice)
+    so shapes stay static.
+    """
+    b = len(seeds)
+    frontier = np.asarray(seeds, dtype=np.int64)
+    nodes = [frontier]
+    srcs, dsts = [], []
+    base = 0  # local offset of current frontier inside `nodes`
+    for f in fanouts:
+        deg = indptr[frontier + 1] - indptr[frontier]
+        # sample f neighbors per frontier node (with replacement; deg==0 -> -1)
+        u = rng.integers(0, np.maximum(deg, 1)[:, None], size=(len(frontier), f))
+        pos = np.minimum(indptr[frontier][:, None] + u, len(indices) - 1)
+        nbr = indices[pos]
+        nbr = np.where(deg[:, None] > 0, nbr, -1)
+        new_local = np.arange(nbr.size) + sum(len(x) for x in nodes)
+        # edges: sampled neighbor (src) -> frontier node (dst)
+        dst_local = np.repeat(np.arange(len(frontier)) + base, f)
+        src_local = np.where(nbr.reshape(-1) >= 0, new_local, -1)
+        srcs.append(src_local)
+        dsts.append(np.where(src_local >= 0, dst_local, -1))
+        base = sum(len(x) for x in nodes)
+        frontier = np.maximum(nbr.reshape(-1), 0)
+        nodes.append(frontier)
+    all_nodes = np.concatenate(nodes)
+    src = np.concatenate(srcs).astype(np.int32)
+    dst = np.concatenate(dsts).astype(np.int32)
+    return all_nodes.astype(np.int64), src, dst, b

@@ -1,0 +1,20 @@
+"""Safe row gather: negative indices -> zero rows.
+
+JAX wraps negative indices (numpy semantics) even under ``mode='fill'`` —
+only *positive* out-of-bounds indices hit the fill path.  Every "-1 means
+padding" gather in the framework must therefore remap negatives to a positive
+OOB sentinel first.  (Found the hard way: the Pallas kernel disagreed with a
+wrap-buggy oracle; see tests/test_indexing.py.)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["take_rows"]
+
+
+def take_rows(table: jnp.ndarray, idx: jnp.ndarray, fill_value=0) -> jnp.ndarray:
+    """table [N, ...], idx [...] int; idx < 0 or >= N -> fill_value rows."""
+    n = table.shape[0]
+    safe = jnp.where(idx >= 0, idx, n)
+    return jnp.take(table, safe, axis=0, mode="fill", fill_value=fill_value)

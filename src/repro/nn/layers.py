@@ -1,0 +1,256 @@
+"""Substrate NN layers: dense/MLP/norms/RoPE/GQA attention (pure JAX).
+
+Conventions:
+  * params are nested dicts of arrays; init functions return trees of
+    ``dist.partitioning.Param`` (value + logical dim names) that callers split.
+  * compute dtype (default bf16) is separate from param dtype (default fp32);
+    softmax / norms accumulate in fp32.
+  * attention is flash-style chunked (two-level ``lax.scan`` with online
+    softmax) so no [S, S] score tensor is ever materialized — the pure-XLA
+    analogue of the Pallas kernel in ``repro.kernels.flash_attention``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.partitioning import Param, constrain
+
+__all__ = [
+    "Dtypes",
+    "dense_init",
+    "dense",
+    "mlp_init",
+    "mlp",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "rope",
+    "gqa_attention",
+    "decode_attention",
+    "embed_init",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dtypes:
+    param: Any = jnp.float32
+    compute: Any = jnp.bfloat16
+
+
+def _uniform_init(rng, shape, dtype, fan_in):
+    bound = 1.0 / np.sqrt(max(fan_in, 1))
+    return jax.random.uniform(rng, shape, dtype, -bound, bound)
+
+
+def dense_init(rng, d_in, d_out, dt: Dtypes, axes=(None, None), bias=True):
+    kw, kb = jax.random.split(rng)
+    p = {"w": Param(_uniform_init(kw, (d_in, d_out), dt.param, d_in), axes)}
+    if bias:
+        p["b"] = Param(jnp.zeros((d_out,), dt.param), (axes[1],))
+    return p
+
+
+def dense(p, x, dt: Dtypes):
+    y = x.astype(dt.compute) @ p["w"].astype(dt.compute)
+    if "b" in p:
+        y = y + p["b"].astype(dt.compute)
+    return y
+
+
+def mlp_init(rng, dims: Tuple[int, ...], dt: Dtypes, hidden_axis: Optional[str] = None):
+    """Plain MLP tower (recsys style): dims = (in, h1, ..., out)."""
+    keys = jax.random.split(rng, len(dims) - 1)
+    return {
+        f"l{i}": dense_init(k, dims[i], dims[i + 1], dt, axes=(None, hidden_axis if i < len(dims) - 2 else None))
+        for i, k in enumerate(keys)
+    }
+
+
+def mlp(p, x, dt: Dtypes, act=jax.nn.relu, final_act=False):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x, dt)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rmsnorm_init(d, dt: Dtypes):
+    return {"scale": Param(jnp.ones((d,), dt.param), (None,))}
+
+
+def rmsnorm(p, x, dt: Dtypes, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt.compute)
+
+
+def layernorm_init(d, dt: Dtypes):
+    return {"scale": Param(jnp.ones((d,), dt.param), (None,)), "bias": Param(jnp.zeros((d,), dt.param), (None,))}
+
+
+def layernorm(p, x, dt: Dtypes, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt.compute)
+
+
+def embed_init(rng, vocab, d, dt: Dtypes, axes=("vocab", "embed")):
+    return {"table": Param(jax.random.normal(rng, (vocab, d), dt.param) * 0.02, axes)}
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Flash-style chunked GQA attention (training / prefill)
+# --------------------------------------------------------------------------
+
+
+def _block_mask(q_idx, k_idx, *, causal: bool, window: Optional[int]):
+    """[bq, bk] boolean mask for absolute positions q_idx x k_idx."""
+    m = jnp.ones((q_idx.shape[0], k_idx.shape[0]), bool)
+    if causal:
+        m &= q_idx[:, None] >= k_idx[None, :]
+    if window is not None:
+        m &= (q_idx[:, None] - k_idx[None, :]) < window
+    return m
+
+
+def gqa_attention(
+    q: jnp.ndarray,  # [B, S, Hq, hd]
+    k: jnp.ndarray,  # [B, S, Hkv, hd]
+    v: jnp.ndarray,  # [B, S, Hkv, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Grouped-query attention with online-softmax chunking (no [S,S] buffer).
+
+    Equivalent to softmax(q k^T / sqrt(hd) + mask) v with kv heads repeated
+    across query groups.  ``window`` adds a sliding-window constraint
+    (Gemma-style local attention).
+    """
+    if use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    groups = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    nq, nk = s // block_q, s // block_k
+    assert nq * block_q == s and nk * block_k == s, "seq must divide blocks"
+
+    # [B, Hkv, G, S, hd] query view grouped by kv head
+    qg = q.reshape(b, s, hkv, groups, hd).transpose(0, 2, 3, 1, 4)
+    kk = k.transpose(0, 2, 1, 3)  # [B, Hkv, S, hd]
+    vv = v.transpose(0, 2, 1, 3)
+
+    q_blocks = qg.reshape(b, hkv, groups, nq, block_q, hd).transpose(3, 0, 1, 2, 4, 5)
+    k_blocks = kk.reshape(b, hkv, nk, block_k, hd).transpose(2, 0, 1, 3, 4)
+    v_blocks = vv.reshape(b, hkv, nk, block_k, hd).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi):
+        qb, qidx = qi  # qb: [B, Hkv, G, bq, hd]
+        q_pos = qidx * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, ki):
+            m_prev, l_prev, acc = carry
+            kb, vb, kidx = ki
+            k_pos = kidx * block_k + jnp.arange(block_k)
+            s_blk = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qb, kb, preferred_element_type=jnp.float32
+            ) * scale
+            mask = _block_mask(q_pos, k_pos, causal=causal, window=window)
+            s_blk = jnp.where(mask[None, None, None], s_blk, -1e30)
+            m_new = jnp.maximum(m_prev, s_blk.max(-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, groups, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, groups, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, groups, block_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (k_blocks, v_blocks, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, out_blocks = jax.lax.scan(q_step, None, (q_blocks, jnp.arange(nq)))
+    # out_blocks: [nq, B, Hkv, G, bq, hd] -> [B, S, Hq, hd]
+    out = out_blocks.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, groups, s, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, hd)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, Hq, hd]
+    k_cache: jnp.ndarray,  # [B, S, Hkv, hd]
+    v_cache: jnp.ndarray,  # [B, S, Hkv, hd]
+    cache_len: jnp.ndarray,  # [] or [B] valid prefix length
+    *,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token decode attention against a KV cache.
+
+    For windowed layers callers pass a ring-buffer cache of size ``window``;
+    masking is by validity only.
+    """
+    b, s, hkv, hd = k_cache.shape
+    hq = q.shape[2]
+    groups = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, hkv, groups, hd)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qg.astype(jnp.float32) * scale, k_cache.astype(jnp.float32)
+    )
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.asarray(cache_len), (b,))[:, None]
+    if window is not None:
+        lo = jnp.broadcast_to(jnp.asarray(cache_len), (b,))[:, None] - window
+        valid &= pos[None, :] >= lo
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)

@@ -1,0 +1,245 @@
+"""FFN blocks: gated dense (SwiGLU) and top-k Mixture-of-Experts.
+
+MoE dispatch is sort-based with a fixed capacity per expert (GShard-style):
+tokens are ordered by assigned expert, positioned by a running offset, and
+scattered into an [E, capacity, D] buffer; overflow tokens are dropped
+(weighted combine makes the drop graceful).
+
+``dp_groups`` (the §Perf lever for the MoE cells): with G=1 the dispatch is
+GLOBAL — capacity counts every token in the batch and the buffer is a single
+[E, T*k*cf/E, D] array, which at pod scale is terabytes and forces SPMD to
+replicate/reduce it (the naive baseline).  With G = data-axis size, dispatch
+is LOCAL to each batch shard: the buffer becomes [G, E, T/G*k*cf/E, D] with G
+sharded over "data", so each device builds and computes only its own shard's
+expert slots — the production layout (cf. MaxText/GShard).  Semantics change
+only in where capacity overflow drops happen (per-shard instead of global).
+
+Sharding regimes (DESIGN.md):
+  * EP  (experts >= model-axis size, small d_ff — olmoe):  expert dim sharded
+    over "experts" -> all-to-all dispatch on the model axis.
+  * in-expert TP (few big experts — grok): d_ff sharded over "expert_mlp",
+    expert dim replicated -> no all-to-all, dense-TP collective pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.partitioning import Param, constrain
+from repro.nn.layers import Dtypes
+
+__all__ = ["ffn_init", "ffn_apply", "moe_init", "moe_apply", "moe_capacity"]
+
+
+def ffn_init(rng, d, ff, dt: Dtypes):
+    kg, ku, kd = jax.random.split(rng, 3)
+    s_in = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s_ff = 1.0 / jnp.sqrt(ff).astype(jnp.float32)
+    return {
+        "gate": Param(jax.random.normal(kg, (d, ff), dt.param) * s_in, ("embed", "mlp")),
+        "up": Param(jax.random.normal(ku, (d, ff), dt.param) * s_in, ("embed", "mlp")),
+        "down": Param(jax.random.normal(kd, (ff, d), dt.param) * s_ff, ("mlp", "embed")),
+    }
+
+
+def ffn_apply(p, x, dt: Dtypes):
+    xc = x.astype(dt.compute)
+    h = jax.nn.silu(xc @ p["gate"].astype(dt.compute)) * (xc @ p["up"].astype(dt.compute))
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ p["down"].astype(dt.compute)
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int, capacity_factor: float) -> int:
+    cap = int(n_tokens * top_k * capacity_factor / n_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+def moe_init(rng, d, ff, n_experts, dt: Dtypes):
+    kr, kg, ku, kd = jax.random.split(rng, 4)
+    s_in = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s_ff = 1.0 / jnp.sqrt(ff).astype(jnp.float32)
+    return {
+        "router": Param(jax.random.normal(kr, (d, n_experts), dt.param) * s_in, ("embed", None)),
+        "gate": Param(
+            jax.random.normal(kg, (n_experts, d, ff), dt.param) * s_in, ("experts", "embed", "expert_mlp")
+        ),
+        "up": Param(
+            jax.random.normal(ku, (n_experts, d, ff), dt.param) * s_in, ("experts", "embed", "expert_mlp")
+        ),
+        "down": Param(
+            jax.random.normal(kd, (n_experts, ff, d), dt.param) * s_ff, ("experts", "expert_mlp", "embed")
+        ),
+    }
+
+
+def moe_apply(
+    p,
+    x: jnp.ndarray,  # [B, S, D]
+    dt: Dtypes,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dp_groups: int = 1,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B,S,D], aux load-balancing loss)."""
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    t = b * s
+    g = max(1, dp_groups)
+    assert t % g == 0, "tokens must divide dp_groups"
+    tl = t // g  # tokens per dispatch group
+    cap = moe_capacity(tl, e, top_k, capacity_factor)
+
+    xt = x.reshape(g, tl, d).astype(dt.compute)
+    xt = constrain(xt, "exp_dp", None, None)
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(dt.compute)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # [G, Tl, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style aux loss (per group, then averaged)
+    one = jnp.zeros((g, e), jnp.float32)
+    gidx = jnp.repeat(jnp.arange(g), tl * top_k)
+    one = one.at[gidx, expert_idx.reshape(-1)].add(1.0) / (tl * top_k)
+    aux = e * jnp.mean(jnp.sum(probs.mean(1) * one, axis=-1))
+
+    # --- sort-based dispatch, independent per group --------------------------
+    flat_e = expert_idx.reshape(g, tl * top_k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # [G, Tl*K]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(sorted_e)
+    pos_in_e = jnp.arange(tl * top_k)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=-1)
+    keep = pos_in_e < cap
+    # linearized slot into a [G*E*cap] buffer (drop on overflow)
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)
+    gofs = (jnp.arange(g) * (e * cap))[:, None]
+    flat_slot = jnp.where(keep, slot + gofs, g * e * cap).reshape(-1)
+
+    src_token = order // top_k + (jnp.arange(g) * tl)[:, None]  # global token idx
+    xt_flat = xt.reshape(t, d)
+    buf = jnp.zeros((g * e * cap, d), dt.compute).at[flat_slot].set(
+        xt_flat[src_token.reshape(-1)], mode="drop"
+    )
+    buf = buf.reshape(g, e, cap, d)
+    # "exp_dp" -> data shards the dispatch group axis; "experts" -> model (EP)
+    buf = constrain(buf, "exp_dp", "experts", None, None)
+
+    # --- expert FFN (batched over groups x experts) ---------------------------
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", buf, p["gate"].astype(dt.compute))
+    ) * jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(dt.compute))
+    h = constrain(h, "exp_dp", "experts", None, "expert_mlp")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(dt.compute))
+    out_buf = constrain(out_buf, "exp_dp", "experts", None, None)
+    out_buf = out_buf.reshape(g * e * cap, d)
+
+    # --- weighted combine -----------------------------------------------------
+    gathered = jnp.take(out_buf, jnp.where(keep, slot + gofs, g * e * cap).reshape(-1),
+                        axis=0, mode="fill", fill_value=0)  # [G*Tl*K, D]
+    w = jnp.take_along_axis(gate_vals.reshape(g, tl * top_k), order, axis=-1)
+    contrib = gathered * w.reshape(-1)[:, None].astype(dt.compute)
+    out = jnp.zeros((t, d), dt.compute).at[src_token.reshape(-1)].add(contrib)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map MoE (§Perf olmoe it4 / grok_train it2): dispatch stays local to
+# each device; the ONLY communication is one psum of the [T_local, D] output
+# over the model axis per MoE layer.  Exploits x being replicated over the
+# model axis (it is — activations are constrained (batch, seq, None)):
+#   * EP   (E % n_model == 0): each model rank keeps its E/n experts, selects
+#     the local-expert (token, k) pairs from the replicated routing, runs its
+#     expert FFNs, scatters partial outputs, psums.
+#   * in-expert TP (ff % n_model == 0): every rank runs ALL experts on a ff/n
+#     slice; the down-projection contraction is completed by the same psum.
+# ---------------------------------------------------------------------------
+
+
+def moe_apply_shard_map(
+    p,
+    x: jnp.ndarray,  # [B, S, D]
+    dt: Dtypes,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    data_axes: tuple = ("data",),
+    model_axis: str = "model",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.partitioning import current_mesh
+
+    mesh = current_mesh()
+    assert mesh is not None, "moe_apply_shard_map needs an active mesh"
+    n_model = mesh.shape[model_axis]
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    t = b * s
+    xt = x.reshape(t, d).astype(dt.compute)
+
+    # routing is cheap: compute it replicated, outside the shard_map
+    logits = (xt @ p["router"].astype(dt.compute)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = (gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)).astype(dt.compute)
+    frac = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (t * top_k)
+    aux = e * jnp.sum(probs.mean(0) * frac)
+
+    ep = e % n_model == 0
+    ff = p["gate"].shape[-1]
+    if not ep:
+        assert ff % n_model == 0, "neither experts nor d_ff divide the model axis"
+
+    dp = P(data_axes)
+    wspec = P(model_axis, None, None) if ep else P(None, None, model_axis)
+    wspec_down = P(model_axis, None, None) if ep else P(None, model_axis, None)
+
+    def block(xt_l, gv_l, idx_l, gate_w, up_w, down_w):
+        tl = xt_l.shape[0]
+        e_l = gate_w.shape[0]
+        r = jax.lax.axis_index(model_axis)
+        flat_e = idx_l.reshape(-1)
+        w = gv_l.reshape(-1)
+        if ep:
+            lo = r * e_l
+            local = (flat_e >= lo) & (flat_e < lo + e_l)
+            le = jnp.where(local, flat_e - lo, e_l)  # e_l == drop bucket
+        else:
+            local = jnp.ones_like(flat_e, bool)
+            le = flat_e
+        cap = moe_capacity(tl, e, top_k, capacity_factor)
+        order = jnp.argsort(jnp.where(local, le, e_l), stable=True)
+        se = jnp.where(local, le, e_l)[order]
+        starts = jnp.searchsorted(se, jnp.arange(e_l), side="left")
+        pos = jnp.arange(tl * top_k) - starts[jnp.minimum(se, e_l - 1)]
+        keep = (se < e_l) & (pos < cap)
+        slot = jnp.where(keep, se * cap + pos, e_l * cap)
+        src = order // top_k
+        buf = jnp.zeros((e_l * cap, xt_l.shape[1]), xt_l.dtype).at[slot].set(
+            xt_l[src], mode="drop"
+        ).reshape(e_l, cap, -1)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gate_w)) * jnp.einsum(
+            "ecd,edf->ecf", buf, up_w
+        )
+        outb = jnp.einsum("ecf,efd->ecd", h, down_w).reshape(e_l * cap, -1)
+        gathered = jnp.take(outb, slot, axis=0, mode="fill", fill_value=0)
+        contrib = gathered * w[order][:, None]
+        out = jnp.zeros_like(xt_l).at[src].add(jnp.where(keep[:, None], contrib, 0))
+        return jax.lax.psum(out, model_axis)
+
+    fn = shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(dp, dp, dp, wspec, wspec, wspec_down),
+        out_specs=dp,
+        check_vma=False,
+    )
+    out = fn(
+        xt, gate_vals, expert_idx,
+        p["gate"].astype(dt.compute), p["up"].astype(dt.compute),
+        p["down"].astype(dt.compute),
+    )
+    return out.reshape(b, s, d), aux

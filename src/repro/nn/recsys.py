@@ -1,0 +1,160 @@
+"""Recsys interaction layers: FM, DIN target attention, DIEN (AU)GRU, MIND capsules.
+
+All layers take embeddings that upstream code fetched through the paper's
+``CachedEmbedding`` tier — the interaction math is cache-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.partitioning import Param
+from repro.nn.layers import Dtypes, dense, dense_init, mlp, mlp_init
+
+__all__ = [
+    "fm_interaction",
+    "din_attention_init",
+    "din_attention",
+    "gru_init",
+    "gru",
+    "augru",
+    "capsule_routing",
+]
+
+
+def fm_interaction(v: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
+    """2-way FM pooling via the O(nk) sum-square trick (Rendle ICDM'10).
+
+    v: [..., fields, dim] (embedding * feature value already folded in).
+    Returns [...]: sum_{i<j} <v_i, v_j>.
+    """
+    if use_pallas:
+        from repro.kernels.fm_interaction import ops as fm_ops
+
+        return fm_ops.fm_interaction(v)
+    s = v.sum(axis=-2)  # [..., dim]
+    sq = (v * v).sum(axis=-2)
+    return 0.5 * (s * s - sq).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# DIN: target attention over user behaviour history (arXiv:1706.06978)
+# ---------------------------------------------------------------------------
+
+
+def din_attention_init(rng, dim: int, attn_units: Tuple[int, ...], dt: Dtypes):
+    # input: [hist, target, hist-target, hist*target] -> 4*dim
+    return mlp_init(rng, (4 * dim,) + tuple(attn_units) + (1,), dt)
+
+
+def din_attention(
+    p,
+    hist: jnp.ndarray,  # [B, T, D] behaviour embeddings
+    target: jnp.ndarray,  # [B, D] candidate item embedding
+    mask: jnp.ndarray,  # [B, T] bool valid positions
+    dt: Dtypes,
+) -> jnp.ndarray:
+    """Weighted-sum pooling with MLP-scored target attention -> [B, D]."""
+    t = hist.shape[1]
+    tgt = jnp.broadcast_to(target[:, None, :], hist.shape)
+    feats = jnp.concatenate([hist, tgt, hist - tgt, hist * tgt], axis=-1)
+    scores = mlp(p, feats, dt, act=jax.nn.sigmoid)[..., 0]  # [B, T]
+    scores = jnp.where(mask, scores, -1e30)
+    # DIN uses un-normalized sigmoid-ish weights in the paper; softmax variant is
+    # the common open-source choice and is numerically safer.
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(mask, w, 0.0)
+    return jnp.einsum("bt,btd->bd", w, hist)
+
+
+# ---------------------------------------------------------------------------
+# DIEN: GRU interest extraction + AUGRU interest evolution (arXiv:1809.03672)
+# ---------------------------------------------------------------------------
+
+
+def gru_init(rng, d_in: int, d_h: int, dt: Dtypes):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s = 1.0 / jnp.sqrt(jnp.asarray(d_h, jnp.float32))
+    def m(k, i, o):
+        return jax.random.uniform(k, (i, o), dt.param, -s, s)
+    return {
+        "wx": Param(m(k1, d_in, 3 * d_h), (None, None)),  # update/reset/cand
+        "wh": Param(m(k2, d_h, 3 * d_h), (None, None)),
+        "b": Param(jnp.zeros((3 * d_h,), dt.param), (None,)),
+    }
+
+
+def _gru_cell(p, h, x, att: Optional[jnp.ndarray], dt: Dtypes):
+    d_h = h.shape[-1]
+    gates = x.astype(dt.compute) @ p["wx"].astype(dt.compute) + h @ p["wh"].astype(dt.compute) + p[
+        "b"
+    ].astype(dt.compute)
+    u = jax.nn.sigmoid(gates[..., :d_h])
+    r = jax.nn.sigmoid(gates[..., d_h : 2 * d_h])
+    # candidate uses reset-scaled h: recompute its slice with r*h
+    cand = jnp.tanh(
+        x.astype(dt.compute) @ p["wx"].astype(dt.compute)[:, 2 * d_h :]
+        + (r * h) @ p["wh"].astype(dt.compute)[:, 2 * d_h :]
+        + p["b"].astype(dt.compute)[2 * d_h :]
+    )
+    if att is not None:  # AUGRU: attention scales the update gate
+        u = u * att[..., None]
+    return (1.0 - u) * h + u * cand
+
+
+def gru(p, xs: jnp.ndarray, dt: Dtypes, att: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """xs [B, T, D] -> hidden states [B, T, H]; ``att`` [B, T] turns it into AUGRU."""
+    b, t, _ = xs.shape
+    d_h = p["wh"].shape[0]
+    h0 = jnp.zeros((b, d_h), dt.compute)
+
+    def step(h, inp):
+        x, a = inp
+        h = _gru_cell(p, h, x, a, dt)
+        return h, h
+
+    att_seq = att.T if att is not None else jnp.ones((t, b), dt.compute)
+    _, hs = jax.lax.scan(step, h0, (xs.transpose(1, 0, 2), att_seq))
+    return hs.transpose(1, 0, 2)
+
+
+def augru(p, xs, att, dt: Dtypes) -> jnp.ndarray:
+    return gru(p, xs, dt, att=att)
+
+
+# ---------------------------------------------------------------------------
+# MIND: behaviour-to-interest dynamic (capsule) routing (arXiv:1904.08030)
+# ---------------------------------------------------------------------------
+
+
+def capsule_routing(
+    hist: jnp.ndarray,  # [B, T, D] behaviour capsules
+    mask: jnp.ndarray,  # [B, T]
+    s_matrix: jnp.ndarray,  # [D, D] shared bilinear map
+    n_interests: int,
+    iters: int = 3,
+    routing_init: Optional[jnp.ndarray] = None,  # [B, K, T] fixed random logits
+) -> jnp.ndarray:
+    """B2I dynamic routing -> interest capsules [B, K, D].
+
+    MIND initializes routing logits randomly and keeps them fixed w.r.t.
+    gradient (stop_gradient inside the loop, per the paper).
+    """
+    b, t, d = hist.shape
+    u = jnp.einsum("btd,de->bte", hist, s_matrix)  # mapped behaviours
+    if routing_init is None:
+        routing_init = jnp.zeros((b, n_interests, t), u.dtype)
+    logits = routing_init
+
+    def squash(v):
+        n2 = jnp.sum(v * v, axis=-1, keepdims=True)
+        return (n2 / (1.0 + n2)) * v * jax.lax.rsqrt(n2 + 1e-9)
+
+    caps = jnp.zeros((b, n_interests, d), u.dtype)
+    for _ in range(iters):
+        w = jax.nn.softmax(jnp.where(mask[:, None, :], logits, -1e30), axis=-1)
+        caps = squash(jnp.einsum("bkt,btd->bkd", w, u))
+        logits = logits + jnp.einsum("bkd,btd->bkt", jax.lax.stop_gradient(caps), u)
+    return caps

@@ -1,0 +1,412 @@
+"""Config-driven decoder-only transformer covering the 5 assigned LM archs.
+
+Features: GQA (with optional KV-head replication so small-kv archs shard over
+a 16-way model axis), RoPE, RMSNorm, SwiGLU dense FFN or top-k MoE, local
+(sliding-window) / global attention layer patterns (Gemma-style), flash-style
+chunked attention, scan-over-layer-groups (one compiled group body regardless
+of depth) with optional remat, and KV-cache decode with ring buffers for
+windowed layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.partitioning import Param, constrain, split_params
+from repro.nn import layers as L
+from repro.nn import moe as M
+
+__all__ = ["TransformerConfig", "init_lm", "forward", "prefill", "decode_step", "init_decode_caches"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    ffn: str = "dense"  # "dense" | "moe"
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    pattern: Tuple[str, ...] = ("global",)  # attention kinds, cycled over layers
+    window: int = 1024
+    kv_repeat: int = 1  # replicate kv heads (sharding over model axis > kv heads)
+    rope_theta: float = 10000.0
+    dtypes: L.Dtypes = L.Dtypes()
+    remat: bool = True
+    block_q: int = 512
+    block_k: int = 512
+    use_pallas: bool = False
+    moe_dp_groups: int = 1  # MoE dispatch groups (G = data-axis size shards
+    # the dispatch buffer over 'exp_dp' -> data; see nn/moe.py + §Perf)
+    moe_impl: str = "global"  # "global" (baseline) | "shard_map" (local
+    # dispatch + single psum per layer — §Perf olmoe/grok_train)
+    kv_cache_int8: bool = False  # KVQuant-style int8 cache with per-position
+    # scales; scores/values use s8 x s8 -> s32 dots with scales factored out
+    # (beyond-paper perf lever — EXPERIMENTS.md §Perf grok decode)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def eff_kv_heads(self) -> int:
+        return self.n_kv_heads * self.kv_repeat
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_rem(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    def layer_kind(self, pos_in_pattern: int) -> str:
+        return self.pattern[pos_in_pattern]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(rng, cfg: TransformerConfig):
+    dt = cfg.dtypes
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / np.sqrt(cfg.d_model)
+    p = {
+        "ln_attn": L.rmsnorm_init(cfg.d_model, dt),
+        "wq": Param(jax.random.normal(ks[0], (cfg.d_model, hq, hd), dt.param) * s, ("embed", "heads", None)),
+        "wk": Param(jax.random.normal(ks[1], (cfg.d_model, hkv, hd), dt.param) * s, ("embed", "kv_heads", None)),
+        "wv": Param(jax.random.normal(ks[2], (cfg.d_model, hkv, hd), dt.param) * s, ("embed", "kv_heads", None)),
+        "wo": Param(
+            jax.random.normal(ks[3], (hq, hd, cfg.d_model), dt.param) * (1.0 / np.sqrt(hq * hd)),
+            ("heads", None, "embed"),
+        ),
+        "ln_ffn": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.ffn == "moe":
+        p["moe"] = M.moe_init(ks[4], cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+    else:
+        p["ffn"] = M.ffn_init(ks[4], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_lm(rng, cfg: TransformerConfig):
+    """Returns (params, logical-axes tree). Group params are stacked [G, ...]."""
+    return split_params(init_lm_tree(rng, cfg))
+
+
+def lm_param_axes(cfg: TransformerConfig):
+    """Logical-axes tree without allocating (eval_shape keeps Param aux data)."""
+    tree = jax.eval_shape(lambda: init_lm_tree(jax.random.PRNGKey(0), cfg))
+    return split_params(tree)[1]
+
+
+def init_lm_tree(rng, cfg: TransformerConfig):
+    k_embed, k_groups, k_rem, k_head = jax.random.split(rng, 4)
+    lp = len(cfg.pattern)
+
+    def group_init(rng):
+        return {f"p{i}": _layer_init(k, cfg) for i, k in enumerate(jax.random.split(rng, lp))}
+
+    tree = {"embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.dtypes)}
+    if cfg.n_groups > 0:
+        gkeys = jax.random.split(k_groups, cfg.n_groups)
+        stacked = jax.vmap(group_init)(gkeys)  # Param is a pytree node; axes survive
+        from repro.dist.partitioning import prepend_axis
+
+        tree["groups"] = prepend_axis(stacked, "layer_groups")
+    if cfg.n_rem:
+        tree["rem"] = {
+            f"p{i}": _layer_init(k, cfg)
+            for i, k in enumerate(jax.random.split(k_rem, cfg.n_rem))
+        }
+    tree["final_norm"] = L.rmsnorm_init(cfg.d_model, cfg.dtypes)
+    tree["head"] = {
+        "w": Param(
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab), cfg.dtypes.param)
+            * (1.0 / np.sqrt(cfg.d_model)),
+            ("embed", "vocab"),
+        )
+    }
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(p, x, cfg: TransformerConfig, kind: str, positions):
+    dt = cfg.dtypes
+    h = L.rmsnorm(p["ln_attn"], x, dt)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt.compute))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(dt.compute))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(dt.compute))
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads_eff", None)
+    v = constrain(v, "batch", "seq", "kv_heads_eff", None)
+    window = cfg.window if kind == "local" else None
+    o = L.gqa_attention(
+        q, k, v, causal=True, window=window,
+        block_q=cfg.block_q, block_k=cfg.block_k, use_pallas=cfg.use_pallas,
+    )
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt.compute))
+    return x + o, (k, v)
+
+
+def _ffn_block(p, x, cfg: TransformerConfig):
+    dt = cfg.dtypes
+    h = L.rmsnorm(p["ln_ffn"], x, dt)
+    if cfg.ffn == "moe":
+        if cfg.moe_impl == "shard_map":
+            from repro.dist.partitioning import resolve
+
+            dp = resolve("batch") or ()
+            dp = (dp,) if isinstance(dp, str) else tuple(dp)
+            out, aux = M.moe_apply_shard_map(
+                p["moe"], h, dt, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, data_axes=dp)
+        else:
+            out, aux = M.moe_apply(p["moe"], h, dt, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   dp_groups=cfg.moe_dp_groups)
+    else:
+        out, aux = M.ffn_apply(p["ffn"], h, dt), jnp.zeros((), jnp.float32)
+    return x + out, aux
+
+
+def _layer_fwd(p, x, cfg: TransformerConfig, kind: str, positions):
+    x, _ = _attn_block(p, x, cfg, kind, positions)
+    x, aux = _ffn_block(p, x, cfg)
+    x = constrain(x, "batch", "seq", None)
+    return x, aux
+
+
+def _group_fwd(gp, x, cfg: TransformerConfig, positions):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.pattern):
+        x, a = _layer_fwd(gp[f"p{i}"], x, cfg, kind, positions)
+        aux = aux + a
+    return x, aux
+
+
+def forward(params, cfg: TransformerConfig, tokens: jnp.ndarray):
+    """tokens [B, S] -> (logits [B, S, V], aux loss)."""
+    dt = cfg.dtypes
+    b, s = tokens.shape
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dt.compute)
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    body = functools.partial(_group_fwd, cfg=cfg, positions=positions)
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.n_groups > 0:
+        def scan_fn(carry, gp):
+            x, aux = carry
+            x, a = body(gp, x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), params["groups"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+    if cfg.n_rem:
+        for i in range(cfg.n_rem):
+            x, a = _layer_fwd(params["rem"][f"p{i}"], x, cfg, cfg.layer_kind(i), positions)
+            aux = aux + a
+    x = L.rmsnorm(params["final_norm"], x, dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"].astype(dt.compute))
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode with KV caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: TransformerConfig, kind: str, max_len: int) -> int:
+    return min(cfg.window, max_len) if kind == "local" else max_len
+
+
+def init_decode_caches(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    """Zeroed KV caches: {"groups": {f"p{i}": (k, v)}, "rem": ...}.
+
+    Group caches are stacked [G, B, S_kind, Hkv_eff, hd]; local layers get
+    ring buffers of size ``window``.
+    """
+    dtype = dtype or cfg.dtypes.compute
+    hd, hkv = cfg.head_dim, cfg.eff_kv_heads
+
+    def kv(s, lead=()):
+        shape = tuple(lead) + (batch, s, hkv, hd)
+        if cfg.kv_cache_int8:
+            sshape = tuple(lead) + (batch, s, hkv)
+            return (
+                jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32),
+            )
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    caches = {}
+    if cfg.n_groups > 0:
+        caches["groups"] = {
+            f"p{i}": kv(_cache_len(cfg, kind, max_len), (cfg.n_groups,))
+            for i, kind in enumerate(cfg.pattern)
+        }
+    if cfg.n_rem:
+        caches["rem"] = {
+            f"p{i}": kv(_cache_len(cfg, cfg.layer_kind(i), max_len))
+            for i in range(cfg.n_rem)
+        }
+    return caches
+
+
+def _decode_layer(p, x, cache, cfg: TransformerConfig, kind: str, pos):
+    """x [B,1,D]; cache (k,v) [B,S_k,H,hd]; pos scalar current position."""
+    dt = cfg.dtypes
+    h = L.rmsnorm(p["ln_attn"], x, dt)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt.compute))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(dt.compute))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(dt.compute))
+    posb = jnp.broadcast_to(pos[None], (x.shape[0], 1))
+    q = L.rope(q, posb, cfg.rope_theta)
+    k = L.rope(k, posb, cfg.rope_theta)
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+    if cfg.kv_cache_int8:
+        kc, vc, ks, vs = cache
+        s_cache = kc.shape[1]
+        idx = pos % s_cache if kind == "local" else pos
+        # quantize the new token's K/V per (batch, head)
+        kq, ksc = _quant_i8(k)
+        vq, vsc = _quant_i8(v)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kq, idx, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vq, idx, axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(ks, ksc, idx, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(vs, vsc, idx, axis=1)
+        kc = constrain(kc, "batch", "kv_seq", "kv_heads_eff", None)
+        vc = constrain(vc, "batch", "kv_seq", "kv_heads_eff", None)
+        valid = jnp.minimum(pos + 1, s_cache) if kind == "local" else pos + 1
+        o = _decode_attention_i8(q, kc, vc, ks, vs, valid)
+        new_cache = (kc, vc, ks, vs)
+    else:
+        kc, vc = cache
+        s_cache = kc.shape[1]
+        idx = pos % s_cache if kind == "local" else pos
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), idx, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), idx, axis=1)
+        kc = constrain(kc, "batch", "kv_seq", "kv_heads_eff", None)
+        vc = constrain(vc, "batch", "kv_seq", "kv_heads_eff", None)
+        valid = jnp.minimum(pos + 1, s_cache) if kind == "local" else pos + 1
+        o = L.decode_attention(q, kc, vc, valid, window=None)
+        new_cache = (kc, vc)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt.compute))
+    x = x + o
+    x, _ = _ffn_block(p, x, cfg)
+    return x, new_cache
+
+
+def _quant_i8(x: jnp.ndarray):
+    """[B,1,H,hd] -> (int8 values, f32 scale [B,1,H])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _decode_attention_i8(q, kc, vc, ks, vs, cache_len):
+    """int8-KV decode attention with scales factored OUT of the s8 dots.
+
+    scores_j = (q8 . k8_j) * qs * ks_j / sqrt(hd)           (s8 x s8 -> s32)
+    out_d    = (sum_j w8_j * v8_j[d]) * ws / 127             (s8 x s8 -> s32)
+    where w_j = softmax_j * vs_j is row-quantized to w8.  Both contractions
+    read int8 cache bytes — the point of the optimization; the only f32
+    arrays are [.., S] score/weight rows (1/hd of the cache).
+    """
+    b, s, hkv, hd = kc.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    inv_sqrt = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, hkv, g, hd)
+    q8, qs = _quant_i8(qg)  # scale over hd -> [b,hkv,g]
+    raw = jnp.einsum("bhgd,bshd->bhgs", q8.astype(jnp.int8), kc,
+                     preferred_element_type=jnp.int32)
+    scores = (
+        raw.astype(jnp.float32)
+        * qs[..., None]
+        * ks.transpose(0, 2, 1)[:, :, None, :]
+        * inv_sqrt
+    )
+    pos = jnp.arange(s)
+    validm = pos[None, :] < jnp.broadcast_to(jnp.asarray(cache_len), (b,))[:, None]
+    scores = jnp.where(validm[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    w = p * vs.transpose(0, 2, 1)[:, :, None, :]  # fold per-position V scales
+    wmax = jnp.maximum(jnp.abs(w).max(-1, keepdims=True), 1e-9)
+    w8 = jnp.clip(jnp.round(w / wmax * 127.0), -127, 127).astype(jnp.int8)
+    acc = jnp.einsum("bhgs,bshd->bhgd", w8, vc, preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * (wmax / 127.0)
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def decode_step(params, cfg: TransformerConfig, caches, token: jnp.ndarray, pos: jnp.ndarray):
+    """One decode step. token [B,1] int32; pos [] int32 (same for all rows).
+
+    Returns (logits [B, V], new caches).
+    """
+    dt = cfg.dtypes
+    x = jnp.take(params["embed"]["table"], token, axis=0).astype(dt.compute)
+    x = constrain(x, "batch", None, None)
+
+    new_caches = {}
+    if cfg.n_groups > 0:
+        def scan_fn(x, inp):
+            gp, gc = inp
+            new_gc = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, c = _decode_layer(gp[f"p{i}"], x, gc[f"p{i}"], cfg, kind, pos)
+                new_gc[f"p{i}"] = c
+            return x, new_gc
+
+        x, new_caches["groups"] = jax.lax.scan(
+            scan_fn, x, (params["groups"], caches["groups"])
+        )
+    if cfg.n_rem:
+        new_caches["rem"] = {}
+        for i in range(cfg.n_rem):
+            x, c = _decode_layer(
+                params["rem"][f"p{i}"], x, caches["rem"][f"p{i}"], cfg, cfg.layer_kind(i), pos
+            )
+            new_caches["rem"][f"p{i}"] = c
+    x = L.rmsnorm(params["final_norm"], x, dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"].astype(dt.compute))[:, 0]
+    logits = constrain(logits, "batch", "vocab")
+    return logits, new_caches
+
+
+def prefill(params, cfg: TransformerConfig, tokens: jnp.ndarray):
+    """Prefill forward: returns last-position logits (caches omitted — the
+    serve engine re-runs layers to fill caches when needed; dry-run shapes
+    only need the compute graph)."""
+    logits, _ = forward(params, cfg, tokens)
+    return logits[:, -1]

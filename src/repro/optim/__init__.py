@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adagrad,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+)
+from repro.optim.compression import Compressor
+from repro.optim import schedules

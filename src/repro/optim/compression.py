@@ -1,0 +1,85 @@
+"""Gradient compression for the data-parallel reduction, with error feedback.
+
+At 1000+ nodes the DP gradient all-reduce is the dominant inter-pod
+collective.  We provide two codecs:
+
+  * ``bf16``  — 2x: cast to bfloat16 before the reduction (no feedback needed
+    in practice, but we keep it for bit-accounting).
+  * ``int8``  — 4x: per-tensor symmetric int8 with a float scale, plus error
+    feedback (residual accumulation) so the quantization noise is unbiased
+    over steps [Seide et al. 2014; Karimireddy et al. 2019].
+
+Usage inside a jitted train step::
+
+    comp = Compressor("int8")
+    cstate = comp.init(grads_like)
+    grads_q, cstate = comp.encode(grads, cstate)   # before psum / pmean
+    grads_q = jax.lax.pmean(grads_q, "data")        # or rely on pjit's implicit reduce
+    grads   = comp.decode(grads_q)
+
+Under pjit the reduction is implicit; ``encode`` still shrinks the bytes that
+cross the wire because the all-reduce then runs on the low-precision dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Compressor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    codec: str = "none"  # none | bf16 | int8
+
+    def init(self, grads_like: Any) -> Any:
+        if self.codec != "int8":
+            return ()
+        return jax.tree_util.tree_map(lambda g: jnp.zeros_like(g, jnp.float32), grads_like)
+
+    def encode(self, grads: Any, state: Any) -> Tuple[Any, Any, Any]:
+        """Returns (payload, sideband, new_state).
+
+        ``payload`` is what crosses the wire (low precision); ``sideband``
+        carries per-tensor scales (tiny, fp32).
+        """
+        if self.codec == "none":
+            return grads, (), state
+        if self.codec == "bf16":
+            return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads), (), state
+
+        # int8 with error feedback
+        def enc(g, e):
+            gf = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            new_e = gf - q.astype(jnp.float32) * scale
+            return q, scale, new_e
+
+        enc_tree = jax.tree_util.tree_map(enc, grads, state)
+        is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+        payload = jax.tree_util.tree_map(lambda t: t[0], enc_tree, is_leaf=is3)
+        scales = jax.tree_util.tree_map(lambda t: t[1], enc_tree, is_leaf=is3)
+        new_state = jax.tree_util.tree_map(lambda t: t[2], enc_tree, is_leaf=is3)
+        return payload, scales, new_state
+
+    def decode(self, payload: Any, sideband: Any, target_like: Any) -> Any:
+        if self.codec == "none":
+            return payload
+        if self.codec == "bf16":
+            return jax.tree_util.tree_map(
+                lambda q, t: q.astype(t.dtype), payload, target_like
+            )
+        return jax.tree_util.tree_map(
+            lambda q, s, t: (q.astype(jnp.float32) * s).astype(t.dtype),
+            payload,
+            sideband,
+            target_like,
+        )
+
+    def wire_bytes(self, grads: Any) -> int:
+        per = {"none": 4, "bf16": 2, "int8": 1}[self.codec]
+        return sum(x.size * per for x in jax.tree_util.tree_leaves(grads))

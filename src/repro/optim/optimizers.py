@@ -1,0 +1,130 @@
+"""Optimizers (optax-free): SGD, Adam(W), Adagrad, row-wise Adagrad.
+
+API: ``opt = sgd(lr=...)``; ``state = opt.init(params)``;
+``params, state = opt.update(grads, state, params, step)``.
+LR may be a float or a schedule ``f(step) -> float``.
+
+Row-wise Adagrad (one accumulator per embedding row) is the standard
+industrial choice for huge tables; for *cached* tables the accumulator
+travels with the row through ``repro.core`` (see
+``CachedEmbeddingConfig.rowwise_adagrad``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "adagrad", "clip_by_global_norm", "global_norm"]
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step) -> jnp.ndarray:
+    return jnp.asarray(lr(step) if callable(lr) else lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (params, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), n
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        if momentum == 0.0:
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params,
+                grads,
+            )
+            return new_params, state
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), params, new_m
+        )
+        return new_params, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(
+    lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m2, v2
+
+        flat = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree_util.tree_map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def adagrad(lr: Schedule, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        new_acc = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)), state, grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, g, a: (
+                p.astype(jnp.float32) - lr_t * g.astype(jnp.float32) / (jnp.sqrt(a) + eps)
+            ).astype(p.dtype),
+            params,
+            grads,
+            new_acc,
+        )
+        return new_params, new_acc
+
+    return Optimizer(init, update)

@@ -1,0 +1,29 @@
+"""LR schedules (callables of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup_cosine", "inverse_sqrt"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return f
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return peak * jnp.minimum(s / max(warmup_steps, 1), jnp.sqrt(warmup_steps / s))
+
+    return f

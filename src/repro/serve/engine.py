@@ -1,0 +1,79 @@
+"""Batched serving engine: request micro-batching over a jitted score fn.
+
+The cache tier runs with ``writeback=False`` (read-only rows); misses still
+fault rows in, so a cold engine warms itself from traffic.  Requests are
+padded to the compiled batch size (recsys serve shapes are fixed) and
+latency/hit-rate stats are tracked per batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeEngine", "ServeStats"]
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    total_latency_s: float = 0.0
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+    def p(self, q: float) -> float:
+        return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "mean_ms": 1e3 * self.total_latency_s / max(self.batches, 1),
+            "p50_ms": 1e3 * self.p(50),
+            "p99_ms": 1e3 * self.p(99),
+        }
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        score_fn: Callable[[Any, Dict], Any],  # (state, batch) -> (scores, emb_state|None)
+        state: Any,
+        batch_size: int,
+        pad_example: Dict[str, np.ndarray],  # one padding row per field
+    ):
+        self.score_fn = jax.jit(score_fn)
+        self.state = state
+        self.batch_size = batch_size
+        self.pad_example = pad_example
+        self.stats = ServeStats()
+
+    def _pad(self, batch: Dict[str, np.ndarray], n: int) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for k, v in batch.items():
+            pad_rows = self.batch_size - n
+            if pad_rows > 0:
+                pad = np.broadcast_to(self.pad_example[k], (pad_rows,) + v.shape[1:])
+                v = np.concatenate([v, pad], axis=0)
+            out[k] = jnp.asarray(v)
+        return out
+
+    def score(self, batch: Dict[str, np.ndarray]) -> np.ndarray:
+        """Score up to ``batch_size`` requests; returns scores for real rows."""
+        n = len(next(iter(batch.values())))
+        assert n <= self.batch_size, "split upstream"
+        t0 = time.perf_counter()
+        scores, emb_state = self.score_fn(self.state, self._pad(batch, n))
+        scores = np.asarray(jax.device_get(scores))[:n]
+        if emb_state is not None:  # cache stays warm across requests
+            self.state = dict(self.state, emb=emb_state)
+        dt = time.perf_counter() - t0
+        self.stats.requests += n
+        self.stats.batches += 1
+        self.stats.total_latency_s += dt
+        self.stats.latencies.append(dt)
+        return scores

@@ -1,0 +1,2 @@
+from repro.train.checkpoint import Checkpointer, latest_step, restore, save
+from repro.train.trainer import StragglerDetector, Trainer, TrainerConfig

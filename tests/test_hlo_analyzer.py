@@ -1,0 +1,65 @@
+"""HLO roofline analyzer: trip-count-exact flops, touched-rows byte model.
+
+These tests also document WHY the analyzer exists: XLA's cost_analysis counts
+while bodies once and charges gathers their full operand.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analyzer import analyze_hlo
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_body_multiplied_by_trip_count():
+    w = jnp.ones((8, 128, 128))
+
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)
+        return y.sum()
+
+    comp = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    c = analyze_hlo(comp.as_text())
+    expect = 8 * 2 * 128**3
+    assert 0.8 * expect < c.flops < 1.3 * expect
+    # and XLA's own analysis indeed counts the body once (the motivation)
+    assert comp.cost_analysis()["flops"] < 0.3 * expect
+
+
+def test_gather_charges_touched_rows_not_table():
+    t = jnp.ones((1_000_000, 64))
+    idx = jnp.arange(1000, dtype=jnp.int32)
+    comp = _compile(lambda t, i: jnp.take(t, i, axis=0), t, idx)
+    c = analyze_hlo(comp.as_text())
+    touched = 2 * 1000 * 64 * 4 + 1000 * 4
+    assert c.bytes < 4 * touched  # not 256 MB
+    assert c.bytes >= 0.5 * touched
+
+
+def test_donated_scatter_charges_updates():
+    t = jnp.ones((1_000_000, 64))
+    idx = jnp.arange(1000, dtype=jnp.int32)
+    u = jnp.ones((1000, 64))
+    comp = jax.jit(lambda t, i, u: t.at[i].set(u), donate_argnums=(0,)).lower(t, idx, u).compile()
+    c = analyze_hlo(comp.as_text())
+    assert c.bytes < 8e6  # not 0.5 GB
+
+
+def test_matmul_flops_including_onednn_custom_call():
+    comp = _compile(lambda a, b: a @ b, jnp.ones((256, 512)), jnp.ones((512, 128)))
+    c = analyze_hlo(comp.as_text())
+    expect = 2 * 256 * 512 * 128
+    assert 0.9 * expect < c.flops < 1.2 * expect
+
+
+def test_batched_einsum_flops():
+    comp = _compile(
+        lambda a, b: jnp.einsum("bik,bkj->bij", a, b),
+        jnp.ones((4, 64, 32), jnp.bfloat16), jnp.ones((4, 32, 16), jnp.bfloat16),
+    )
+    c = analyze_hlo(comp.as_text())
+    expect = 2 * 4 * 64 * 32 * 16
+    assert 0.8 * expect < c.flops < 1.5 * expect

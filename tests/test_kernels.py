@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.fm_interaction.ops import fm_interaction
+from repro.kernels.fm_interaction.ref import fm_interaction_naive, fm_interaction_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@pytest.mark.parametrize("v,d,n,s", [(64, 512, 40, 10), (128, 1024, 100, 7), (32, 256, 16, 16)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_embedding_bag_sweep(v, d, n, s, dtype, combiner):
+    rng = np.random.default_rng(v + n)
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32)).astype(dtype)
+    seg = jnp.asarray(np.sort(rng.integers(0, s, n)).astype(np.int32))
+    ids = jnp.asarray(rng.integers(-1, v, n).astype(np.int32))
+    mb = int(np.bincount(np.asarray(seg), minlength=s).max())
+    out = embedding_bag(table, ids, seg, s, combiner, max_bag=mb)
+    ref = embedding_bag_ref(table, ids, seg, s, combiner)
+    tol = 1e-5 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("b,f,d", [(64, 39, 10), (1000, 26, 16), (128, 8, 128), (1, 4, 4)])
+def test_fm_interaction_sweep(b, f, d):
+    rng = np.random.default_rng(b + f)
+    v = jnp.asarray(rng.normal(size=(b, f, d)).astype(np.float32))
+    out = fm_interaction(v)
+    ref = fm_interaction_ref(v)
+    naive = fm_interaction_naive(v)
+    # fp32 reduction-order noise scales with the output magnitude
+    scale = float(np.abs(np.asarray(ref)).max()) + 1.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-5 * scale)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(naive), rtol=1e-3, atol=1e-5 * scale)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,causal,window",
+    [
+        (2, 4, 2, 512, 64, True, None),
+        (1, 4, 4, 512, 64, True, 128),
+        (2, 8, 2, 256, 32, False, None),
+        (1, 2, 1, 1024, 128, True, 256),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, s, d, causal, window, dtype):
+    rng = np.random.default_rng(s + hq)
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)).astype(np.float32)).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)).astype(np.float32)).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)).astype(np.float32)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal, window,
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_attention_grad_matches_ref_grad():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 256, 2, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 32)).astype(np.float32))
+
+    def lk(q_):
+        return flash_attention(q_, k, v).sum()
+
+    def lr(q_):
+        return attention_ref(
+            q_.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), True, None
+        ).sum()
+
+    gk = jax.grad(lk)(q)
+    gr = jax.grad(lr)(q)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+def test_nn_embedding_bag_pallas_path_matches_xla_path():
+    from repro.nn.embedding_bag import embedding_bag as nn_bag
+
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(50, 512)).astype(np.float32))
+    ids = jnp.asarray(np.array([3, 7, -1, 4, 9, 9], np.int32))
+    seg = jnp.asarray(np.array([0, 0, 1, 1, 2, 2], np.int32))
+    a = nn_bag(table, ids, seg, 3, use_pallas=False)
+    b = nn_bag(table, ids, seg, 3, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,150 @@
+"""Multi-device behaviour (8 fake CPU devices in a subprocess so the main
+test process keeps 1 device): small-mesh dry-run lower+compile, sharded
+cache-embedding step, and topology-changing (elastic) checkpoint restore."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_small_mesh_lm_cell_compiles_with_collectives():
+    out = run_sub("""
+        import jax, json
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        import repro.dist.partitioning as dist
+        from repro.launch.mesh import make_mesh
+        from repro.launch import roofline
+        from repro.models.lm import LMModel
+        from repro.nn.transformer import TransformerConfig
+        from repro.nn.layers import Dtypes
+        from repro.configs.base import lm_cell
+        from repro.configs.lm_common import lm_rules
+
+        cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                                d_ff=128, vocab=256, kv_repeat=2,
+                                dtypes=Dtypes(jnp.float32, jnp.float32),
+                                block_q=16, block_k=16)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = lm_rules(mesh.axis_names, "train", tp_kv_param=False)  # kv=2 < tp=4
+        model = LMModel(cfg)
+        cell = lm_cell("tiny", "train", model, cfg, "train", 8, 64, rules)
+        with dist.axis_rules(mesh, cell.rules):
+            in_sh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), cell.in_specs,
+                is_leaf=lambda x: isinstance(x, P))
+            compiled = jax.jit(cell.step_fn, in_shardings=in_sh,
+                               donate_argnums=cell.donate).lower(*cell.args).compile()
+        rec = roofline.analyze_compiled(compiled)
+        assert rec["flops_per_device"] > 0
+        assert rec["wire_bytes_per_device"] > 0, "expected collectives on a 2x4 mesh"
+        print("COLLS", sorted(rec["collectives"]))
+    """)
+    assert "COLLS" in out and "all-" in out
+
+
+def test_sharded_cached_embedding_step_matches_single_device():
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.core import cached_embedding as ce
+
+        cfg = ce.CachedEmbeddingConfig(vocab_sizes=(512,), dim=16,
+                                       ids_per_step=64, cache_ratio=0.25)
+        st = ce.init_state(jax.random.PRNGKey(0), cfg)
+        ids = jax.random.randint(jax.random.PRNGKey(1), (64,), 0, 512).astype(jnp.int32)
+
+        # single-device reference
+        st1, slots1 = ce.prepare_ids(cfg, st, ids)
+        ref = ce.gather_slots(st1, slots1)
+
+        # column-TP over a (2,4) mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        specs = ce.shard_specs(cfg, mode="column")
+        sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                    is_leaf=lambda x: isinstance(x, P))
+        st_sh = jax.device_put(st, sh)
+        f = jax.jit(lambda s, i: ce.prepare_ids(cfg, s, i),
+                    in_shardings=(sh, NamedSharding(mesh, P("data"))))
+        st2, slots2 = f(st_sh, ids)
+        got = ce.gather_slots(st2, slots2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=0, atol=0)
+        print("SHARDED_EXACT")
+    """)
+    assert "SHARDED_EXACT" in out
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    out = run_sub(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.train import checkpoint as C
+
+        tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+        mesh_a = make_mesh((2,), ("data",))
+        sharded = jax.device_put(tree, jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh_a, P("data")), tree))
+        C.save(r"{tmp_path}", 11, sharded)
+
+        # restore onto a DIFFERENT topology (8-way)
+        mesh_b = make_mesh((8,), ("data",))
+        like = {{"w": np.zeros((8, 8), np.float32)}}
+        restored, step = C.restore(r"{tmp_path}", like)
+        out = jax.device_put(restored, jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh_b, P("data")), restored))
+        assert step == 11
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.arange(64, dtype=np.float32).reshape(8, 8))
+        assert len(out["w"].sharding.device_set) == 8
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out
+
+
+def test_host_offload_slow_tier_compiles():
+    """DESIGN.md claim: on real TPU the full table lives in host DRAM.  The
+    program must compile with ``pinned_host`` placement of the slow tier
+    (the CPU backend folds host memory into device, so the byte split is
+    verified on TPU; well-formedness is verified here)."""
+    out = run_sub("""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        import repro.dist.partitioning as dist
+        from repro.launch.mesh import make_mesh
+        from repro.core import cached_embedding as ce
+
+        cfg = ce.CachedEmbeddingConfig(vocab_sizes=(4096,), dim=16,
+                                       ids_per_step=64, cache_ratio=0.1)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        specs = ce.shard_specs(cfg, mode="column")
+        sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                    is_leaf=lambda x: isinstance(x, P))
+        sh.full["weight"] = sh.full["weight"].with_memory_kind("pinned_host")
+        st = jax.eval_shape(lambda: ce.init_state(jax.random.PRNGKey(0), cfg, warm=False))
+        ids = jax.ShapeDtypeStruct((64,), jax.numpy.int32)
+        compiled = jax.jit(lambda s, i: ce.prepare_ids(cfg, s, i),
+                           in_shardings=(sh, NamedSharding(mesh, P("data")))
+                           ).lower(st, ids).compile()
+        print("HOST_OFFLOAD_COMPILES")
+    """)
+    assert "HOST_OFFLOAD_COMPILES" in out

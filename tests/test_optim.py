@@ -1,0 +1,82 @@
+"""Optimizers, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers as O
+from repro.optim import schedules
+from repro.optim.compression import Compressor
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: O.sgd(0.1), lambda: O.sgd(0.05, momentum=0.9),
+    lambda: O.adam(0.2), lambda: O.adamw(0.2, weight_decay=0.0),
+    lambda: O.adagrad(0.9),
+])
+def test_optimizers_converge_on_quadratic(make):
+    opt = make()
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    state = opt.init(params)
+    for i in range(200):
+        grads = jax.grad(quad_loss)(params)
+        params, state = opt.update(grads, state, params, jnp.int32(i))
+    assert float(quad_loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, n = O.clip_by_global_norm(g, 1.0)
+    assert float(n) == pytest.approx(20.0)
+    assert float(O.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    small = {"a": jnp.full((4,), 0.01)}
+    same, _ = O.clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 0.01, rtol=1e-6)
+
+
+def test_schedules():
+    c = schedules.constant(0.5)
+    assert float(c(jnp.int32(100))) == 0.5
+    w = schedules.linear_warmup_cosine(1.0, 10, 100)
+    assert float(w(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(w(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    s = schedules.inverse_sqrt(1.0, 100)
+    assert float(s(jnp.int32(100))) == pytest.approx(1.0)
+    assert float(s(jnp.int32(400))) == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("codec,factor", [("none", 4), ("bf16", 2), ("int8", 1)])
+def test_compressor_wire_bytes(codec, factor):
+    comp = Compressor(codec)
+    g = {"a": jnp.zeros((100,), jnp.float32)}
+    assert comp.wire_bytes(g) == 100 * factor
+
+
+def test_int8_error_feedback_convergence():
+    """Quantization noise must not stall convergence (error feedback)."""
+    comp = Compressor("int8")
+    opt = O.sgd(0.05)
+    params = {"w": jnp.zeros((8,))}
+    opt_state = opt.init(params)
+    comp_state = comp.init(params)
+    for i in range(300):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - 1.0) ** 2))(params)
+        payload, sideband, comp_state = comp.encode(grads, comp_state)
+        grads_q = comp.decode(payload, sideband, grads)
+        params, opt_state = opt.update(grads_q, opt_state, params, jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(params["w"]), 1.0, atol=1e-2)
+
+
+def test_int8_roundtrip_bounded_error():
+    comp = Compressor("int8")
+    g = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(256,)).astype(np.float32))}
+    st = comp.init(g)
+    payload, sideband, st = comp.encode(g, st)
+    assert payload["a"].dtype == jnp.int8
+    back = comp.decode(payload, sideband, g)
+    scale = float(jnp.abs(g["a"]).max()) / 127
+    assert float(jnp.abs(back["a"] - g["a"]).max()) <= scale * 0.5 + 1e-6

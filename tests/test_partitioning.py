@@ -1,0 +1,52 @@
+"""Logical-axis partitioning helpers."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.dist.partitioning as dist
+
+
+def test_constrain_noop_without_scope():
+    x = jnp.ones((4, 4))
+    y = dist.constrain(x, "batch", None)
+    assert (y == x).all()
+
+
+def test_spec_resolution():
+    with dist.axis_rules(None, {"batch": ("pod", "data"), "mlp": "model"}):
+        assert dist.spec("batch", None, "mlp") == P(("pod", "data"), None, "model")
+        assert dist.spec("unknown") == P(None)
+
+
+def test_param_split_and_specs():
+    tree = {
+        "dense": {"w": dist.Param(jnp.ones((4, 8)), ("embed", "mlp"))},
+        "scale": dist.Param(jnp.ones((8,)), (None,)),
+    }
+    values, axes = dist.split_params(tree)
+    assert values["dense"]["w"].shape == (4, 8)
+    with dist.axis_rules(None, {"embed": "data", "mlp": "model"}):
+        specs = dist.specs_for_axes(axes)
+    assert specs["dense"]["w"] == P("data", "model")
+    assert specs["scale"] == P(None)
+
+
+def test_param_is_pytree_and_stackable():
+    def init(key):
+        return {"w": dist.Param(jax.random.normal(key, (3,)), ("mlp",))}
+
+    stacked = jax.vmap(init)(jax.random.split(jax.random.PRNGKey(0), 4))
+    stacked = dist.prepend_axis(stacked, "layer_groups")
+    values, axes = dist.split_params(stacked)
+    assert values["w"].shape == (4, 3)
+    assert axes["w"] == ("layer_groups", "mlp")
+
+
+def test_eval_shape_preserves_axes():
+    def init():
+        return {"w": dist.Param(jnp.zeros((2, 3)), ("a", "b"))}
+
+    shaped = jax.eval_shape(init)
+    values, axes = dist.split_params(shaped)
+    assert values["w"].shape == (2, 3)
+    assert axes["w"] == ("a", "b")

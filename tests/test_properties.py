@@ -1,0 +1,107 @@
+"""Hypothesis property tests for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cached_embedding as ce
+from repro.core import freq
+from repro.core.policies import Policy
+from repro.kernels.fm_interaction.ref import fm_interaction_naive, fm_interaction_ref
+from repro.nn.indexing import take_rows
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    ids=st.lists(st.integers(min_value=0, max_value=39), min_size=1, max_size=30),
+    policy=st.sampled_from(list(Policy)),
+    inverse_protect=st.booleans(),
+)
+@settings(**SETTINGS)
+def test_cache_lookup_exact_for_any_stream(ids, policy, inverse_protect):
+    """Invariant: for ANY id stream, policy, and backlist implementation
+    (paper isin vs inverse-map scatter), cached lookup == dense."""
+    cfg = ce.CachedEmbeddingConfig(
+        vocab_sizes=(40,), dim=4, ids_per_step=6, cache_ratio=0.25,
+        buffer_rows=3, policy=policy, protect_via_inverse=inverse_protect,
+    )
+    state = ce.init_state(jax.random.PRNGKey(0), cfg)
+    chunks = [ids[i : i + 6] for i in range(0, len(ids), 6)]
+    for chunk in chunks:
+        arr = np.full((6,), -1, np.int32)
+        arr[: len(chunk)] = chunk
+        state, slots = ce.prepare_ids(cfg, state, jnp.asarray(arr))
+        got = ce.gather_slots(state, slots)
+        flushed = ce.flush_state(cfg, state)
+        rows = flushed.idx_map[jnp.maximum(jnp.asarray(arr), 0)]
+        want = np.where(
+            (arr >= 0)[:, None], np.asarray(flushed.full["weight"])[np.asarray(rows)], 0
+        )
+        np.testing.assert_allclose(np.asarray(got), want, rtol=0, atol=0)
+
+
+@given(counts=st.lists(st.integers(min_value=0, max_value=1000), min_size=2, max_size=64))
+@settings(**SETTINGS)
+def test_freq_maps_are_inverse_permutations(counts):
+    stats = freq.build_freq_stats(np.asarray(counts))
+    n = len(counts)
+    np.testing.assert_array_equal(np.sort(stats.idx_map), np.arange(n))
+    np.testing.assert_array_equal(stats.idx_map[stats.inv_map], np.arange(n))
+    # ranking is by descending count
+    ranked = np.asarray(counts)[stats.inv_map]
+    assert (np.diff(ranked) <= 0).all()
+
+
+@given(
+    b=st.integers(1, 8), f=st.integers(2, 12), d=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_fm_sum_square_trick_equals_naive(b, f, d, seed):
+    v = jnp.asarray(np.random.default_rng(seed).normal(size=(b, f, d)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(fm_interaction_ref(v)), np.asarray(fm_interaction_naive(v)),
+        rtol=5e-4, atol=5e-4,
+    )
+
+
+@given(
+    n=st.integers(1, 20),
+    idx=st.lists(st.integers(min_value=-3, max_value=25), min_size=1, max_size=16),
+)
+@settings(**SETTINGS)
+def test_take_rows_negative_is_zero(n, idx):
+    table = jnp.asarray(np.random.default_rng(0).normal(size=(n, 3)).astype(np.float32))
+    out = np.asarray(take_rows(table, jnp.asarray(idx)))
+    for lane, i in enumerate(idx):
+        if 0 <= i < n:
+            np.testing.assert_allclose(out[lane], np.asarray(table)[i])
+        else:
+            np.testing.assert_array_equal(out[lane], 0)
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    buffer_rows=st.integers(1, 16),
+    k=st.integers(1, 12),
+)
+@settings(**SETTINGS)
+def test_transmitter_any_buffer_size(seed, buffer_rows, k):
+    from repro.core import transmitter
+
+    rng = np.random.default_rng(seed)
+    src = {"w": jnp.asarray(rng.normal(size=(30, 3)).astype(np.float32))}
+    dst = {"w": jnp.zeros((15, 3))}
+    src_idx = rng.integers(-1, 30, k).astype(np.int32)
+    dst_idx = rng.permutation(15)[:k].astype(np.int32)
+    active = src_idx >= 0
+    out = transmitter.move_rows(
+        src, dst, jnp.asarray(src_idx), jnp.asarray(dst_idx), jnp.asarray(active),
+        buffer_rows=buffer_rows,
+    )
+    ref = np.zeros((15, 3), np.float32)
+    for s_, d_, a_ in zip(src_idx, dst_idx, active):
+        if a_:
+            ref[d_] = np.asarray(src["w"])[s_]
+    np.testing.assert_allclose(np.asarray(out["w"]), ref)

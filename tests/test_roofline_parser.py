@@ -1,0 +1,45 @@
+"""HLO collective parser + roofline-term arithmetic."""
+import numpy as np
+
+from repro.launch import roofline as R
+
+HLO = """
+HloModule test
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024] %x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[512]{0} all-reduce(f32[512] %y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(f32[1024,32] %z), replica_groups=[16,16]<=[256], dimensions={0}
+  %a2a = bf16[8,64]{1,0} all-to-all(bf16[8,64] %w), replica_groups=[32,8]<=[256]
+  %cp = f32[128]{0} collective-permute(f32[128] %v), source_target_pairs={{0,1}}
+  %agd = (f32[4], f32[4]) all-gather-start(f32[1] %q), replica_groups={{0,1,2,3}}
+  %agd2 = f32[4] all-gather-done(%agd)
+"""
+
+
+def test_parse_collectives():
+    stats = {c.op: c for c in R.parse_collectives(HLO)}
+    assert stats["all-gather"].count == 2  # ag + ag-start (done skipped)
+    ag = stats["all-gather"]
+    # first all-gather: result 16*1024*2 bytes, group 16 -> wire = rb*15/16
+    assert ag.result_bytes == 16 * 1024 * 2 + 2 * 4 * 4  # incl the tuple start op
+    ar = stats["all-reduce"]
+    assert ar.result_bytes == 512 * 4
+    assert np.isclose(ar.wire_bytes, 2 * 512 * 4 * 3 / 4)
+    rs = stats["reduce-scatter"]
+    assert rs.result_bytes == 64 * 32 * 4
+    assert np.isclose(rs.wire_bytes, 64 * 32 * 4 * 15)
+    assert stats["all-to-all"].count == 1
+    assert stats["collective-permute"].wire_bytes == 128 * 4
+
+
+def test_roofline_terms():
+    t = R.roofline_terms(197e12, 819e9, 50e9)  # exactly 1s / 1s / 1s
+    assert np.isclose(t["compute_s"], 1.0) and np.isclose(t["memory_s"], 1.0)
+    assert np.isclose(t["collective_s"], 1.0)
+    t2 = R.roofline_terms(197e12 * 0.5, 819e9, 0.0)
+    assert t2["dominant"] == "memory_s"
+    assert np.isclose(t2["roofline_fraction"], 0.5)
+
+
+def test_group_size_formats():
+    assert R._group_size("replica_groups=[4,64]<=[256]") == 64
+    assert R._group_size("replica_groups={{0,1,2,3,4,5,6,7}}") == 8
