@@ -1,6 +1,8 @@
 """Cache-bookkeeping overhead (the paper's claim: 'cache-related operations
-... introduce very little overhead'): prepare_ids cost vs the raw lookup, and
-transmitter cost vs buffer size."""
+... introduce very little overhead'): prepare_ids cost vs the raw lookup,
+transmitter cost vs buffer size, and the collection-level comparison —
+planner-driven mixed placement (DEVICE + per-table caches) vs the paper's
+single shared arena."""
 from __future__ import annotations
 
 import jax
@@ -9,6 +11,7 @@ import numpy as np
 
 from benchmarks.common import Table, timeit
 from repro.core import cached_embedding as ce
+from repro.core import collection as col
 
 
 def bench_cache_overhead(t: Table):
@@ -44,4 +47,40 @@ def bench_cache_overhead(t: Table):
               f"rounds={-(-cfg_b.unique_size//buf)}")
 
 
-ALL = [bench_cache_overhead]
+def bench_collection_placement(t: Table):
+    """Mixed placement vs single arena: DEVICE tables skip Algorithm 1
+    entirely, so the prepare+gather path gets cheaper as the planner promotes
+    more tables — the planner's whole value proposition, measured."""
+    dim, batch = 64, 16384
+    vocabs = {"huge": 1_000_000, "mid": 100_000, "small": 20_000, "tiny": 4_096}
+    tables = [
+        col.TableConfig(n, v, dim, ids_per_step=batch, cache_ratio=0.05)
+        for n, v in vocabs.items()
+    ]
+    rng = np.random.default_rng(0)
+    fb = col.FeatureBatch(ids={
+        n: jnp.asarray((rng.zipf(1.4, batch) % v).astype(np.int32))
+        for n, v in vocabs.items()
+    })
+
+    def run(coll, tag):
+        state = coll.init(jax.random.PRNGKey(0))
+
+        def step(state, fb):
+            state, addr = coll.prepare(state, fb)
+            rows = coll.gather(coll.weights(state), addr, fb)
+            return state, rows
+
+        stepj = jax.jit(step)
+        state, _ = stepj(state, fb)  # warm
+        sec = timeit(lambda: stepj(state, fb))
+        dev = coll.device_bytes()["device_total"]
+        t.add(f"cacheops/collection_{tag}", sec * 1e6,
+              f"device_bytes={dev/1e6:.1f}MB plan={coll.plan.summary()}")
+
+    run(col.EmbeddingCollection.create(tables, cache_ratio=0.05), "single_arena")
+    budget = int(120e6)  # promotes small+tiny+mid, caches huge
+    run(col.EmbeddingCollection.create(tables, budget_bytes=budget), "planned_mixed")
+
+
+ALL = [bench_cache_overhead, bench_collection_placement]

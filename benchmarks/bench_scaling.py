@@ -17,7 +17,6 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.mesh import make_mesh
-from repro.core import cached_embedding as ce
 from repro.data import synth
 from repro.models.dlrm import DLRM, DLRMConfig
 import repro.dist.partitioning as dist
@@ -37,7 +36,7 @@ if n_dev == 1:
 else:
     mesh = make_mesh((n_dev // 2 if n_dev > 2 else 1, 2) if n_dev > 2 else (1, n_dev),
                      ("data", "model"))
-    especs = ce.shard_specs(model.emb_cfg_train, mode="column")
+    especs = model.collection.shard_specs(mode="column")
     sh = lambda s: jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), s,
                                           is_leaf=lambda x: isinstance(x, P))
     state_specs = {{

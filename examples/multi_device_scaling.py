@@ -14,7 +14,6 @@ import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 import repro.dist.partitioning as dist  # noqa: E402
-from repro.core import cached_embedding as ce  # noqa: E402
 from repro.data import synth  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models.dlrm import DLRM, DLRMConfig  # noqa: E402
@@ -27,7 +26,7 @@ state = model.init(jax.random.PRNGKey(0))
 mesh = make_mesh((2, 4), ("data", "model"))
 print("mesh:", mesh)
 
-emb_specs = ce.shard_specs(model.emb_cfg_train, mode="column")
+emb_specs = model.collection.shard_specs(mode="column")
 sh = lambda t: jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), t,
                                       is_leaf=lambda x: isinstance(x, P))
 state_specs = {
@@ -49,5 +48,7 @@ with dist.axis_rules(mesh, {"batch": ("data",)}):
         print(f"step {i}: loss={float(metrics['loss']):.4f} "
               f"hit_rate={float(metrics['hit_rate']):.2%}")
 
-w = state["emb"].cache.cached_rows["weight"]
+from repro.core.collection import SHARED_ARENA  # noqa: E402
+
+w = state["emb"].slabs[SHARED_ARENA].cache.cached_rows["weight"]
 print("cached weight sharding:", w.sharding.spec, "-> dim split over 'model' (paper column-TP)")

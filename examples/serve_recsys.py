@@ -32,7 +32,8 @@ for i in range(8):
     b = synth.recsys_batch(cfg.n_items, cfg.n_users, cfg.seq_len, 200, seed=1, step=i)
     scores = engine.score(b)
 print("online scoring:", engine.stats.summary())
-print(f"cache hit rate after traffic: {float(engine.state['emb'].cache.hit_rate()):.1%}")
+hit = float(model.collection.metrics(engine.state["emb"])["hit_rate"])
+print(f"cache hit rate after traffic: {hit:.1%}")
 
 # ---- retrieval: one user against 100k candidates (batched dot, no loop) ---
 b = synth.recsys_batch(cfg.n_items, cfg.n_users, cfg.seq_len, 1, seed=2, step=0)

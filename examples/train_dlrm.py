@@ -1,6 +1,11 @@
 """End-to-end driver: train the paper's DLRM on a synthetic Criteo-like
-stream for a few hundred steps with the full production stack — cached
-embedding, async checkpointing, auto-resume, straggler detection.
+stream for a few hundred steps with the full production stack — planner-driven
+embedding collection, async checkpointing, auto-resume, straggler detection.
+
+With ``--device-budget-mb`` the ``PlacementPlanner`` promotes small/hot
+tables to DEVICE residency and serves the rest through per-table caches
+(mixed placement); without it every table shares one cache arena — the
+paper's original layout.
 
 Kill it mid-run and start it again: it resumes exactly (same loss curve).
 
@@ -10,9 +15,7 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import cached_embedding as ce
 from repro.core import freq
 from repro.data import synth
 from repro.models.dlrm import DLRM, DLRMConfig
@@ -25,31 +28,35 @@ def main():
     ap.add_argument("--batch", type=int, default=1024)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_dlrm_ckpt")
     ap.add_argument("--cache-ratio", type=float, default=0.015)
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="planner budget; omit for the paper's single-arena mode")
     args = ap.parse_args()
 
     cfg = DLRMConfig(
         vocab_sizes=(200_000, 100_000, 50_000, 20_000, 10_000),
         embed_dim=32, batch_size=args.batch, cache_ratio=args.cache_ratio,
         lr=0.3, bottom_mlp=(128, 64, 32), top_mlp=(128, 64),
+        device_budget_bytes=(
+            int(args.device_budget_mb * 1e6) if args.device_budget_mb else None
+        ),
     )
     model = DLRM(cfg)
+    print("placement plan:", model.collection.plan.summary())
     spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
 
     # static module: id frequency scan (paper §4.2)
-    counts = freq.collect_counts(synth.count_stream(spec, args.batch, 20, seed=0), model.emb_cfg_train.vocab)
+    total_vocab = sum(cfg.vocab_sizes)
+    counts = freq.collect_counts(synth.count_stream(spec, args.batch, 20, seed=0), total_vocab)
 
     def make_batch(step):
         return {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, args.batch, 0, step).items()}
-
-    def flush(state):
-        return dict(state, emb=ce.flush_state(model.emb_cfg_train, state["emb"]))
 
     trainer = Trainer(
         TrainerConfig(max_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50),
         init_fn=lambda: model.init(jax.random.PRNGKey(0), counts=counts),
         step_fn=jax.jit(model.train_step),
         make_batch=make_batch,
-        flush_fn=flush,
+        flush_fn=model.flush,
         on_straggler=lambda s, dt: print(f"[straggler] step {s}: {dt*1e3:.0f} ms"),
     )
     state = trainer.run()
@@ -60,9 +67,10 @@ def main():
         print(f"loss  {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
         print(f"auc   {h[0].get('auc', 0):.4f} -> {h[-1].get('auc', 0):.4f}")
         print(f"cache hit rate: {h[-1].get('hit_rate', 0):.1%}")
-    dev_bytes = ce.device_bytes(model.emb_cfg_train)
-    print(f"fast tier: {dev_bytes['fast_tier_bytes']/1e6:.1f} MB "
-          f"vs full table {dev_bytes['slow_tier_bytes']/1e6:.1f} MB")
+    dev_bytes = model.collection.device_bytes()
+    print(f"device-resident: {dev_bytes['device_total']/1e6:.1f} MB "
+          f"vs slow tier {dev_bytes['slow_tier_bytes']/1e6:.1f} MB "
+          f"(budget: {dev_bytes['budget_bytes']})")
 
 
 if __name__ == "__main__":

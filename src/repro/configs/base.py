@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import cached_embedding as ce
+from repro.core.collection import EmbeddingCollection
 import repro.dist.partitioning as dist
 from repro.nn import transformer as T
 
@@ -131,15 +131,15 @@ def lm_cell(
 # ---------------------------------------------------------------------------
 
 
-def emb_state_specs(emb_cfg: ce.CachedEmbeddingConfig, mode: str) -> Any:
-    return ce.shard_specs(emb_cfg, mode=mode)
+def emb_state_specs(collection: EmbeddingCollection, mode: str) -> Any:
+    return collection.shard_specs(mode=mode)
 
 
-def recsys_state_specs(state_shapes, emb_cfg, mode: str) -> Dict[str, Any]:
+def recsys_state_specs(state_shapes, collection: EmbeddingCollection, mode: str) -> Dict[str, Any]:
     specs = {
         "params": replicated_like(state_shapes["params"]),
         "opt": replicated_like(state_shapes["opt"]),
-        "emb": emb_state_specs(emb_cfg, mode),
+        "emb": emb_state_specs(collection, mode),
         "step": P(),
     }
     return specs
@@ -152,12 +152,11 @@ def recsys_cell(
     kind: str,
     batch_specs: Dict[str, Any],
     batch_in_specs: Dict[str, Any],
-    emb_cfg: ce.CachedEmbeddingConfig,
     emb_mode: str,
     rules: Dict[str, Any],
 ) -> Cell:
     state_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    state_specs = recsys_state_specs(state_shapes, emb_cfg, emb_mode)
+    state_specs = recsys_state_specs(state_shapes, model.collection, emb_mode)
     if kind == "train":
         step = model.train_step
     elif kind == "serve":

@@ -38,13 +38,11 @@ def build_cell(shape, mesh_axes, config=None, arch_name="din", model_cls=None):
     model = model_cls(cfg)
     if kind == "retrieval":
         specs = model.input_specs(1, n_candidates=S.N_CANDIDATES)
-        emb_cfg = model.emb_cfg(1, writeback=False)
     else:
         specs = model.input_specs(batch)
-        emb_cfg = model.emb_cfg(batch, writeback=(kind == "train"))
     in_specs = _batch_in_specs(model, kind, dp)
     in_specs = {k: v for k, v in in_specs.items() if k in specs}
-    return recsys_cell(arch_name, shape, model, kind, specs, in_specs, emb_cfg, "row",
+    return recsys_cell(arch_name, shape, model, kind, specs, in_specs, "row",
                        {"batch": dp, "seq": None})
 
 def smoke(config=None, model_cls=None):

@@ -21,7 +21,7 @@ def build_cell(shape, mesh_axes):
     specs = model.input_specs(CONFIG.batch_size)
     in_specs = {"dense": P(dp, None), "sparse": P(dp, None), "label": P(dp)}
     return recsys_cell("dlrm-avazu", shape, model, "train", specs, in_specs,
-                       model.emb_cfg_train, "column", {"batch": dp, "seq": None})
+                       "column", {"batch": dp, "seq": None})
 
 def smoke():
     cfg = DLRMConfig(vocab_sizes=(64, 32), n_dense=8, embed_dim=8, batch_size=8,

@@ -22,9 +22,8 @@ def build_cell(shape, mesh_axes):
     model = DLRM(CONFIG)
     specs = model.input_specs(CONFIG.batch_size)
     in_specs = {"dense": P(dp, None), "sparse": P(dp, None), "label": P(dp)}
-    emb_cfg = model.emb_cfg_train
     return recsys_cell("dlrm-criteo", shape, model, "train", specs, in_specs,
-                       emb_cfg, "column", {"batch": dp, "seq": None})
+                       "column", {"batch": dp, "seq": None})
 
 def smoke():
     cfg = DLRMConfig(vocab_sizes=(128, 64, 256), embed_dim=16, batch_size=16,

@@ -26,13 +26,11 @@ def build_cell(shape, mesh_axes):
     if kind == "retrieval":
         specs = model.input_specs(1, n_candidates=S.N_CANDIDATES)
         in_specs = {"sparse": P(None, None), "candidates": P(dp)}
-        emb_cfg = model.emb_cfg(1, writeback=False)
     else:
         specs = model.input_specs(batch)
         in_specs = {"sparse": P(dp, None), "label": P(dp)}
-        emb_cfg = model.emb_cfg(batch, writeback=(kind == "train"))
     return recsys_cell("fm", shape, FMModel(CONFIG if kind == "train" else _serve_cfg(batch, kind)),
-                       kind, specs, in_specs, emb_cfg, "row", _rules(mesh_axes))
+                       kind, specs, in_specs, "row", _rules(mesh_axes))
 
 def _serve_cfg(batch, kind):
     import dataclasses

@@ -23,13 +23,11 @@ def build_cell(shape, mesh_axes):
         specs = model.input_specs(1, n_candidates=S.N_CANDIDATES)
         in_specs = {"hist_items": P(None, None), "hist_len": P(None),
                     "user": P(None), "candidates": P(dp)}
-        emb_cfg = model.emb_cfg(1, writeback=False)
     else:
         specs = model.input_specs(batch)
         in_specs = {"hist_items": P(dp, None), "hist_len": P(dp), "user": P(dp),
                     "target_item": P(dp), "label": P(dp)}
-        emb_cfg = model.emb_cfg(batch, writeback=(kind == "train"))
-    return recsys_cell("mind", shape, model, kind, specs, in_specs, emb_cfg,
+    return recsys_cell("mind", shape, model, kind, specs, in_specs,
                        "column", {"batch": dp, "seq": None})
 
 def smoke():

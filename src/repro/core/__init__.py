@@ -10,5 +10,13 @@ from repro.core.cached_embedding import (
     apply_row_grads,
     flush_state,
 )
+from repro.core.collection import (
+    EmbeddingCollection,
+    FeatureBatch,
+    Placement,
+    PlacementPlan,
+    PlacementPlanner,
+    TableConfig,
+)
 from repro.core.freq import FreqStats, build_freq_stats, collect_counts, coverage
 from repro.core.policies import Policy

@@ -261,7 +261,10 @@ def flush(cfg: CacheConfig, full_rows: Any, state: CacheState) -> Tuple[Any, Cac
     After ``flush`` the full table is authoritative; the cache stays warm
     (rows remain resident and clean).
     """
-    slots = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    # geometry from the STATE, like ``prepare``: a serve-time cfg may quote a
+    # different capacity/vocab than the state it operates on.
+    capacity = state.slot_to_row.shape[0]
+    slots = jnp.arange(capacity, dtype=jnp.int32)
     rows = state.slot_to_row
     active = rows >= 0
     full_rows = transmitter.move_rows(
@@ -274,16 +277,20 @@ def warmup(
     cfg: CacheConfig, full_rows: Any, state: CacheState
 ) -> Tuple[Any, CacheState]:
     """Paper §4.3 cache warm-up: pre-fill with the hottest (lowest-rank) rows."""
-    n = min(cfg.capacity, cfg.vocab)
-    rows = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    # geometry from the STATE (see ``prepare``/``flush``): cfg capacity/vocab
+    # may be stale relative to the arrays being warmed.
+    capacity = state.slot_to_row.shape[0]
+    vocab = state.row_to_slot.shape[0]
+    n = min(capacity, vocab)
+    rows = jnp.arange(capacity, dtype=jnp.int32)
     active = rows < n
     rows = jnp.where(active, rows, -1)
-    slots = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    slots = jnp.arange(capacity, dtype=jnp.int32)
     cached_rows = transmitter.move_rows(
         full_rows, state.cached_rows, rows, slots, active, buffer_rows=cfg.buffer_rows
     )
     slot_to_row = jnp.where(active, rows, -1).astype(jnp.int32)
-    row_to_slot = state.row_to_slot.at[jnp.where(active, rows, cfg.vocab)].set(
+    row_to_slot = state.row_to_slot.at[jnp.where(active, rows, vocab)].set(
         jnp.where(active, slots, -1), mode="drop"
     )
     return full_rows, dataclasses.replace(

@@ -1,9 +1,16 @@
-"""CachedEmbedding — the paper's contribution as a composable JAX module.
+"""CachedEmbedding — the paper's one-big-table design as a thin adapter.
 
 All per-field tables are concatenated into one big frequency-ordered table
-(paper §5.1) and served through the two-tier software cache.  The module is
-functional: a ``CachedEmbeddingState`` pytree is threaded through the train
-step.
+(paper §5.1) and served through the two-tier software cache — i.e. exactly
+the all-GROUPED special case of ``repro.core.collection``: one shared cache
+arena over every table.  Since the collection refactor this module is a thin
+single-arena adapter over the ``collection.cached_slab_*`` ops (one slab,
+raw-global ids); it stays as the stable single-table API and the oracle for
+the bit-exactness property tests.  New code should use
+``collection.EmbeddingCollection``, which adds per-table placement plans.
+
+The module is functional: a ``CachedEmbeddingState`` pytree is threaded
+through the train step.
 
 Training protocol (synchronous updates, paper §2.2.3):
 
@@ -33,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as cache_lib
+from repro.core import collection as coll_lib
 from repro.core import freq as freq_lib
 from repro.core.policies import Policy
 
@@ -102,6 +110,15 @@ class CachedEmbeddingState:
     idx_map: jnp.ndarray  # int32 [vocab] raw id -> freq-ranked row
     offsets: jnp.ndarray  # int32 [fields] per-field base offset
 
+    def slab(self) -> coll_lib.CachedSlab:
+        """View this state as the collection's single cached-arena slab."""
+        return coll_lib.CachedSlab(full=self.full, cache=self.cache, idx_map=self.idx_map)
+
+    def with_slab(self, slab: coll_lib.CachedSlab) -> "CachedEmbeddingState":
+        return dataclasses.replace(
+            self, full=slab.full, cache=slab.cache, idx_map=slab.idx_map
+        )
+
 
 def init_state(
     rng: jax.Array,
@@ -133,8 +150,7 @@ def init_state(
     offsets = jnp.asarray(freq_lib.concat_table_offsets(cfg.vocab_sizes).astype(np.int32))
     st = CachedEmbeddingState(full=full, cache=state, idx_map=idx_map, offsets=offsets)
     if warm:
-        new_full, new_cache = cache_lib.warmup(cfg.cache_config(), st.full, st.cache)
-        st = dataclasses.replace(st, full=new_full, cache=new_cache)
+        st = st.with_slab(coll_lib.cached_slab_warmup(cfg.cache_config(), st.slab()))
     return st
 
 
@@ -151,19 +167,13 @@ def prepare_ids(
     ``raw_ids``: int32 [ids_per_step] global ids, -1 = padding.  Non-
     differentiable bookkeeping (Algorithm 1) — call outside the grad closure.
     """
-    ccfg = cfg.cache_config()
-    valid = raw_ids >= 0
-    rows = state.idx_map.at[jnp.where(valid, raw_ids, 0)].get(mode="fill", fill_value=-1)
-    rows = jnp.where(valid, rows, -1)
-    full, cache_state, slots = cache_lib.prepare(ccfg, state.full, state.cache, rows)
-    return dataclasses.replace(state, full=full, cache=cache_state), slots
+    slab, slots = coll_lib.cached_slab_prepare(cfg.cache_config(), state.slab(), raw_ids)
+    return state.with_slab(slab), slots
 
 
 def gather_slots(state: CachedEmbeddingState, slots: jnp.ndarray) -> jnp.ndarray:
     """Differentiable gather from the cached weight (padding -> zero rows)."""
-    w = state.cache.cached_rows["weight"]
-    safe = jnp.where(slots >= 0, slots, w.shape[0])  # negatives would wrap
-    return jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
+    return coll_lib.cached_slab_gather(state.slab(), slots)
 
 
 def embed_onehot(
@@ -232,8 +242,7 @@ def apply_row_grads(
 
 def flush_state(cfg: CachedEmbeddingConfig, state: CachedEmbeddingState) -> CachedEmbeddingState:
     """Checkpoint barrier: write all resident rows back to the full table."""
-    full, cache_state = cache_lib.flush(cfg.cache_config(), state.full, state.cache)
-    return dataclasses.replace(state, full=full, cache=cache_state)
+    return state.with_slab(coll_lib.cached_slab_flush(cfg.cache_config(), state.slab()))
 
 
 def dense_reference_lookup(state: CachedEmbeddingState, field_ids: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,866 @@
+"""Planner-driven multi-table embeddings behind one keyed-feature API.
+
+The paper manages ONE concatenated, frequency-ordered table through a single
+software cache.  Production DLRMs hold dozens of tables whose size and skew
+differ by orders of magnitude; per-table statistical placement across memory
+tiers beats any one-size-fits-all policy (RecShard, arXiv 2201.10095), and
+per-table tiering composes with cache-backed embeddings (arXiv 2010.11305).
+This module generalizes the paper's design to that setting:
+
+  * ``TableConfig``      — one logical table (vocab, dim, per-table cache
+                           knobs, optional placement override).
+  * ``FeatureBatch``     — keyed ids (feature name -> id array, -1 = padding),
+                           the KJT analogue; ``from_onehot`` / ``from_bags``
+                           constructors replace hand-flattened id vectors.
+  * ``PlacementPlanner`` — takes the tables, optional frequency stats, and a
+                           device-memory budget; assigns each table DEVICE
+                           (fully resident, no cache bookkeeping), CACHED
+                           (the paper's two-tier cache, per-table ratio and
+                           policy), or GROUPED (many small tables share one
+                           cache arena — the paper's original layout is the
+                           all-GROUPED special case).
+  * ``EmbeddingCollection`` — owns N tables under a plan and exposes the
+                           collection-level surface shared by train and
+                           serve: ``init`` / ``prepare`` / ``weights`` /
+                           ``gather`` / ``pool`` / ``apply_grads`` /
+                           ``flush`` / ``shard_specs`` / ``device_bytes``.
+
+Everything rides on the existing machinery: ``core.cache`` (Algorithm 1),
+``core.freq`` (static frequency module), ``core.transmitter``.  The cache
+remains pure data movement, so a mixed-placement collection is bit-identical
+to a dense reference lookup (tested property).
+
+Training protocol (mirrors ``cached_embedding``, per collection):
+
+    emb_state, slots = coll.prepare(emb_state, fb)       # non-diff bookkeeping
+    def loss_fn(params, emb_w):                          # emb_w = coll.weights(state)
+        rows = coll.gather(emb_w, slots, fb)             # diff wrt emb_w
+        ...
+    grads wrt (params, emb_w) ...
+    emb_state = coll.apply_grads(emb_state, grads_emb, lr)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.core import freq as freq_lib
+from repro.core.policies import Policy
+
+__all__ = [
+    "Placement",
+    "TableConfig",
+    "FeatureBatch",
+    "TablePlacement",
+    "PlacementPlan",
+    "PlacementPlanner",
+    "EmbeddingCollection",
+    "DeviceSlab",
+    "CachedSlab",
+    "CollectionState",
+]
+
+SHARED_ARENA = "__shared__"
+
+
+class Placement(enum.Enum):
+    DEVICE = "device"  # full table resident on device, no cache bookkeeping
+    CACHED = "cached"  # paper two-tier cache, table's own ratio/policy
+    GROUPED = "grouped"  # shares the collection-wide cache arena
+
+
+@dataclasses.dataclass(frozen=True)
+class TableConfig:
+    """One logical embedding table.
+
+    ``feature_names`` lists the FeatureBatch keys served by this table
+    (several features may share a table: e.g. ``hist_items`` and
+    ``target_item`` both hit the items table); defaults to ``(name,)``.
+    ``ids_per_step`` is the static number of id lanes the table's features
+    contribute per step — it sizes the per-step unique buffer and the
+    minimum cache capacity, exactly like the paper's strict buffer limit.
+    """
+
+    name: str
+    vocab: int
+    dim: int
+    ids_per_step: int
+    feature_names: Tuple[str, ...] = ()
+    cache_ratio: float = 0.015  # paper default 1.5 %
+    policy: Policy = Policy.FREQ_LFU
+    buffer_rows: int = 65536
+    max_unique_per_step: int = 0
+    protect_via_inverse: bool = True
+    dtype: Any = jnp.float32
+    placement: Optional[Placement] = None  # planner override
+
+    @property
+    def features(self) -> Tuple[str, ...]:
+        return self.feature_names or (self.name,)
+
+    @property
+    def full_bytes(self) -> int:
+        return self.vocab * self.dim * jnp.dtype(self.dtype).itemsize
+
+    def unique_size(self, ids_per_step: Optional[int] = None) -> int:
+        k = min(ids_per_step or self.ids_per_step, self.vocab)
+        if self.max_unique_per_step:
+            k = min(k, self.max_unique_per_step)
+        return k
+
+
+# ---------------------------------------------------------------------------
+# FeatureBatch — the keyed-ids input type (KJT analogue)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FeatureBatch:
+    """Keyed feature ids: name -> int32 id array (any shape, -1 = padding).
+
+    For pooled ("bag") features, ``segments[name]`` assigns each flat lane to
+    an output row (``num_segments`` rows total); ``EmbeddingCollection.pool``
+    runs the segment reduction after the cached gather.
+    """
+
+    ids: Dict[str, jnp.ndarray]
+    segments: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    num_segments: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    @classmethod
+    def from_onehot(cls, names: Sequence[str], id_matrix: jnp.ndarray) -> "FeatureBatch":
+        """Criteo-style [batch, fields] matrix -> one [batch] feature per name."""
+        assert id_matrix.ndim == 2 and id_matrix.shape[1] == len(names)
+        return cls(ids={n: id_matrix[:, j].astype(jnp.int32) for j, n in enumerate(names)})
+
+    @classmethod
+    def from_bags(
+        cls,
+        bags: Mapping[str, Tuple[jnp.ndarray, jnp.ndarray]],
+        num_segments: int,
+        extra_onehot: Optional[Mapping[str, jnp.ndarray]] = None,
+    ) -> "FeatureBatch":
+        """Ragged multi-hot bags: name -> (flat_ids, segment_ids)."""
+        ids = {n: flat.astype(jnp.int32) for n, (flat, _) in bags.items()}
+        segments = {n: seg.astype(jnp.int32) for n, (_, seg) in bags.items()}
+        if extra_onehot:
+            ids.update({n: v.astype(jnp.int32) for n, v in extra_onehot.items()})
+        return cls(ids=ids, segments=segments, num_segments=num_segments)
+
+    @property
+    def features(self) -> Tuple[str, ...]:
+        return tuple(self.ids)
+
+
+# ---------------------------------------------------------------------------
+# placement plan + planner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TablePlacement:
+    placement: Placement
+    # effective ratio for CACHED/GROUPED tables; None = use the table's own.
+    # 0.0 is meaningful (planner shrunk to the exactness floor), hence Optional.
+    cache_ratio: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaConfig:
+    """Knobs of the shared GROUPED cache arena."""
+
+    cache_ratio: float = 0.015
+    policy: Policy = Policy.FREQ_LFU
+    buffer_rows: int = 65536
+    max_unique_per_step: int = 0
+    protect_via_inverse: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    placements: Dict[str, TablePlacement]
+    arena: ArenaConfig = ArenaConfig()
+    budget_bytes: Optional[int] = None
+
+    def placement(self, name: str) -> Placement:
+        return self.placements[name].placement
+
+    @classmethod
+    def single_arena(
+        cls,
+        tables: Sequence[TableConfig],
+        cache_ratio: float = 0.015,
+        policy: Policy = Policy.FREQ_LFU,
+        buffer_rows: int = 65536,
+        max_unique_per_step: int = 0,
+        protect_via_inverse: bool = True,
+    ) -> "PlacementPlan":
+        """The paper's layout: every table GROUPED into one shared cache."""
+        return cls(
+            placements={
+                t.name: TablePlacement(Placement.GROUPED, cache_ratio) for t in tables
+            },
+            arena=ArenaConfig(
+                cache_ratio=cache_ratio,
+                policy=policy,
+                buffer_rows=buffer_rows,
+                max_unique_per_step=max_unique_per_step,
+                protect_via_inverse=protect_via_inverse,
+            ),
+            budget_bytes=None,
+        )
+
+    def summary(self) -> Dict[str, str]:
+        return {
+            n: f"{p.placement.value}"
+            + (f"@{p.cache_ratio:.4f}" if p.placement is not Placement.DEVICE else "")
+            for n, p in self.placements.items()
+        }
+
+
+class PlacementPlanner:
+    """Assign each table a memory tier under an explicit device-byte budget.
+
+    Heuristic (RecShard-flavoured, deterministic):
+      1. honor explicit ``TableConfig.placement`` overrides;
+      2. greedily promote the remaining tables to DEVICE, hottest-per-byte
+         first (access frequency per byte when counts are given, smallest
+         table first otherwise), while the full table fits the remaining
+         budget — small hot tables stop paying any cache bookkeeping;
+      3. tables with vocab below ``group_below_rows`` share the GROUPED
+         arena (one cache, one set of index arrays, amortized bookkeeping);
+      4. everything else is CACHED with its own ratio/policy; if the summed
+         fast tiers overflow the remaining budget, ratios are scaled down
+         uniformly, floored at one batch's unique rows (exactness floor).
+    """
+
+    def __init__(
+        self,
+        budget_bytes: int,
+        group_below_rows: int = 0,
+        arena: ArenaConfig = ArenaConfig(),
+    ):
+        self.budget_bytes = int(budget_bytes)
+        self.group_below_rows = int(group_below_rows)
+        self.arena = arena
+
+    @staticmethod
+    def _fast_bytes(t: TableConfig, ratio: float) -> int:
+        """Device footprint of one CACHED table at ``ratio`` (weights + per-slot
+        bookkeeping + the vocab-sized index arrays)."""
+        cap = min(max(int(ratio * t.vocab), t.unique_size()), t.vocab)
+        item = jnp.dtype(t.dtype).itemsize
+        return cap * t.dim * item + cap * 4 * 3 + t.vocab * 4 * 2
+
+    def _arena_bytes(self, grouped: Sequence[TableConfig]) -> int:
+        if not grouped:
+            return 0
+        gvocab = sum(t.vocab for t in grouped)
+        gids = sum(t.ids_per_step for t in grouped)
+        gitem = jnp.dtype(grouped[0].dtype).itemsize
+        gcap = min(max(int(self.arena.cache_ratio * gvocab), min(gids, gvocab)), gvocab)
+        return gcap * grouped[0].dim * gitem + gcap * 4 * 3 + gvocab * 4 * 2
+
+    def plan(
+        self,
+        tables: Sequence[TableConfig],
+        counts: Optional[Mapping[str, np.ndarray]] = None,
+    ) -> PlacementPlan:
+        placements: Dict[str, TablePlacement] = {}
+        device_bytes = 0
+
+        undecided: List[TableConfig] = []
+        grouped: List[TableConfig] = []
+        solo: List[TableConfig] = []
+        for t in tables:
+            if t.placement is Placement.DEVICE:
+                placements[t.name] = TablePlacement(Placement.DEVICE)
+                device_bytes += t.full_bytes
+            elif t.placement is Placement.GROUPED:
+                grouped.append(t)
+            elif t.placement is Placement.CACHED:
+                solo.append(t)
+            elif t.vocab < self.group_below_rows:
+                grouped.append(t)  # many tiny tables share the arena by policy
+            else:
+                undecided.append(t)
+
+        def heat_per_byte(t: TableConfig) -> float:
+            if counts is not None and t.name in counts:
+                return float(np.sum(counts[t.name])) / max(t.full_bytes, 1)
+            return 1.0 / max(t.full_bytes, 1)  # no stats: smallest first
+
+        # greedy DEVICE promotion, hottest-per-byte first.  A promotion is
+        # only taken if the rest of the plan stays feasible in the worst case
+        # (every remaining cached table shrunk to its exactness floor).
+        undecided.sort(key=lambda t: (-heat_per_byte(t), t.name))
+        for i, t in enumerate(undecided):
+            rest = undecided[i + 1 :] + solo
+            floor_rest = sum(self._fast_bytes(r, 0.0) for r in rest)
+            cost = device_bytes + t.full_bytes + floor_rest + self._arena_bytes(grouped)
+            if cost <= self.budget_bytes:
+                placements[t.name] = TablePlacement(Placement.DEVICE)
+                device_bytes += t.full_bytes
+            else:
+                solo.append(t)
+
+        for t in grouped:
+            placements[t.name] = TablePlacement(Placement.GROUPED, self.arena.cache_ratio)
+
+        # fit solo cache ratios into what is left (index arrays included)
+        remaining = self.budget_bytes - device_bytes - self._arena_bytes(grouped)
+        want = sum(self._fast_bytes(t, t.cache_ratio) for t in solo)
+        scale = 1.0
+        if solo and want > remaining:
+            floor = sum(self._fast_bytes(t, 0.0) for t in solo)
+            if floor > remaining:
+                raise ValueError(
+                    f"budget {self.budget_bytes} cannot hold even one batch's unique "
+                    f"rows per cached table (need >= {self.budget_bytes - remaining + floor})"
+                )
+            # weight bytes scale ~linearly with ratio; solve for the shrink
+            scale = max(0.0, (remaining - floor) / max(want - floor, 1))
+        for t in solo:
+            placements[t.name] = TablePlacement(Placement.CACHED, t.cache_ratio * scale)
+
+        return PlacementPlan(
+            placements=placements, arena=self.arena, budget_bytes=self.budget_bytes
+        )
+
+
+# ---------------------------------------------------------------------------
+# state pytrees
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeviceSlab:
+    """A fully-resident table: just the weight, no cache bookkeeping."""
+
+    weight: jnp.ndarray  # [vocab, dim]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CachedSlab:
+    """A two-tier cached arena (one table, or the shared GROUPED group)."""
+
+    full: Any  # {"weight": [vocab, dim], ...} — slow tier
+    cache: cache_lib.CacheState
+    idx_map: jnp.ndarray  # int32 [vocab] raw id -> freq-ranked row
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CollectionState:
+    slabs: Dict[str, Any]  # name -> DeviceSlab | CachedSlab
+
+
+# --- slab-level ops (the single-arena core; ``cached_embedding`` adapts
+#     its one-big-table API onto exactly these) ------------------------------
+
+
+def cached_slab_prepare(
+    ccfg: cache_lib.CacheConfig, slab: CachedSlab, raw_ids: jnp.ndarray
+) -> Tuple[CachedSlab, jnp.ndarray]:
+    """Make all rows for ``raw_ids`` (slab-global, -1 pad) resident."""
+    valid = raw_ids >= 0
+    rows = slab.idx_map.at[jnp.where(valid, raw_ids, 0)].get(mode="fill", fill_value=-1)
+    rows = jnp.where(valid, rows, -1)
+    full, cache_state, slots = cache_lib.prepare(ccfg, slab.full, slab.cache, rows)
+    return dataclasses.replace(slab, full=full, cache=cache_state), slots
+
+
+def cached_slab_gather(slab: CachedSlab, slots: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable gather from the cached weight (padding -> zero rows)."""
+    return cache_lib.lookup_slots(slab.cache, slots, leaf="weight")
+
+
+def cached_slab_flush(ccfg: cache_lib.CacheConfig, slab: CachedSlab) -> CachedSlab:
+    full, cache_state = cache_lib.flush(ccfg, slab.full, slab.cache)
+    return dataclasses.replace(slab, full=full, cache=cache_state)
+
+
+def cached_slab_warmup(ccfg: cache_lib.CacheConfig, slab: CachedSlab) -> CachedSlab:
+    full, cache_state = cache_lib.warmup(ccfg, slab.full, slab.cache)
+    return dataclasses.replace(slab, full=full, cache=cache_state)
+
+
+# ---------------------------------------------------------------------------
+# the collection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _CachedSlabSpec:
+    """Static geometry of one cached slab (solo table or shared arena)."""
+
+    tables: Tuple[TableConfig, ...]
+    cache_ratio: float
+    policy: Policy
+    buffer_rows: int
+    max_unique_per_step: int
+    protect_via_inverse: bool
+
+    @property
+    def vocab(self) -> int:
+        return sum(t.vocab for t in self.tables)
+
+    @property
+    def dim(self) -> int:
+        return self.tables[0].dim
+
+    @property
+    def dtype(self):
+        return self.tables[0].dtype
+
+    @property
+    def ids_per_step(self) -> int:
+        return sum(t.ids_per_step for t in self.tables)
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return freq_lib.concat_table_offsets([t.vocab for t in self.tables])
+
+    def unique_size(self, ids_per_step: Optional[int] = None) -> int:
+        k = min(ids_per_step or self.ids_per_step, self.vocab)
+        if self.max_unique_per_step:
+            k = min(k, self.max_unique_per_step)
+        return k
+
+    @property
+    def capacity(self) -> int:
+        cap = max(int(self.cache_ratio * self.vocab), self.unique_size())
+        return min(cap, self.vocab)
+
+    def cache_config(self, ids_per_step: Optional[int] = None, writeback: bool = True):
+        # NB: capacity is fixed at construction; a batch whose unique buffer
+        # exceeds it fails CacheConfig's own guard with an actionable error
+        # (more uniques than slots cannot all be resident at once).  Serve
+        # batches larger than ``ids_per_step`` are fine as long as
+        # ``max_unique_per_step`` (or the vocab) bounds their uniques.
+        return cache_lib.CacheConfig(
+            vocab=self.vocab,
+            capacity=self.capacity,
+            ids_per_step=ids_per_step or self.ids_per_step,
+            buffer_rows=self.buffer_rows,
+            policy=self.policy,
+            writeback=writeback,
+            max_unique_per_step=self.max_unique_per_step,
+            protect_via_inverse=self.protect_via_inverse,
+        )
+
+
+class EmbeddingCollection:
+    """N tables under one placement plan, behind one keyed-feature surface."""
+
+    def __init__(self, tables: Sequence[TableConfig], plan: PlacementPlan):
+        names = [t.name for t in tables]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate table names: {names}")
+        missing = [n for n in names if n not in plan.placements]
+        if missing:
+            raise ValueError(f"plan is missing placements for tables: {missing}")
+        self.tables: Dict[str, TableConfig] = {t.name: t for t in tables}
+        self.plan = plan
+
+        # feature -> owning table
+        self.feature_to_table: Dict[str, str] = {}
+        for t in tables:
+            for f in t.features:
+                if f in self.feature_to_table:
+                    raise ValueError(f"feature {f!r} claimed by two tables")
+                self.feature_to_table[f] = t.name
+
+        # slab layout: DEVICE/CACHED tables get their own slab; GROUPED share one
+        self.device_slabs: Dict[str, TableConfig] = {}
+        self.cached_slabs: Dict[str, _CachedSlabSpec] = {}
+        grouped: List[TableConfig] = []
+        for t in tables:
+            p = plan.placements[t.name]
+            if p.placement is Placement.DEVICE:
+                self.device_slabs[t.name] = t
+            elif p.placement is Placement.CACHED:
+                self.cached_slabs[t.name] = _CachedSlabSpec(
+                    tables=(t,),
+                    cache_ratio=t.cache_ratio if p.cache_ratio is None else p.cache_ratio,
+                    policy=t.policy,
+                    buffer_rows=t.buffer_rows,
+                    max_unique_per_step=t.max_unique_per_step,
+                    protect_via_inverse=t.protect_via_inverse,
+                )
+            else:
+                grouped.append(t)
+        if grouped:
+            dims = {(t.dim, jnp.dtype(t.dtype).name) for t in grouped}
+            if len(dims) != 1:
+                raise ValueError(f"GROUPED tables must share (dim, dtype); got {dims}")
+            a = plan.arena
+            self.cached_slabs[SHARED_ARENA] = _CachedSlabSpec(
+                tables=tuple(grouped),
+                cache_ratio=a.cache_ratio,
+                policy=a.policy,
+                buffer_rows=a.buffer_rows,
+                max_unique_per_step=a.max_unique_per_step,
+                protect_via_inverse=a.protect_via_inverse,
+            )
+
+        # table -> (slab, offset of the table inside the slab's concat vocab)
+        self.table_slab: Dict[str, Tuple[str, int]] = {}
+        for name in self.device_slabs:
+            self.table_slab[name] = (name, 0)
+        for sname, spec in self.cached_slabs.items():
+            offs = spec.offsets
+            for t, off in zip(spec.tables, offs):
+                self.table_slab[t.name] = (sname, int(off))
+
+    # ----- construction -----------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        tables: Sequence[TableConfig],
+        budget_bytes: Optional[int] = None,
+        counts: Optional[Mapping[str, np.ndarray]] = None,
+        planner: Optional[PlacementPlanner] = None,
+        **arena_kw,
+    ) -> "EmbeddingCollection":
+        """Plan + build.  Without a budget this is the paper's layout (one
+        shared cache arena over all tables)."""
+        if planner is None and budget_bytes is None:
+            return cls(tables, PlacementPlan.single_arena(tables, **arena_kw))
+        planner = planner or PlacementPlanner(budget_bytes, arena=ArenaConfig(**arena_kw))
+        return cls(tables, planner.plan(tables, counts=counts))
+
+    # ----- init -------------------------------------------------------------
+
+    def split_concat_counts(self, counts: np.ndarray) -> Dict[str, np.ndarray]:
+        """Split a concatenated-vocab count vector (table declaration order)
+        into the per-table dict ``init`` expects."""
+        out, off = {}, 0
+        for t in self.tables.values():
+            out[t.name] = np.asarray(counts[off : off + t.vocab])
+            off += t.vocab
+        assert off == counts.shape[0], "counts length != total vocab"
+        return out
+
+    def init(
+        self,
+        rng: jax.Array,
+        counts: Optional[Mapping[str, np.ndarray]] = None,
+        warm: bool = True,
+    ) -> CollectionState:
+        slabs: Dict[str, Any] = {}
+        keys = jax.random.split(rng, len(self.device_slabs) + len(self.cached_slabs))
+        kit = iter(keys)
+        for name, t in self.device_slabs.items():
+            scale = 1.0 / np.sqrt(t.dim)
+            slabs[name] = DeviceSlab(
+                weight=jax.random.uniform(next(kit), (t.vocab, t.dim), t.dtype, -scale, scale)
+            )
+        for sname, spec in self.cached_slabs.items():
+            scale = 1.0 / np.sqrt(spec.dim)
+            weight = jax.random.uniform(
+                next(kit), (spec.vocab, spec.dim), spec.dtype, -scale, scale
+            )
+            if counts is not None:
+                slab_counts = np.concatenate(
+                    [
+                        np.asarray(
+                            counts.get(t.name, np.zeros((t.vocab,), np.int64)), np.int64
+                        )
+                        for t in spec.tables
+                    ]
+                )
+                idx_map = jnp.asarray(freq_lib.build_freq_stats(slab_counts).idx_map)
+            else:
+                idx_map = jnp.arange(spec.vocab, dtype=jnp.int32)
+            slab = CachedSlab(
+                full={"weight": weight},
+                cache=cache_lib.init_cache(
+                    spec.cache_config(), {"weight": jnp.zeros((spec.dim,), spec.dtype)}
+                ),
+                idx_map=idx_map,
+            )
+            if warm:
+                slab = cached_slab_warmup(spec.cache_config(), slab)
+            slabs[sname] = slab
+        return CollectionState(slabs=slabs)
+
+    # ----- the non-diff bookkeeping pass ------------------------------------
+
+    def _slab_lanes(self, fb: FeatureBatch, sname: str) -> List[Tuple[str, int]]:
+        """Static (feature, flat lane count) list this slab serves, in a
+        deterministic order (slab table order, then FeatureBatch order)."""
+        spec = self.cached_slabs[sname]
+        member = {t.name for t in spec.tables}
+        out = []
+        for f in fb.features:
+            if self.feature_to_table.get(f) in member:
+                out.append((f, int(np.prod(fb.ids[f].shape))))
+        return out
+
+    def prepare(
+        self, state: CollectionState, fb: FeatureBatch, writeback: bool = True
+    ) -> Tuple[CollectionState, Dict[str, jnp.ndarray]]:
+        """Make every requested row resident; return per-feature addresses.
+
+        Addresses are cache slots for cached tables and plain row indices for
+        DEVICE tables (-1 marks padding lanes in both).  Non-differentiable —
+        call outside the grad closure (Algorithm 1 bookkeeping).
+        """
+        for f in fb.features:
+            if f not in self.feature_to_table:
+                raise KeyError(f"unknown feature {f!r}; known: {sorted(self.feature_to_table)}")
+        slabs = dict(state.slabs)
+        addresses: Dict[str, jnp.ndarray] = {}
+
+        # DEVICE tables: the address IS the (local) row id.
+        for f in fb.features:
+            tname = self.feature_to_table[f]
+            if tname in self.device_slabs:
+                addresses[f] = fb.ids[f].astype(jnp.int32)
+
+        # cached slabs: concatenate this batch's lanes, one prepare per slab.
+        for sname, spec in self.cached_slabs.items():
+            lanes = self._slab_lanes(fb, sname)
+            if not lanes:
+                continue
+            parts = []
+            for f, n in lanes:
+                ids = fb.ids[f].reshape(-1).astype(jnp.int32)
+                off = self.table_slab[self.feature_to_table[f]][1]
+                parts.append(jnp.where(ids >= 0, ids + off, -1))
+            raw = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+            ccfg = spec.cache_config(ids_per_step=int(raw.shape[0]), writeback=writeback)
+            slab, slots = cached_slab_prepare(ccfg, slabs[sname], raw)
+            slabs[sname] = slab
+            pos = 0
+            for f, n in lanes:
+                addresses[f] = slots[pos : pos + n].reshape(fb.ids[f].shape)
+                pos += n
+        return CollectionState(slabs=slabs), addresses
+
+    # ----- differentiable read path -----------------------------------------
+
+    def weights(self, state: CollectionState) -> Dict[str, jnp.ndarray]:
+        """The trainable fast-tier weights, keyed by slab — differentiate the
+        loss w.r.t. this dict and feed the grads to ``apply_grads``."""
+        out = {}
+        for name in self.device_slabs:
+            out[name] = state.slabs[name].weight
+        for sname in self.cached_slabs:
+            out[sname] = state.slabs[sname].cache.cached_rows["weight"]
+        return out
+
+    def gather(
+        self,
+        weights: Mapping[str, jnp.ndarray],
+        addresses: Mapping[str, jnp.ndarray],
+        fb: FeatureBatch,
+    ) -> Dict[str, jnp.ndarray]:
+        """Pure gather: feature -> rows of shape ``ids.shape + (dim,)``.
+
+        A function of ``weights`` only, so gradients flow to the cached rows
+        (or the DEVICE table) and nowhere else.
+        """
+        out = {}
+        for f in fb.features:
+            sname = self.table_slab[self.feature_to_table[f]][0]
+            w = weights[sname]
+            addr = addresses[f]
+            flat = addr.reshape(-1)
+            safe = jnp.where(flat >= 0, flat, w.shape[0])
+            rows = jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
+            out[f] = rows.reshape(addr.shape + (w.shape[-1],))
+        return out
+
+    def pool(
+        self, rows: Mapping[str, jnp.ndarray], fb: FeatureBatch, combiner: str = "sum"
+    ) -> Dict[str, jnp.ndarray]:
+        """Segment-reduce bag features ([lanes, dim] -> [num_segments, dim]);
+        one-hot features pass through."""
+        out = dict(rows)
+        for f, seg in fb.segments.items():
+            pooled = jax.ops.segment_sum(rows[f], seg, num_segments=fb.num_segments)
+            if combiner == "mean":
+                cnt = jax.ops.segment_sum(
+                    (fb.ids[f] >= 0).astype(pooled.dtype), seg, num_segments=fb.num_segments
+                )
+                pooled = pooled / jnp.maximum(cnt, 1.0)[:, None]
+            out[f] = pooled
+        return out
+
+    def lookup(
+        self, state: CollectionState, fb: FeatureBatch, writeback: bool = True
+    ) -> Tuple[CollectionState, Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
+        """Convenience prepare+gather: (state', addresses, feature -> rows)."""
+        state, addresses = self.prepare(state, fb, writeback=writeback)
+        rows = self.gather(self.weights(state), addresses, fb)
+        return state, addresses, rows
+
+    # ----- updates ----------------------------------------------------------
+
+    def apply_grads(
+        self,
+        state: CollectionState,
+        grads: Mapping[str, jnp.ndarray],
+        lr,
+    ) -> CollectionState:
+        """Synchronous SGD on the fast tier (the paper §2.2.3 scheme: resident
+        rows are authoritative; the slow tier catches up at eviction/flush)."""
+        slabs = dict(state.slabs)
+        for name in self.device_slabs:
+            slab = slabs[name]
+            slabs[name] = dataclasses.replace(
+                slab, weight=(slab.weight - lr * grads[name]).astype(slab.weight.dtype)
+            )
+        for sname in self.cached_slabs:
+            slab = slabs[sname]
+            cached = dict(slab.cache.cached_rows)
+            cached["weight"] = (cached["weight"] - lr * grads[sname]).astype(
+                cached["weight"].dtype
+            )
+            slabs[sname] = dataclasses.replace(
+                slab, cache=dataclasses.replace(slab.cache, cached_rows=cached)
+            )
+        return CollectionState(slabs=slabs)
+
+    def flush(self, state: CollectionState) -> CollectionState:
+        """Checkpoint barrier: every cached slab writes residents back."""
+        slabs = dict(state.slabs)
+        for sname, spec in self.cached_slabs.items():
+            slabs[sname] = cached_slab_flush(spec.cache_config(), slabs[sname])
+        return CollectionState(slabs=slabs)
+
+    # ----- oracles / bulk reads ---------------------------------------------
+
+    def full_lookup(
+        self, state: CollectionState, table: str, local_ids: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Bulk read from the authoritative (slow) tier of one table —
+        retrieval-style candidate scans bypass cache bookkeeping by design."""
+        sname, off = self.table_slab[table]
+        if sname in self.device_slabs:
+            w = state.slabs[sname].weight
+            safe = jnp.where(local_ids >= 0, local_ids, w.shape[0])
+            return jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
+        slab = state.slabs[sname]
+        valid = local_ids >= 0
+        rows = slab.idx_map.at[jnp.where(valid, local_ids + off, 0)].get(
+            mode="fill", fill_value=-1
+        )
+        w = slab.full["weight"]
+        safe = jnp.where(valid, rows, w.shape[0])
+        return jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
+
+    def dense_reference(
+        self, state: CollectionState, fb: FeatureBatch
+    ) -> Dict[str, jnp.ndarray]:
+        """Oracle lookup reading only authoritative tiers (flush first so the
+        slow tier is current) — the bit-exactness reference for tests."""
+        out = {}
+        for f in fb.features:
+            tname = self.feature_to_table[f]
+            sname, off = self.table_slab[tname]
+            ids = fb.ids[f]
+            flat = ids.reshape(-1)
+            if sname in self.device_slabs:
+                w = state.slabs[sname].weight
+                safe = jnp.where(flat >= 0, flat, w.shape[0])
+            else:
+                slab = state.slabs[sname]
+                w = slab.full["weight"]
+                rows = slab.idx_map.at[
+                    jnp.where(flat >= 0, flat + off, 0)
+                ].get(mode="fill", fill_value=-1)
+                safe = jnp.where(flat >= 0, rows, w.shape[0])
+            rows = jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
+            out[f] = rows.reshape(ids.shape + (w.shape[-1],))
+        return out
+
+    # ----- telemetry / accounting -------------------------------------------
+
+    def metrics(self, state: CollectionState) -> Dict[str, jnp.ndarray]:
+        """Cache telemetry aggregated over cached slabs (DEVICE tables have
+        no bookkeeping, hence no misses by construction)."""
+        hits = misses = evictions = overflows = 0
+        for sname in self.cached_slabs:
+            c = state.slabs[sname].cache
+            hits = hits + c.hits
+            misses = misses + c.misses
+            evictions = evictions + c.evictions
+            overflows = overflows + c.uniq_overflows
+        tot = hits + misses
+        return {
+            "hit_rate": jnp.where(tot > 0, hits / jnp.maximum(tot, 1), 0.0),
+            "cache_misses": jnp.asarray(misses),
+            "cache_evictions": jnp.asarray(evictions),
+            "uniq_overflows": jnp.asarray(overflows),
+        }
+
+    def device_bytes(self) -> Dict[str, int]:
+        """Device-resident vs host-tier footprint under the plan (per-slab
+        breakdown included; the planner's budget bounds ``device_total``)."""
+        per_slab: Dict[str, int] = {}
+        slow = 0
+        for name, t in self.device_slabs.items():
+            per_slab[name] = t.full_bytes
+        for sname, spec in self.cached_slabs.items():
+            item = jnp.dtype(spec.dtype).itemsize
+            fast = spec.capacity * spec.dim * item
+            fast += spec.capacity * 4 * 3  # slot_to_row, last_used, use_count
+            fast += spec.vocab * 4 * 2  # row_to_slot + idx_map
+            per_slab[sname] = fast
+            slow += spec.vocab * spec.dim * item
+        return {
+            "device_total": sum(per_slab.values()),
+            "slow_tier_bytes": slow,
+            "per_slab": per_slab,
+            "budget_bytes": self.plan.budget_bytes,
+        }
+
+    # ----- sharding ----------------------------------------------------------
+
+    def shard_specs(self, mode: str = "column", model_axis: str = "model"):
+        """PartitionSpec pytree matching ``CollectionState`` (see
+        ``cached_embedding.shard_specs`` for the mode semantics)."""
+        from jax.sharding import PartitionSpec as P
+
+        if mode == "column":
+            full_w = cached_w = dev_w = P(None, model_axis)
+        elif mode == "row":
+            full_w, cached_w = P(model_axis, None), P(None, None)
+            dev_w = P(model_axis, None)
+        else:
+            full_w = cached_w = dev_w = P(None, None)
+
+        slabs: Dict[str, Any] = {}
+        for name in self.device_slabs:
+            slabs[name] = DeviceSlab(weight=dev_w)
+        for sname in self.cached_slabs:
+            slabs[sname] = CachedSlab(
+                full={"weight": full_w},
+                cache=cache_lib.CacheState(
+                    cached_rows={"weight": cached_w},
+                    slot_to_row=P(None),
+                    row_to_slot=P(None),
+                    last_used=P(None),
+                    use_count=P(None),
+                    step=P(),
+                    hits=P(),
+                    misses=P(),
+                    evictions=P(),
+                    uniq_overflows=P(),
+                ),
+                idx_map=P(None),
+            )
+        return CollectionState(slabs=slabs)

@@ -1,0 +1,1 @@
+"""Distribution helpers: logical-axis partitioning (``repro.dist.partitioning``)."""

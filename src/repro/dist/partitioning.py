@@ -1,0 +1,169 @@
+"""Logical-axis partitioning: named parameter dims resolved to mesh axes.
+
+The scheme (Flax/T5X-style, dependency-free): init functions annotate every
+parameter with *logical* dim names by wrapping the value in a ``Param``
+(a pytree node whose aux data is the names, so it survives ``jax.vmap`` /
+``jax.eval_shape``).  ``split_params`` separates the value tree from the
+axes tree; a per-launch *rule table* (``axis_rules``) maps logical names to
+mesh axes, turning the axes tree into ``PartitionSpec``s
+(``specs_for_axes``) and making in-graph constraints (``constrain``)
+resolve against the active mesh.
+
+Nothing here talks to a specific model: models speak logical names
+("embed", "heads", "batch", ...), launch code owns the mesh and the rules.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "Param",
+    "axis_rules",
+    "current_mesh",
+    "current_rules",
+    "resolve",
+    "spec",
+    "specs_for_axes",
+    "constrain",
+    "split_params",
+    "prepend_axis",
+]
+
+AxisName = Optional[str]
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class Param:
+    """A parameter value tagged with logical dim names.
+
+    ``value`` is the array (or ShapeDtypeStruct under ``eval_shape``);
+    ``axes`` has one logical name (or None) per dim.  Registered as a pytree
+    node with ``axes`` as aux data, so transformations map over ``value``
+    while the annotation rides along unchanged — ``jax.vmap`` over an init
+    function yields stacked Params (callers then ``prepend_axis`` the new
+    leading dim).
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value: Any, axes: Sequence[AxisName]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Param({self.value!r}, axes={self.axes})"
+
+
+def _param_flatten(p: Param):
+    return (p.value,), p.axes
+
+
+def _param_unflatten(axes, children):
+    return Param(children[0], axes)
+
+
+jax.tree_util.register_pytree_node(Param, _param_flatten, _param_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# active mesh + rule table (thread-local so parallel launches don't collide)
+# ---------------------------------------------------------------------------
+
+_SCOPE = threading.local()
+
+
+def current_mesh():
+    """The mesh of the innermost ``axis_rules`` scope (None outside one)."""
+    return getattr(_SCOPE, "mesh", None)
+
+
+def current_rules() -> Dict[str, MeshAxes]:
+    return getattr(_SCOPE, "rules", None) or {}
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, rules: Optional[Dict[str, MeshAxes]]):
+    """Scope a (mesh, logical-name -> mesh-axes) rule table.
+
+    ``mesh`` may be None (spec resolution only, e.g. building PartitionSpec
+    trees host-side); ``constrain`` is a no-op without a mesh.
+    """
+    prev_mesh = getattr(_SCOPE, "mesh", None)
+    prev_rules = getattr(_SCOPE, "rules", None)
+    _SCOPE.mesh = mesh
+    _SCOPE.rules = dict(rules or {})
+    try:
+        yield
+    finally:
+        _SCOPE.mesh = prev_mesh
+        _SCOPE.rules = prev_rules
+
+
+def resolve(name: AxisName) -> MeshAxes:
+    """Logical name -> mesh axes under the current rules (unknown -> None)."""
+    if name is None:
+        return None
+    return current_rules().get(name)
+
+
+def spec(*names: AxisName) -> P:
+    """PartitionSpec for logical dim names under the current rules."""
+    return P(*(resolve(n) for n in names))
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def specs_for_axes(axes_tree: Any) -> Any:
+    """Map an axes tree (from ``split_params``) to PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda axes: spec(*axes), axes_tree, is_leaf=_is_axes_leaf
+    )
+
+
+def constrain(x: jax.Array, *names: AxisName) -> jax.Array:
+    """In-graph sharding constraint by logical names; identity without an
+    active mesh/rule scope (single-device tests, host-side code)."""
+    mesh = current_mesh()
+    rules = current_rules()
+    if mesh is None or not rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec(*names)))
+
+
+def _default_axes(leaf: Any) -> Tuple[AxisName, ...]:
+    shape = getattr(leaf, "shape", None)
+    return (None,) * len(shape) if shape is not None else ()
+
+
+def split_params(tree: Any) -> Tuple[Any, Any]:
+    """Split a Param tree into (values, axes) trees of identical structure.
+
+    Non-Param leaves pass through with all-None (replicated) axes, so trees
+    can mix annotated and plain parameters.
+    """
+    is_leaf = lambda x: isinstance(x, Param)
+    values = jax.tree_util.tree_map(
+        lambda x: x.value if isinstance(x, Param) else x, tree, is_leaf=is_leaf
+    )
+    axes = jax.tree_util.tree_map(
+        lambda x: x.axes if isinstance(x, Param) else _default_axes(x),
+        tree,
+        is_leaf=is_leaf,
+    )
+    return values, axes
+
+
+def prepend_axis(tree: Any, name: AxisName) -> Any:
+    """Prepend a logical name to every Param's axes (stacked/vmapped trees)."""
+    return jax.tree_util.tree_map(
+        lambda x: Param(x.value, (name,) + x.axes) if isinstance(x, Param) else x,
+        tree,
+        is_leaf=lambda x: isinstance(x, Param),
+    )

@@ -75,9 +75,8 @@ def _fm_cell(cfg_overrides=None, emb_mode="row"):
     model = FMModel(cfg)
     specs = model.input_specs(cfg.batch_size)
     in_specs = {"sparse": P(("data",), None), "label": P(("data",))}
-    emb_cfg = model.emb_cfg(cfg.batch_size, writeback=True)
     return recsys_cell("fm", "train_batch", model, "train", specs, in_specs,
-                       emb_cfg, emb_mode, {"batch": ("data",), "seq": None})
+                       emb_mode, {"batch": ("data",), "seq": None})
 
 
 EXPERIMENTS = {

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cached_embedding as ce
 from repro.data import graphs, synth
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -28,7 +27,6 @@ def _recsys_runner(arch: str, batch: int):
         model = DLRM(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
-        emb_cfg = model.emb_cfg_train
     elif arch == "fm":
         from repro.models.recsys_models import FMConfig, FMModel
 
@@ -36,7 +34,6 @@ def _recsys_runner(arch: str, batch: int):
         model = FMModel(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
-        emb_cfg = model.emb_cfg()
     elif arch in ("din", "dien", "mind"):
         from repro.models.recsys_models import (DIENConfig, DIENModel, DINConfig,
                                                 DINModel, MINDConfig, MINDModel)
@@ -54,14 +51,10 @@ def _recsys_runner(arch: str, batch: int):
             model = (DINModel if arch == "din" else DIENModel)(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
                 cfg.n_items, cfg.n_users, cfg.seq_len, batch, 0, s, n_cates=cfg.n_cates).items()}
-        emb_cfg = model.emb_cfg()
     else:
         raise ValueError(arch)
 
-    def flush(state):
-        return dict(state, emb=ce.flush_state(emb_cfg, state["emb"]))
-
-    return model, make, flush
+    return model, make, model.flush
 
 
 def main():

@@ -1,5 +1,13 @@
 """Shared model scaffolding: losses, metrics, the cached-embedding train-step
-pattern (prepare -> diff gather -> synchronous row update)."""
+pattern (prepare -> diff gather -> synchronous row update).
+
+``CollectionTrainStep`` is the collection-era pattern every recsys model
+uses: a ``FeatureBatch`` goes through ``EmbeddingCollection.prepare`` outside
+the grad closure, the loss differentiates w.r.t. ``collection.weights`` (the
+fast tiers), and ``apply_grads`` performs the synchronous row update.
+``EmbTrainStep`` is the legacy single-arena variant kept for the
+``cached_embedding`` adapter path.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,9 +17,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cached_embedding as ce
+from repro.core.collection import EmbeddingCollection, FeatureBatch
 from repro.optim.optimizers import Optimizer
 
-__all__ = ["bce_with_logits", "softmax_xent", "auc_proxy", "EmbTrainStep"]
+__all__ = [
+    "bce_with_logits",
+    "softmax_xent",
+    "auc_proxy",
+    "flush_embeddings",
+    "EmbTrainStep",
+    "CollectionTrainStep",
+]
+
+
+def flush_embeddings(collection: "EmbeddingCollection", state: Dict[str, Any]) -> Dict[str, Any]:
+    """The shared pre-checkpoint barrier: flush every cached slab under the
+    ``emb`` key (models expose this as ``model.flush``)."""
+    return dict(state, emb=collection.flush(state["emb"]))
 
 
 def bce_with_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
@@ -77,6 +99,50 @@ class EmbTrainStep:
             "hit_rate": emb_state.cache.hit_rate(),
             "cache_misses": emb_state.cache.misses,
             "uniq_overflows": emb_state.cache.uniq_overflows,
+            **aux,
+        }
+        new_state = dict(state, params=params, opt=opt_state, emb=emb_state, step=state["step"] + 1)
+        return new_state, metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectionTrainStep:
+    """Jittable train step over an ``EmbeddingCollection``.
+
+    ``features(batch) -> FeatureBatch`` replaces the hand-flattened
+    ``collect_ids``; ``fwd(dense_params, rows, batch) -> (logits, aux)``
+    receives the keyed gather output (feature name -> [.., dim] rows) so
+    gradients reach the fast-tier weights of every slab — DEVICE tables and
+    cached arenas alike.
+    """
+
+    collection: EmbeddingCollection
+    optimizer: Optimizer
+    features: Callable[[Dict[str, jnp.ndarray]], FeatureBatch]
+    fwd: Callable[..., Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
+    loss: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray] = bce_with_logits
+    emb_lr: float = 0.05
+
+    def __call__(self, state: Dict[str, Any], batch: Dict[str, jnp.ndarray]):
+        fb = self.features(batch)
+        emb_state, addresses = self.collection.prepare(state["emb"], fb)
+
+        def loss_fn(dense_params, emb_weights):
+            rows = self.collection.gather(emb_weights, addresses, fb)
+            logits, aux = self.fwd(dense_params, rows, batch)
+            return self.loss(logits, batch["label"]), (logits, aux)
+
+        (loss_val, (logits, aux)), grads = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(state["params"], self.collection.weights(emb_state))
+        params, opt_state = self.optimizer.update(
+            grads[0], state["opt"], state["params"], state["step"]
+        )
+        emb_state = self.collection.apply_grads(emb_state, grads[1], self.emb_lr)
+        metrics = {
+            "loss": loss_val,
+            "auc": auc_proxy(logits, batch["label"]),
+            **self.collection.metrics(emb_state),
             **aux,
         }
         new_state = dict(state, params=params, opt=opt_state, emb=emb_state, step=state["step"] + 1)

@@ -1,9 +1,15 @@
 """DLRM (Naumov et al. 2019) — the paper's evaluation model, embeddings served
-through the frequency-aware software cache.
+through the planner-driven ``EmbeddingCollection``.
 
 Paper §5.1 configuration: embedding dim 128 for every table, bottom MLP
 512-256-128 over 13 dense features, dot-product feature interaction, top MLP
 1024-1024-512-256-1, SGD with constant LR.
+
+Placement: with ``device_budget_bytes=None`` every sparse field is GROUPED
+into one shared cache arena — the paper's original one-big-table layout, so
+training curves are invariant to the cache ratio (tested parity property).
+With a budget, ``PlacementPlanner`` promotes small/hot tables to DEVICE and
+leaves the rest cached — the mixed-placement production layout.
 """
 from __future__ import annotations
 
@@ -14,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cached_embedding as ce
+from repro.core import collection as col
 from repro.dist.partitioning import constrain, split_params
 from repro.models import common
 from repro.nn.layers import Dtypes, mlp, mlp_init
@@ -38,34 +44,48 @@ class DLRMConfig:
     policy: Any = None  # core.Policy; None -> FREQ_LFU
     dtypes: Dtypes = Dtypes(param=jnp.float32, compute=jnp.float32)
     use_pallas: bool = False
+    device_budget_bytes: Optional[int] = None  # None = paper single-arena mode
 
     @property
     def n_sparse(self) -> int:
         return len(self.vocab_sizes)
 
-    def emb_cfg(self, batch_size: Optional[int] = None, writeback: bool = True):
-        from repro.core.policies import Policy
-
-        b = batch_size or self.batch_size
-        return ce.CachedEmbeddingConfig(
-            vocab_sizes=self.vocab_sizes,
-            dim=self.embed_dim,
-            ids_per_step=b * self.n_sparse,
-            cache_ratio=self.cache_ratio,
-            buffer_rows=self.buffer_rows,
-            policy=self.policy or Policy.FREQ_LFU,
-            writeback=writeback,
-            dtype=self.dtypes.param,
-            max_unique_per_step=self.max_unique_per_step,
-        )
-
 
 class DLRM:
     def __init__(self, cfg: DLRMConfig):
+        from repro.core.policies import Policy
+
         self.cfg = cfg
         f = cfg.n_sparse + 1  # embeddings + bottom-MLP output
         self.top_in = cfg.embed_dim + f * (f - 1) // 2
         self.optimizer = opt_lib.sgd(cfg.lr)
+        self.feature_names = tuple(f"f{i}" for i in range(cfg.n_sparse))
+        policy = cfg.policy or Policy.FREQ_LFU
+        tables = [
+            col.TableConfig(
+                name=n,
+                vocab=v,
+                dim=cfg.embed_dim,
+                ids_per_step=cfg.batch_size,
+                cache_ratio=cfg.cache_ratio,
+                policy=policy,
+                buffer_rows=cfg.buffer_rows,
+                # the config bound applies per table when the planner carves
+                # solo CACHED slabs; the GROUPED arena uses the same value
+                # collection-wide (passed to create below).
+                max_unique_per_step=cfg.max_unique_per_step,
+                dtype=cfg.dtypes.param,
+            )
+            for n, v in zip(self.feature_names, cfg.vocab_sizes)
+        ]
+        self.collection = col.EmbeddingCollection.create(
+            tables,
+            budget_bytes=cfg.device_budget_bytes,
+            cache_ratio=cfg.cache_ratio,
+            policy=policy,
+            buffer_rows=cfg.buffer_rows,
+            max_unique_per_step=cfg.max_unique_per_step,
+        )
 
     # ----- params ----------------------------------------------------------
     def init(self, rng: jax.Array, counts: Optional[np.ndarray] = None) -> Dict[str, Any]:
@@ -77,7 +97,12 @@ class DLRM:
                 "top": mlp_init(k_top, (self.top_in,) + cfg.top_mlp + (1,), cfg.dtypes),
             }
         )
-        emb = ce.init_state(k_emb, self.emb_cfg_train, counts=counts)
+        counts_by_table = (
+            self.collection.split_concat_counts(np.asarray(counts))
+            if counts is not None
+            else None
+        )
+        emb = self.collection.init(k_emb, counts=counts_by_table)
         return {
             "params": params,
             "opt": self.optimizer.init(params),
@@ -85,9 +110,12 @@ class DLRM:
             "step": jnp.zeros((), jnp.int32),
         }
 
-    @property
-    def emb_cfg_train(self):
-        return self.cfg.emb_cfg()
+    def features(self, batch) -> col.FeatureBatch:
+        return col.FeatureBatch.from_onehot(self.feature_names, batch["sparse"])
+
+    def flush(self, state):
+        """Cache barrier (pre-checkpoint): slow tiers become authoritative."""
+        return common.flush_embeddings(self.collection, state)
 
     # ----- forward ----------------------------------------------------------
     def interact(self, dense_vec: jnp.ndarray, emb: jnp.ndarray) -> jnp.ndarray:
@@ -99,10 +127,9 @@ class DLRM:
         iu, ju = jnp.triu_indices(f, k=1)
         return zz[:, iu, ju]  # [B, F*(F-1)/2]
 
-    def fwd(self, params, emb_rows, batch):
+    def fwd(self, params, rows: Dict[str, jnp.ndarray], batch):
         cfg = self.cfg
-        b = batch["dense"].shape[0]
-        emb = emb_rows.reshape(b, cfg.n_sparse, cfg.embed_dim)
+        emb = jnp.stack([rows[n] for n in self.feature_names], axis=1)  # [B, F, D]
         emb = constrain(emb, "batch", None, None)
         dense_vec = mlp(params["bottom"], batch["dense"].astype(cfg.dtypes.compute), cfg.dtypes, final_act=True)
         x = jnp.concatenate([dense_vec, self.interact(dense_vec, emb)], axis=-1)
@@ -110,27 +137,22 @@ class DLRM:
         return logits, {}
 
     # ----- steps -------------------------------------------------------------
-    def collect_ids(self, batch):
-        emb_state_offsets_needed = batch["sparse"]  # [B, F] local per-field ids
-        return emb_state_offsets_needed  # translated in train_step via globalize
-
     def train_step(self, state, batch):
-        cfg = self.cfg
-        emb_cfg = self.emb_cfg_train
-        step = common.EmbTrainStep(
-            emb_cfg=emb_cfg,
+        step = common.CollectionTrainStep(
+            collection=self.collection,
             optimizer=self.optimizer,
-            collect_ids=lambda b: ce.globalize(state["emb"], b["sparse"]).reshape(-1),
+            features=self.features,
             fwd=self.fwd,
-            emb_lr=cfg.lr,
+            emb_lr=self.cfg.lr,
         )
         return step(state, batch)
 
     def serve_step(self, state, batch):
         """Inference: cache read path without writeback bookkeeping cost."""
-        emb_cfg = self.cfg.emb_cfg(batch_size=batch["sparse"].shape[0], writeback=False)
-        emb_state, _, emb = ce.embed_onehot(emb_cfg, state["emb"], batch["sparse"])
-        logits, _ = self.fwd(state["params"], emb.reshape(-1, self.cfg.embed_dim), batch)
+        emb_state, _, rows = self.collection.lookup(
+            state["emb"], self.features(batch), writeback=False
+        )
+        logits, _ = self.fwd(state["params"], rows, batch)
         return logits, emb_state
 
     # ----- specs -------------------------------------------------------------

@@ -1,5 +1,12 @@
-"""Assigned recsys archs — DIN, DIEN, FM, MIND — all with their (huge) sparse
-tables served through the paper's frequency-aware cache.
+"""Assigned recsys archs — DIN, DIEN, FM, MIND — sparse tables served through
+the planner-driven ``EmbeddingCollection`` (keyed ``FeatureBatch`` in, keyed
+embedding rows out).
+
+Every model declares logical tables (items / cates / users / per-field) and
+which features hit them; the default plan GROUPs all tables into one shared
+cache arena — the paper's concatenated-table layout — while tests and
+deployments may pass a ``PlacementPlanner`` budget to promote small tables
+to DEVICE residency.
 
 Shared batch schema (synthetic Amazon/Taobao/Criteo-like):
   DIN/DIEN: hist_items [B,T], hist_cates [B,T], hist_len [B], target_item [B],
@@ -8,9 +15,10 @@ Shared batch schema (synthetic Amazon/Taobao/Criteo-like):
   FM:       sparse [B, 39], label [B]
 
 ``retrieval_score`` (the retrieval_cand shape) scores one user against 10^6
-candidates as a batched matmul against the *full* (flushed) table — bulk
-scoring bypasses the cache bookkeeping by design (the cache accelerates the
-per-request user-side lookups; candidate scans read the authoritative tier).
+candidates as a batched matmul against the *full* (slow-tier) table via
+``collection.full_lookup`` — bulk scoring bypasses the cache bookkeeping by
+design (the cache accelerates the per-request user-side lookups; candidate
+scans read the authoritative tier).
 """
 from __future__ import annotations
 
@@ -21,8 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cached_embedding as ce
-from repro.core.policies import Policy
+from repro.core import collection as col
 from repro.dist.partitioning import Param, constrain, split_params
 from repro.models import common
 from repro.nn import recsys as R
@@ -32,23 +39,6 @@ from repro.optim import optimizers as opt_lib
 __all__ = ["FMConfig", "FMModel", "DINConfig", "DINModel", "DIENConfig", "DIENModel", "MINDConfig", "MINDModel"]
 
 F32 = Dtypes(param=jnp.float32, compute=jnp.float32)
-
-
-def _emb_cfg(vocab_sizes, dim, ids_per_step, cache_ratio, writeback=True, max_unique=0,
-             policy=Policy.FREQ_LFU, dtype=jnp.float32, protect_via_inverse=True,
-             buffer_rows=65536):
-    return ce.CachedEmbeddingConfig(
-        vocab_sizes=tuple(vocab_sizes),
-        dim=dim,
-        ids_per_step=ids_per_step,
-        cache_ratio=cache_ratio,
-        policy=policy,
-        writeback=writeback,
-        max_unique_per_step=max_unique,
-        dtype=dtype,
-        protect_via_inverse=protect_via_inverse,
-        buffer_rows=buffer_rows,
-    )
 
 
 # ===========================================================================
@@ -76,47 +66,64 @@ class FMModel:
     def __init__(self, cfg: FMConfig):
         self.cfg = cfg
         self.optimizer = opt_lib.sgd(cfg.lr)
-
-    def emb_cfg(self, batch_size=None, writeback=True):
-        c = self.cfg
-        b = batch_size or c.batch_size
-        return _emb_cfg(
-            c.vocab_sizes, c.embed_dim + 1, b * len(c.vocab_sizes), c.cache_ratio,
-            writeback=writeback, max_unique=c.max_unique_per_step,
-            dtype=c.emb_dtype, protect_via_inverse=c.protect_via_inverse,
-            buffer_rows=c.buffer_rows,
+        self.feature_names = tuple(f"f{i}" for i in range(len(cfg.vocab_sizes)))
+        tables = [
+            col.TableConfig(
+                name=n,
+                vocab=v,
+                dim=cfg.embed_dim + 1,
+                ids_per_step=cfg.batch_size,
+                dtype=cfg.emb_dtype,
+            )
+            for n, v in zip(self.feature_names, cfg.vocab_sizes)
+        ]
+        self.collection = col.EmbeddingCollection.create(
+            tables,
+            cache_ratio=cfg.cache_ratio,
+            max_unique_per_step=cfg.max_unique_per_step,
+            protect_via_inverse=cfg.protect_via_inverse,
+            buffer_rows=cfg.buffer_rows,
         )
 
     def init(self, rng, counts: Optional[np.ndarray] = None):
         k_emb, k_b = jax.random.split(rng)
         params = {"bias": jnp.zeros((), jnp.float32)}
-        emb = ce.init_state(k_emb, self.emb_cfg(), counts=counts)
+        counts_by_table = (
+            self.collection.split_concat_counts(np.asarray(counts)) if counts is not None else None
+        )
+        emb = self.collection.init(k_emb, counts=counts_by_table)
         return {"params": params, "opt": self.optimizer.init(params), "emb": emb,
                 "step": jnp.zeros((), jnp.int32)}
 
-    def fwd(self, params, emb_rows, batch):
+    def features(self, batch) -> col.FeatureBatch:
+        names = self.feature_names[: batch["sparse"].shape[1]]
+        return col.FeatureBatch.from_onehot(names, batch["sparse"])
+
+    def flush(self, state):
+        return common.flush_embeddings(self.collection, state)
+
+    def fwd(self, params, rows: Dict[str, jnp.ndarray], batch):
         c = self.cfg
-        b, f = batch["sparse"].shape
-        rows = emb_rows.reshape(b, f, c.embed_dim + 1)
-        v, w = rows[..., : c.embed_dim], rows[..., c.embed_dim]
+        names = self.feature_names[: batch["sparse"].shape[1]]
+        stacked = jnp.stack([rows[n] for n in names], axis=1)  # [B, F, D+1]
+        v, w = stacked[..., : c.embed_dim], stacked[..., c.embed_dim]
         logits = params["bias"] + w.sum(-1) + R.fm_interaction(v, use_pallas=c.use_pallas)
         return logits, {}
 
     def train_step(self, state, batch):
-        step = common.EmbTrainStep(
-            emb_cfg=self.emb_cfg(batch["sparse"].shape[0]),
+        step = common.CollectionTrainStep(
+            collection=self.collection,
             optimizer=self.optimizer,
-            collect_ids=lambda bt: ce.globalize(state["emb"], bt["sparse"]).reshape(-1),
+            features=self.features,
             fwd=self.fwd,
             emb_lr=self.cfg.lr,
         )
         return step(state, batch)
 
     def serve_step(self, state, batch):
-        emb_cfg = self.emb_cfg(batch["sparse"].shape[0], writeback=False)
-        ids = ce.globalize(state["emb"], batch["sparse"]).reshape(-1)
-        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
-        rows = ce.gather_slots(emb_state, slots)
+        emb_state, _, rows = self.collection.lookup(
+            state["emb"], self.features(batch), writeback=False
+        )
         logits, _ = self.fwd(state["params"], rows, batch)
         return logits, emb_state
 
@@ -125,16 +132,16 @@ class FMModel:
         c = self.cfg
         ctx = batch["sparse"]  # [1, 38] fields 0..37
         cands = batch["candidates"]  # [n_cand] local ids of field 38
-        emb_cfg = self.emb_cfg(1, writeback=False)
-        # user-side context rows via the cache tier
-        gctx = (ctx.astype(jnp.int32) + state["emb"].offsets[:-1]).reshape(-1)
-        pad = jnp.full((emb_cfg.ids_per_step - gctx.size,), -1, jnp.int32)
-        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], jnp.concatenate([gctx, pad]))
-        ctx_rows = ce.gather_slots(emb_state, slots)[: gctx.size]
+        # user-side context rows via the cache tier (read-only)
+        emb_state, _, rows = self.collection.lookup(
+            state["emb"], self.features(batch), writeback=False
+        )
+        ctx_rows = jnp.stack(
+            [rows[n][0] for n in self.feature_names[: ctx.shape[1]]], axis=0
+        )  # [38, D+1]
         vc, wc = ctx_rows[:, : c.embed_dim], ctx_rows[:, c.embed_dim]
-        # candidate rows: bulk scan of the full table (batched gather+dot, no loop)
-        rows_idx = emb_state.idx_map[cands + emb_state.offsets[-1]]
-        cand_rows = jnp.take(emb_state.full["weight"], rows_idx, axis=0)
+        # candidate rows: bulk scan of the slow tier (batched gather+dot, no loop)
+        cand_rows = self.collection.full_lookup(emb_state, self.feature_names[-1], cands)
         vk, wk = cand_rows[:, : c.embed_dim], cand_rows[:, c.embed_dim]
         # FM score restricted to terms involving the candidate + context-only terms
         s_ctx = vc.sum(0)  # [D]
@@ -157,7 +164,8 @@ class FMModel:
 
 # ===========================================================================
 # DIN (arXiv:1706.06978): target attention over behaviour history.
-# Tables: items, categories, users (embed_dim 18 each).
+# Tables: items, categories, users (embed_dim 18 each) — hist and target
+# features share the item/cate tables through the keyed-feature map.
 # ===========================================================================
 
 
@@ -181,21 +189,25 @@ class DINModel:
     def __init__(self, cfg: DINConfig):
         self.cfg = cfg
         self.optimizer = opt_lib.sgd(cfg.lr)
+        b, t = cfg.batch_size, cfg.seq_len
+        tables = [
+            col.TableConfig("items", cfg.n_items, cfg.embed_dim, b * (t + 1),
+                            feature_names=("hist_items", "target_item")),
+            col.TableConfig("cates", cfg.n_cates, cfg.embed_dim, b * (t + 1),
+                            feature_names=("hist_cates", "target_cate")),
+            col.TableConfig("users", cfg.n_users, cfg.embed_dim, b,
+                            feature_names=("user",)),
+        ]
+        self.collection = col.EmbeddingCollection.create(
+            tables,
+            cache_ratio=cfg.cache_ratio,
+            max_unique_per_step=cfg.max_unique_per_step,
+        )
 
     @property
     def vocab_sizes(self):
         c = self.cfg
         return (c.n_items, c.n_cates, c.n_users)
-
-    def ids_per_batch(self, b):
-        # hist items + hist cates + target item + target cate + user
-        return b * (2 * self.cfg.seq_len + 3)
-
-    def emb_cfg(self, batch_size=None, writeback=True):
-        c = self.cfg
-        b = batch_size or c.batch_size
-        return _emb_cfg(self.vocab_sizes, c.embed_dim, self.ids_per_batch(b), c.cache_ratio,
-                        writeback=writeback, max_unique=c.max_unique_per_step)
 
     def init(self, rng, counts: Optional[np.ndarray] = None):
         c = self.cfg
@@ -207,29 +219,34 @@ class DINModel:
                 "mlp": mlp_init(k_mlp, (d + 2 * (2 * d),) + c.mlp + (1,), c.dtypes),
             }
         )
-        emb = ce.init_state(k_emb, self.emb_cfg(), counts=counts)
+        counts_by_table = (
+            self.collection.split_concat_counts(np.asarray(counts)) if counts is not None else None
+        )
+        emb = self.collection.init(k_emb, counts=counts_by_table)
         return {"params": params, "opt": self.optimizer.init(params), "emb": emb,
                 "step": jnp.zeros((), jnp.int32)}
 
-    def collect_ids(self, emb_state, batch):
-        off = emb_state.offsets
-        b = batch["hist_items"].shape[0]
-        hist_mask = jnp.arange(self.cfg.seq_len)[None, :] < batch["hist_len"][:, None]
-        hi = jnp.where(hist_mask, batch["hist_items"] + off[0], -1)
-        hc = jnp.where(hist_mask, batch["hist_cates"] + off[1], -1)
-        ti = (batch["target_item"] + off[0])[:, None]
-        tc = (batch["target_cate"] + off[1])[:, None]
-        us = (batch["user"] + off[2])[:, None]
-        return jnp.concatenate([hi, hc, ti, tc, us], axis=1).reshape(-1).astype(jnp.int32)
+    def features(self, batch) -> col.FeatureBatch:
+        t = self.cfg.seq_len
+        hist_mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
+        ids = {
+            "hist_items": jnp.where(hist_mask, batch["hist_items"], -1),
+            "hist_cates": jnp.where(hist_mask, batch["hist_cates"], -1),
+            "target_item": batch["target_item"],
+            "target_cate": batch["target_cate"],
+            "user": batch["user"],
+        }
+        return col.FeatureBatch(ids={k: v.astype(jnp.int32) for k, v in ids.items()})
 
-    def fwd(self, params, emb_rows, batch):
+    def flush(self, state):
+        return common.flush_embeddings(self.collection, state)
+
+    def fwd(self, params, rows: Dict[str, jnp.ndarray], batch):
         c = self.cfg
-        d, t = c.embed_dim, c.seq_len
-        b = batch["hist_items"].shape[0]
-        rows = emb_rows.reshape(b, 2 * t + 3, d)
-        hist = jnp.concatenate([rows[:, :t], rows[:, t : 2 * t]], axis=-1)  # [B,T,2D]
-        target = jnp.concatenate([rows[:, 2 * t], rows[:, 2 * t + 1]], axis=-1)  # [B,2D]
-        user = rows[:, 2 * t + 2]
+        t = c.seq_len
+        hist = jnp.concatenate([rows["hist_items"], rows["hist_cates"]], axis=-1)  # [B,T,2D]
+        target = jnp.concatenate([rows["target_item"], rows["target_cate"]], axis=-1)  # [B,2D]
+        user = rows["user"]
         mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
         pooled = R.din_attention(params["attn"], hist, target, mask, c.dtypes)  # [B,2D]
         x = jnp.concatenate([user, pooled, target], axis=-1)
@@ -238,48 +255,41 @@ class DINModel:
         return logits, {}
 
     def train_step(self, state, batch):
-        step = common.EmbTrainStep(
-            emb_cfg=self.emb_cfg(batch["hist_items"].shape[0]),
+        step = common.CollectionTrainStep(
+            collection=self.collection,
             optimizer=self.optimizer,
-            collect_ids=lambda bt: self.collect_ids(state["emb"], bt),
+            features=self.features,
             fwd=self.fwd,
             emb_lr=self.cfg.lr,
         )
         return step(state, batch)
 
     def serve_step(self, state, batch):
-        emb_cfg = self.emb_cfg(batch["hist_items"].shape[0], writeback=False)
-        ids = self.collect_ids(state["emb"], batch)
-        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
-        rows = ce.gather_slots(emb_state, slots)
+        emb_state, _, rows = self.collection.lookup(
+            state["emb"], self.features(batch), writeback=False
+        )
         logits, _ = self.fwd(state["params"], rows, batch)
         return logits, emb_state
 
     def retrieval_score(self, state, batch):
         """One user history vs n_cand candidate items (shared-user batched dot)."""
         c = self.cfg
-        emb_cfg = self.emb_cfg(1, writeback=False)
         b1 = {k: v for k, v in batch.items() if k not in ("candidates", "candidate_cates")}
         b1.setdefault("target_item", jnp.zeros((1,), jnp.int32))
         b1.setdefault("target_cate", jnp.zeros((1,), jnp.int32))
-        ids = self.collect_ids(state["emb"], b1)
-        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
-        rows = ce.gather_slots(emb_state, slots)
+        emb_state, _, rows = self.collection.lookup(
+            state["emb"], self.features(b1), writeback=False
+        )
         d, t = c.embed_dim, c.seq_len
-        rows = rows.reshape(1, 2 * t + 3, d)
-        hist = jnp.concatenate([rows[:, :t], rows[:, t : 2 * t]], axis=-1)
-        user = rows[:, 2 * t + 2]
+        hist = jnp.concatenate([rows["hist_items"], rows["hist_cates"]], axis=-1)  # [1,T,2D]
+        user = rows["user"]  # [1,D]
         mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
 
-        cands = batch["candidates"]  # [n_cand] item ids; category = item's cate id array
-        cand_cates = batch["candidate_cates"]
-        rowsi = emb_state.idx_map[cands + emb_state.offsets[0]]
-        rowsc = emb_state.idx_map[cand_cates + emb_state.offsets[1]]
-        ti = jnp.take(emb_state.full["weight"], rowsi, axis=0)
-        tc = jnp.take(emb_state.full["weight"], rowsc, axis=0)
+        ti = self.collection.full_lookup(emb_state, "items", batch["candidates"])
+        tc = self.collection.full_lookup(emb_state, "cates", batch["candidate_cates"])
         targets = jnp.concatenate([ti, tc], axis=-1)  # [n_cand, 2D]
 
-        n = cands.shape[0]
+        n = batch["candidates"].shape[0]
         histb = jnp.broadcast_to(hist, (n,) + hist.shape[1:])
         maskb = jnp.broadcast_to(mask, (n, t))
         pooled = R.din_attention(state["params"]["attn"], histb, targets, maskb, c.dtypes)
@@ -339,18 +349,19 @@ class DIENModel(DINModel):
                 "mlp": mlp_init(k_mlp, (d + 2 * d + c.gru_dim,) + c.mlp + (1,), c.dtypes),
             }
         )
-        emb = ce.init_state(k_emb, self.emb_cfg(), counts=counts)
+        counts_by_table = (
+            self.collection.split_concat_counts(np.asarray(counts)) if counts is not None else None
+        )
+        emb = self.collection.init(k_emb, counts=counts_by_table)
         return {"params": params, "opt": self.optimizer.init(params), "emb": emb,
                 "step": jnp.zeros((), jnp.int32)}
 
-    def fwd(self, params, emb_rows, batch):
+    def fwd(self, params, rows: Dict[str, jnp.ndarray], batch):
         c: DIENConfig = self.cfg  # type: ignore[assignment]
-        d, t = c.embed_dim, c.seq_len
-        b = batch["hist_items"].shape[0]
-        rows = emb_rows.reshape(b, 2 * t + 3, d)
-        hist = jnp.concatenate([rows[:, :t], rows[:, t : 2 * t]], axis=-1)
-        target = jnp.concatenate([rows[:, 2 * t], rows[:, 2 * t + 1]], axis=-1)
-        user = rows[:, 2 * t + 2]
+        t = c.seq_len
+        hist = jnp.concatenate([rows["hist_items"], rows["hist_cates"]], axis=-1)
+        target = jnp.concatenate([rows["target_item"], rows["target_cate"]], axis=-1)
+        user = rows["user"]
         mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
 
         interest = R.gru(params["gru1"], hist, c.dtypes)  # [B,T,H]
@@ -374,22 +385,19 @@ class DIENModel(DINModel):
         cost, not a retrieval-stage one).
         """
         c: DIENConfig = self.cfg  # type: ignore[assignment]
-        d, t = c.embed_dim, c.seq_len
-        emb_cfg = self.emb_cfg(1, writeback=False)
+        t = c.seq_len
         b1 = {k: v for k, v in batch.items() if k not in ("candidates", "candidate_cates")}
         b1.setdefault("target_item", jnp.zeros((1,), jnp.int32))
         b1.setdefault("target_cate", jnp.zeros((1,), jnp.int32))
-        ids = self.collect_ids(state["emb"], b1)
-        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
-        rows = ce.gather_slots(emb_state, slots).reshape(1, 2 * t + 3, d)
-        hist = jnp.concatenate([rows[:, :t], rows[:, t : 2 * t]], axis=-1)
+        emb_state, _, rows = self.collection.lookup(
+            state["emb"], self.features(b1), writeback=False
+        )
+        hist = jnp.concatenate([rows["hist_items"], rows["hist_cates"]], axis=-1)
         mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
         interest = R.gru(state["params"]["gru1"], hist, c.dtypes)[0]  # [T,H]
 
-        rowsi = emb_state.idx_map[batch["candidates"] + emb_state.offsets[0]]
-        rowsc = emb_state.idx_map[batch["candidate_cates"] + emb_state.offsets[1]]
-        ti = jnp.take(emb_state.full["weight"], rowsi, axis=0)
-        tc = jnp.take(emb_state.full["weight"], rowsc, axis=0)
+        ti = self.collection.full_lookup(emb_state, "items", batch["candidates"])
+        tc = self.collection.full_lookup(emb_state, "cates", batch["candidate_cates"])
         targets = jnp.concatenate([ti, tc], axis=-1)  # [N, 2D]
         tq = targets @ state["params"]["attn_proj"]["w"].astype(c.dtypes.compute)  # [N,H]
         att = (tq @ interest.T) / np.sqrt(c.gru_dim)  # [N,T]
@@ -424,37 +432,47 @@ class MINDModel:
     def __init__(self, cfg: MINDConfig):
         self.cfg = cfg
         self.optimizer = opt_lib.sgd(cfg.lr)
+        b, t = cfg.batch_size, cfg.seq_len
+        tables = [
+            col.TableConfig("items", cfg.n_items, cfg.embed_dim, b * (t + 1),
+                            feature_names=("hist_items", "target_item")),
+            col.TableConfig("users", cfg.n_users, cfg.embed_dim, b,
+                            feature_names=("user",)),
+        ]
+        self.collection = col.EmbeddingCollection.create(
+            tables,
+            cache_ratio=cfg.cache_ratio,
+            max_unique_per_step=cfg.max_unique_per_step,
+        )
 
     @property
     def vocab_sizes(self):
         return (self.cfg.n_items, self.cfg.n_users)
-
-    def ids_per_batch(self, b):
-        return b * (self.cfg.seq_len + 2)  # hist + target + user
-
-    def emb_cfg(self, batch_size=None, writeback=True):
-        c = self.cfg
-        b = batch_size or c.batch_size
-        return _emb_cfg(self.vocab_sizes, c.embed_dim, self.ids_per_batch(b), c.cache_ratio,
-                        writeback=writeback, max_unique=c.max_unique_per_step)
 
     def init(self, rng, counts: Optional[np.ndarray] = None):
         c = self.cfg
         k_emb, k_s = jax.random.split(rng)
         params = {"s_matrix": jax.random.normal(k_s, (c.embed_dim, c.embed_dim), jnp.float32)
                   * (1.0 / np.sqrt(c.embed_dim))}
-        emb = ce.init_state(k_emb, self.emb_cfg(), counts=counts)
+        counts_by_table = (
+            self.collection.split_concat_counts(np.asarray(counts)) if counts is not None else None
+        )
+        emb = self.collection.init(k_emb, counts=counts_by_table)
         return {"params": params, "opt": self.optimizer.init(params), "emb": emb,
                 "step": jnp.zeros((), jnp.int32)}
 
-    def collect_ids(self, emb_state, batch):
-        off = emb_state.offsets
+    def features(self, batch) -> col.FeatureBatch:
         t = self.cfg.seq_len
         mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
-        hi = jnp.where(mask, batch["hist_items"] + off[0], -1)
-        ti = (batch["target_item"] + off[0])[:, None]
-        us = (batch["user"] + off[1])[:, None]
-        return jnp.concatenate([hi, ti, us], axis=1).reshape(-1).astype(jnp.int32)
+        ids = {
+            "hist_items": jnp.where(mask, batch["hist_items"], -1),
+            "target_item": batch["target_item"],
+            "user": batch["user"],
+        }
+        return col.FeatureBatch(ids={k: v.astype(jnp.int32) for k, v in ids.items()})
+
+    def flush(self, state):
+        return common.flush_embeddings(self.collection, state)
 
     def interests(self, params, hist, mask):
         c = self.cfg
@@ -462,12 +480,10 @@ class MINDModel:
             hist, mask, params["s_matrix"].astype(hist.dtype), c.n_interests, c.capsule_iters
         )  # [B,K,D]
 
-    def fwd(self, params, emb_rows, batch):
+    def fwd(self, params, rows: Dict[str, jnp.ndarray], batch):
         c = self.cfg
-        t, d = c.seq_len, c.embed_dim
-        b = batch["hist_items"].shape[0]
-        rows = emb_rows.reshape(b, t + 2, d)
-        hist, target, user = rows[:, :t], rows[:, t], rows[:, t + 1]
+        t = c.seq_len
+        hist, target, user = rows["hist_items"], rows["target_item"], rows["user"]
         mask = jnp.arange(t)[None, :] < batch["hist_len"][:, None]
         caps = self.interests(params, hist, mask)  # [B,K,D]
         caps = caps + user[:, None, :] * 0.0  # user id participates via ids only
@@ -479,38 +495,33 @@ class MINDModel:
         return logits, {}
 
     def train_step(self, state, batch):
-        step = common.EmbTrainStep(
-            emb_cfg=self.emb_cfg(batch["hist_items"].shape[0]),
+        step = common.CollectionTrainStep(
+            collection=self.collection,
             optimizer=self.optimizer,
-            collect_ids=lambda bt: self.collect_ids(state["emb"], bt),
+            features=self.features,
             fwd=self.fwd,
             emb_lr=self.cfg.lr,
         )
         return step(state, batch)
 
     def serve_step(self, state, batch):
-        emb_cfg = self.emb_cfg(batch["hist_items"].shape[0], writeback=False)
-        ids = self.collect_ids(state["emb"], batch)
-        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
-        rows = ce.gather_slots(emb_state, slots)
+        emb_state, _, rows = self.collection.lookup(
+            state["emb"], self.features(batch), writeback=False
+        )
         logits, _ = self.fwd(state["params"], rows, batch)
         return logits, emb_state
 
     def retrieval_score(self, state, batch):
         """Max-over-interests dot against 10^6 candidates (batched matmul)."""
         c = self.cfg
-        emb_cfg = self.emb_cfg(1, writeback=False)
-        ids = self.collect_ids(
-            state["emb"],
-            dict(batch, target_item=jnp.zeros((1,), jnp.int32)),
+        b1 = dict(batch, target_item=jnp.zeros((1,), jnp.int32))
+        b1.pop("candidates", None)
+        emb_state, _, rows = self.collection.lookup(
+            state["emb"], self.features(b1), writeback=False
         )
-        emb_state, slots = ce.prepare_ids(emb_cfg, state["emb"], ids)
-        rows = ce.gather_slots(emb_state, slots).reshape(1, c.seq_len + 2, c.embed_dim)
-        hist = rows[:, : c.seq_len]
         mask = jnp.arange(c.seq_len)[None, :] < batch["hist_len"][:, None]
-        caps = self.interests(state["params"], hist, mask)[0]  # [K,D]
-        rowsi = emb_state.idx_map[batch["candidates"] + emb_state.offsets[0]]
-        cand = jnp.take(emb_state.full["weight"], rowsi, axis=0)  # [N,D]
+        caps = self.interests(state["params"], rows["hist_items"], mask)[0]  # [K,D]
+        cand = self.collection.full_lookup(emb_state, "items", batch["candidates"])  # [N,D]
         scores = jnp.max(cand @ caps.T, axis=-1)  # [N]
         return scores, emb_state
 

@@ -20,10 +20,32 @@ __all__ = ["ServeEngine", "ServeStats"]
 
 @dataclasses.dataclass
 class ServeStats:
+    """Latency telemetry with O(1) memory under sustained traffic.
+
+    ``latencies`` is a fixed-size reservoir (Vitter's Algorithm R with a
+    seeded rng, so summaries are reproducible): every batch is counted in
+    ``batches``/``total_latency_s``, while the reservoir keeps a uniform
+    sample of per-batch latencies for the percentile estimates.
+    """
+
     requests: int = 0
     batches: int = 0
     total_latency_s: float = 0.0
+    reservoir_size: int = 2048
     latencies: List[float] = dataclasses.field(default_factory=list)
+    _rng: np.random.Generator = dataclasses.field(
+        default_factory=lambda: np.random.default_rng(0), repr=False
+    )
+
+    def observe(self, dt: float) -> None:
+        self.batches += 1
+        self.total_latency_s += dt
+        if len(self.latencies) < self.reservoir_size:
+            self.latencies.append(dt)
+        else:  # replace with probability size/seen — uniform over all batches
+            j = int(self._rng.integers(0, self.batches))
+            if j < self.reservoir_size:
+                self.latencies[j] = dt
 
     def p(self, q: float) -> float:
         return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
@@ -73,7 +95,5 @@ class ServeEngine:
             self.state = dict(self.state, emb=emb_state)
         dt = time.perf_counter() - t0
         self.stats.requests += n
-        self.stats.batches += 1
-        self.stats.total_latency_s += dt
-        self.stats.latencies.append(dt)
+        self.stats.observe(dt)
         return scores

@@ -4,9 +4,11 @@
     loop auto-resumes from the newest complete checkpoint (crash-safe), and
     because restore returns logical arrays, a restart may use a different
     mesh (elastic rescale) — shardings are re-applied here.
-  * cached-embedding consistency — models with a software-cache tier get
-    ``flush_fn`` called before every checkpoint so the slow tier is
-    authoritative (the cache itself stays warm).
+  * cached-embedding consistency — models with software-cache tiers get
+    ``flush_fn`` called before every checkpoint so the slow tiers are
+    authoritative (the caches stay warm); collection-era models pass
+    ``model.flush`` (an ``EmbeddingCollection.flush`` over every cached
+    slab), single-arena models wrap ``cached_embedding.flush_state``.
   * straggler detection — per-step wall times feed an EWMA + deviation
     monitor; steps slower than ``straggler_factor`` x the smoothed time fire
     ``on_straggler`` (log/report/abort — pluggable; on a real pod this wires
@@ -126,11 +128,12 @@ class Trainer:
                     n_over = int(jax.device_get(metrics["uniq_overflows"]))
                     if n_over:
                         raise RuntimeError(
-                            f"cache unique-buffer overflow at step {step_i}: "
-                            f"raise max_unique_per_step (exactness violated otherwise)"
+                            f"cache unique-buffer overflow at step {step_i}: raise "
+                            f"max_unique_per_step (per-table TableConfig bound, or the "
+                            f"arena bound for GROUPED tables — exactness violated otherwise)"
                         )
                 rec = {"step": step_i, "loss": loss, "time_s": dt}
-                for k in ("auc", "hit_rate", "grad_norm", "xent"):
+                for k in ("auc", "hit_rate", "cache_evictions", "grad_norm", "xent"):
                     if k in metrics:
                         rec[k] = float(jax.device_get(metrics[k]))
                 self.history.append(rec)

@@ -85,18 +85,13 @@ def test_async_checkpointer(tmp_path):
 
 
 def _run(model, cfg, tmp, steps, ckpt_every=2, interrupt_at=None):
-    from repro.core import cached_embedding as ce
-
-    def flush(state):
-        return dict(state, emb=ce.flush_state(model.emb_cfg_train, state["emb"]))
-
     trainer = Trainer(
         TrainerConfig(max_steps=interrupt_at or steps, ckpt_dir=str(tmp),
                       ckpt_every=ckpt_every, log_every=100),
         init_fn=lambda: model.init(jax.random.PRNGKey(0)),
         step_fn=jax.jit(model.train_step),
         make_batch=make_batch_fn(cfg),
-        flush_fn=flush,
+        flush_fn=model.flush,
     )
     state = trainer.run()
     return trainer, state

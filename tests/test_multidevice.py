@@ -139,7 +139,10 @@ def test_host_offload_slow_tier_compiles():
         specs = ce.shard_specs(cfg, mode="column")
         sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
                                     is_leaf=lambda x: isinstance(x, P))
-        sh.full["weight"] = sh.full["weight"].with_memory_kind("pinned_host")
+        # real TPUs expose pinned_host; older CPU backends only unpinned_host
+        kinds = {m.kind for d in jax.devices() for m in d.addressable_memories()}
+        host_kind = "pinned_host" if "pinned_host" in kinds else "unpinned_host"
+        sh.full["weight"] = sh.full["weight"].with_memory_kind(host_kind)
         st = jax.eval_shape(lambda: ce.init_state(jax.random.PRNGKey(0), cfg, warm=False))
         ids = jax.ShapeDtypeStruct((64,), jax.numpy.int32)
         compiled = jax.jit(lambda s, i: ce.prepare_ids(cfg, s, i),
