@@ -1,21 +1,24 @@
 """Cache-bookkeeping overhead (the paper's claim: 'cache-related operations
 ... introduce very little overhead'): prepare_ids cost vs the raw lookup,
-transmitter cost vs buffer size, and the collection-level comparison —
+transmitter cost vs buffer size, the collection-level comparison —
 planner-driven mixed placement (DEVICE + per-table caches) vs the paper's
-single shared arena."""
+single shared arena — and the pipelined execution engine: serial fused steps
+vs plan-under-compute with lookahead prefetch."""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Table, timeit
+from benchmarks.common import SMOKE, Table, timeit
 from repro.core import cached_embedding as ce
 from repro.core import collection as col
 
 
 def bench_cache_overhead(t: Table):
-    vocab, dim, n_ids = 1_000_000, 64, 16384
+    vocab, dim, n_ids = (50_000, 16, 1024) if SMOKE else (1_000_000, 64, 16384)
     cfg = ce.CachedEmbeddingConfig(vocab_sizes=(vocab,), dim=dim, ids_per_step=n_ids,
                                    cache_ratio=0.05)
     st = ce.init_state(jax.random.PRNGKey(0), cfg)
@@ -51,8 +54,12 @@ def bench_collection_placement(t: Table):
     """Mixed placement vs single arena: DEVICE tables skip Algorithm 1
     entirely, so the prepare+gather path gets cheaper as the planner promotes
     more tables — the planner's whole value proposition, measured."""
-    dim, batch = 64, 16384
-    vocabs = {"huge": 1_000_000, "mid": 100_000, "small": 20_000, "tiny": 4_096}
+    dim, batch = (16, 1024) if SMOKE else (64, 16384)
+    vocabs = (
+        {"huge": 50_000, "mid": 10_000, "small": 2_000, "tiny": 512}
+        if SMOKE
+        else {"huge": 1_000_000, "mid": 100_000, "small": 20_000, "tiny": 4_096}
+    )
     tables = [
         col.TableConfig(n, v, dim, ids_per_step=batch, cache_ratio=0.05)
         for n, v in vocabs.items()
@@ -79,8 +86,105 @@ def bench_collection_placement(t: Table):
               f"device_bytes={dev/1e6:.1f}MB plan={coll.plan.summary()}")
 
     run(col.EmbeddingCollection.create(tables, cache_ratio=0.05), "single_arena")
-    budget = int(120e6)  # promotes small+tiny+mid, caches huge
+    budget = int(4e6) if SMOKE else int(120e6)  # promotes small+tiny+mid, caches huge
     run(col.EmbeddingCollection.create(tables, budget_bytes=budget), "planned_mixed")
 
 
-ALL = [bench_cache_overhead, bench_collection_placement]
+def bench_pipeline(t: Table):
+    """Pipelined execution engine vs the serial fused step: steady-state step
+    wall time on a cached DLRM.  The pipelined path runs groups of ``depth``
+    steps off ONE merged cache plan (bookkeeping amortized k-fold) and
+    dispatches the next group's plan before blocking on any of this group's
+    losses, so the prepare stage leaves the loss-to-loss critical path.  Both
+    paths are loss-bit-identical (tested property) — only the schedule
+    differs.  Both paths donate the state so neither pays output copies."""
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+
+    if SMOKE:
+        vocabs, batch, steps = (20_000, 5_000), 128, 8
+    else:
+        vocabs, batch, steps = (500_000, 200_000, 100_000, 50_000), 4096, 12
+    cfg = DLRMConfig(
+        vocab_sizes=vocabs, embed_dim=32, batch_size=batch, cache_ratio=0.05,
+        lr=0.1, bottom_mlp=(64, 32), top_mlp=(64,),
+    )
+    spec = synth.ZipfSparseSpec(vocab_sizes=vocabs, n_dense=13)
+    batches = [
+        {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
+        for s in range(steps + 5)
+    ]
+
+    def steady(times):
+        times.sort()
+        return times[len(times) // 2]
+
+    # -- serial oracle: one fused jitted step, block on loss each iteration --
+    model = DLRM(cfg)
+    state = model.init(jax.random.PRNGKey(0))
+    step_j = jax.jit(model.train_step, donate_argnums=0)
+    state, m = step_j(state, batches[0])  # compile + warm
+    float(jax.device_get(m["loss"]))
+    times = []
+    for s in range(1, steps + 1):
+        t0 = time.perf_counter()
+        state, m = step_j(state, batches[s])
+        float(jax.device_get(m["loss"]))
+        times.append(time.perf_counter() - t0)
+    sec_serial = steady(times)
+
+    # -- pipelined groups: one merged plan per `depth` steps, dispatched
+    #    under the previous group's first compute (the trainer's schedule) ---
+    def run_pipelined(depth):
+        model2 = DLRM(cfg)
+        state = model2.init(jax.random.PRNGKey(0))
+        plan_j = jax.jit(model2.plan_step)
+        compute_j = jax.jit(model2.compute_step, donate_argnums=0)
+        apply_j = jax.jit(model2.apply_step, donate_argnums=0)
+
+        def window(s):
+            return batches[s], tuple(batches[s + 1 : s + depth])
+
+        def checked_addrs(plan):
+            # the trainer's future_unresident guard: a dropped lookahead lane
+            # would silently gather zeros and benchmark an inexact run
+            assert int(jax.device_get(plan.future_unresident)) == 0, (
+                "lookahead window exceeds cache capacity: raise cache_ratio "
+                "or lower the group depth"
+            )
+            return (plan.addresses,) + tuple(plan.future_addresses)
+
+        # prologue group (also compiles all three stages)
+        b0, w0 = window(0)
+        plan = plan_j(state, b0, w0)
+        addrs = checked_addrs(plan)
+        state = apply_j(state, plan)
+        times = []
+        s = 0
+        while s + depth <= steps + 1:
+            nxt = None
+            for j in range(depth):
+                t0 = time.perf_counter()
+                if j == 0:
+                    nb, nw = window(s + depth)
+                    nxt = plan_j(state, nb, nw)
+                state, m = compute_j(state, batches[s + j], addrs[j])
+                if j == depth - 1:
+                    state = apply_j(state, nxt)
+                float(jax.device_get(m["loss"]))
+                if s > 0:  # skip the compile group
+                    times.append(time.perf_counter() - t0)
+            # checked at the group boundary — the group's losses are already
+            # blocked on, so this sync is off the measured critical path
+            addrs = checked_addrs(nxt)
+            s += depth
+        return steady(times)
+
+    t.add("cacheops/step_serial", sec_serial * 1e6, f"batch={batch} steps={steps}")
+    for depth in (1, 2, 4):
+        sec_pipe = run_pipelined(depth)
+        t.add(f"cacheops/step_pipelined_d{depth}", sec_pipe * 1e6,
+              f"group={depth} speedup={sec_serial / max(sec_pipe, 1e-12):.2f}x")
+
+
+ALL = [bench_cache_overhead, bench_collection_placement, bench_pipeline]

@@ -2,10 +2,16 @@
 project CPU-host measurements onto the paper's testbed numbers."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable
 
 import jax
+
+# BENCH_SMOKE=1 shrinks every benchmark to CI-sized shapes (seconds, not
+# minutes) so the entrypoints can't silently rot — numbers are meaningless
+# but every code path still runs.
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
 
 # paper testbed (Table 2) + TPU-target constants
 PCIE3_BW = 16e9  # bytes/s, PCIe 3.0 x16 (paper's GPU interconnect)

@@ -13,9 +13,12 @@ import sys
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="substring filter on module.function (e.g. cache_ops)")
     ap.add_argument("--skip-scaling", action="store_true",
                     help="skip the multi-process scaling benchmark")
+    ap.add_argument("--strict", action="store_true",
+                    help="re-raise benchmark failures (CI smoke mode)")
     args = ap.parse_args()
 
     from benchmarks import bench_cache_ops, bench_figures, bench_scaling
@@ -28,11 +31,13 @@ def main() -> None:
     t = Table()
     print("name,us_per_call,derived")
     for fn in fns:
-        if args.only and args.only not in fn.__name__:
+        if args.only and args.only not in f"{fn.__module__}.{fn.__name__}":
             continue
         try:
             fn(t)
         except Exception as e:  # keep the harness running; report the failure
+            if args.strict:
+                raise
             t.add(f"{fn.__name__}/ERROR", 0.0, f"{type(e).__name__}: {e}")
     out = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench.csv"
     out.parent.mkdir(exist_ok=True)

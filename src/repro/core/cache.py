@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,18 @@ import jax.numpy as jnp
 from repro.core import transmitter
 from repro.core.policies import Policy, eviction_key
 
-__all__ = ["CacheConfig", "CacheState", "init_cache", "prepare", "lookup_slots", "flush", "warmup"]
+__all__ = [
+    "CacheConfig",
+    "CacheState",
+    "CachePlan",
+    "init_cache",
+    "plan_prepare",
+    "apply_plan",
+    "prepare",
+    "lookup_slots",
+    "flush",
+    "warmup",
+]
 
 _EMPTY = jnp.array(-1, jnp.int32)
 _BIG = jnp.iinfo(jnp.int32).max // 2
@@ -116,21 +127,56 @@ def init_cache(cfg: CacheConfig, row_tree_example: Any) -> CacheState:
     )
 
 
-def prepare(
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CachePlan:
+    """The weight-free half of Algorithm 1: a movement program plus the
+    post-apply index image.
+
+    ``plan_prepare`` computes it from (index state, ids) alone — no weights
+    are touched, so a plan for step t+1 can be built while step t's dense
+    compute is still running.  ``apply_plan`` executes the row movement and
+    installs the index image; ``prepare`` composes the two and is bit-exact
+    with the former fused implementation.
+    """
+
+    # movement program (static length = unique_size [+ lookahead uniques])
+    miss_rows: jnp.ndarray  # int32 [kv] freq-ranked rows to load (-1 inactive)
+    victim_slots: jnp.ndarray  # int32 [kv] destination slots
+    victim_rows: jnp.ndarray  # int32 [kv] rows being displaced (-1 = empty)
+    load_active: jnp.ndarray  # bool [kv]
+    evict_active: jnp.ndarray  # bool [kv] displaced rows needing write-back
+    # post-apply index image (everything in CacheState except cached_rows)
+    slot_to_row: jnp.ndarray
+    row_to_slot: jnp.ndarray
+    last_used: jnp.ndarray
+    use_count: jnp.ndarray
+    step: jnp.ndarray
+    hits: jnp.ndarray
+    misses: jnp.ndarray
+    evictions: jnp.ndarray
+    uniq_overflows: jnp.ndarray
+    # per-lane resident slot for the CURRENT batch (-1 padding)
+    slots: jnp.ndarray
+
+
+def plan_prepare(
     cfg: CacheConfig,
-    full_rows: Any,
     state: CacheState,
     rows: jnp.ndarray,
-) -> Tuple[Any, CacheState, jnp.ndarray]:
-    """Algorithm 1 ``PrepareCache``: make every row of ``rows`` resident.
+    future_rows: Optional[jnp.ndarray] = None,
+) -> CachePlan:
+    """Pure planning half of ``prepare``: dedup, victim selection, movement
+    plan and index bookkeeping — callable on ids alone, no weights touched.
 
-    Args:
-      full_rows: pytree of the full (freq-ordered) table, leaves [vocab, ...].
-      rows: int32 [ids_per_step] freq-ranked row per id (-1 padding). Callers
-        translate raw ids through ``idx_map`` first.
-
-    Returns (full_rows', state', slots) where ``slots`` maps each input lane to
-    its resident cache slot (-1 for padding lanes).
+    ``future_rows`` (optional, int32 [F], -1 padding) merges a lookahead
+    window of future-batch rows into the admission decision: rows needed at
+    step t+k are scheduled for load *now* (before they miss) and slots
+    holding soon-needed rows are pinned against eviction — the exact-lookahead
+    analogue of the paper's frequency protection.  Current-batch rows always
+    win: if capacity is short, future loads are dropped first and pinned
+    future slots may be reclaimed, but rows of the current batch are never
+    evicted (exactness is unconditional).
     """
     k = cfg.unique_size
     # geometry comes from the STATE (a serve-time cfg may quote a smaller
@@ -138,6 +184,7 @@ def prepare(
     capacity = state.slot_to_row.shape[0]
     vocab = state.row_to_slot.shape[0]
     valid = rows >= 0
+    int_max = jnp.iinfo(jnp.int32).max
 
     # --- id-level hit telemetry (before any movement) ----------------------
     pre_slots = state.row_to_slot.at[jnp.where(valid, rows, 0)].get(mode="fill", fill_value=-1)
@@ -145,25 +192,47 @@ def prepare(
 
     # --- unique needed rows (fixed size k, padded with -1 at the end) ------
     # jnp.unique sorts ascending; map padding to +inf-like sentinel then back.
-    big_rows = jnp.where(valid, rows, jnp.iinfo(jnp.int32).max)
-    uniq = jnp.unique(big_rows, size=k, fill_value=jnp.iinfo(jnp.int32).max)
-    uniq_valid = uniq != jnp.iinfo(jnp.int32).max
+    big_rows = jnp.where(valid, rows, int_max)
+    uniq = jnp.unique(big_rows, size=k, fill_value=int_max)
+    uniq_valid = uniq != int_max
+    uniq_sorted = uniq  # ascending, sentinel-padded — reused for membership
     uniq = jnp.where(uniq_valid, uniq, -1)
 
     # overflow detection: did the batch contain more distinct rows than k?
     # (jnp.unique(size=k) silently keeps the k smallest — count the truth.)
     srt = jnp.sort(big_rows)
     n_distinct_valid = jnp.sum(
-        (jnp.diff(srt) != 0) & (srt[1:] != jnp.iinfo(jnp.int32).max)
-    ) + (srt[0] != jnp.iinfo(jnp.int32).max).astype(jnp.int32)
+        (jnp.diff(srt) != 0) & (srt[1:] != int_max)
+    ) + (srt[0] != int_max).astype(jnp.int32)
     overflow = (n_distinct_valid > k).astype(jnp.int32)
 
     uniq_slots = state.row_to_slot.at[jnp.where(uniq_valid, uniq, 0)].get(mode="fill", fill_value=-1)
     miss = (uniq_slots < 0) & uniq_valid
     n_miss = jnp.sum(miss)
 
+    # --- lookahead merge: unique FUTURE rows not already needed now --------
+    if future_rows is not None and future_rows.shape[0] == 0:
+        future_rows = None
+    kf = 0
+    if future_rows is not None:
+        kf = min(int(future_rows.shape[0]), vocab)
+        fbig = jnp.where(future_rows >= 0, future_rows, int_max)
+        fut_uniq = jnp.unique(fbig, size=kf, fill_value=int_max)
+        # membership in the current batch's unique set via the sorted buffer
+        pos = jnp.clip(jnp.searchsorted(uniq_sorted, fut_uniq), 0, k - 1)
+        in_now = uniq_sorted[pos] == fut_uniq
+        fut_valid = (fut_uniq != int_max) & ~in_now
+        fut_uniq = jnp.where(fut_valid, fut_uniq, -1)
+        fut_slots = state.row_to_slot.at[jnp.where(fut_valid, fut_uniq, 0)].get(
+            mode="fill", fill_value=-1
+        )
+        fut_miss = (fut_slots < 0) & fut_valid
+        n_fut_miss = jnp.sum(fut_miss)
+
     # --- victim selection (Algorithm 1 lines 15-26) ------------------------
-    # "backlist": rows needed now must not be evicted.
+    # "backlist": rows needed now must not be evicted; rows needed in the
+    # lookahead window are pinned one tier above (reclaimed only if the
+    # current batch needs the space).
     if cfg.protect_via_inverse:
         # a slot needs protection iff it currently holds a needed (hit) row;
         # we already know those slots from the inverse map: O(K) scatter.
@@ -177,41 +246,51 @@ def prepare(
         )
     key = eviction_key(cfg.policy, state.slot_to_row, state.last_used, state.use_count)
     key = jnp.where(state.slot_to_row < 0, _BIG, key)  # empty slots evict first
-    key = jnp.where(protected, -_BIG, key)  # protected slots evict last
+    if kf:
+        if cfg.protect_via_inverse:
+            fut_hit = jnp.where((fut_slots >= 0) & fut_valid, fut_slots, capacity)
+            pinned = jnp.zeros((capacity,), bool).at[fut_hit].set(True, mode="drop")
+        else:
+            pinned = jnp.isin(
+                state.slot_to_row, jnp.where(fut_valid, fut_uniq, -7)
+            ) & (state.slot_to_row >= 0)
+        key = jnp.where(pinned, -(_BIG // 2), key)  # soon-needed: evict late
+    key = jnp.where(protected, -_BIG, key)  # needed-now slots evict last
     order = jnp.argsort(key, descending=True)
-    victim_slots = order[:k].astype(jnp.int32)
+    # a step can never load more rows than there are slots
+    kv = min(k + kf, capacity)
+    victim_slots = order[:kv].astype(jnp.int32)
 
-    lane = jnp.arange(k)
-    active = lane < n_miss  # one victim per actual miss
+    lane = jnp.arange(kv)
+    if kf:
+        # mandatory current-batch misses first, then as many future misses as
+        # fit without reclaiming any pinned/protected slot.
+        n_prot = jnp.sum(protected) + jnp.sum(pinned & ~protected)
+        n_fut_load = jnp.clip(capacity - n_prot - n_miss, 0, n_fut_miss)
+        n_loads = n_miss + n_fut_load
+        perm_now = jnp.argsort(jnp.where(miss, 0, 1), stable=True)
+        perm_fut = jnp.argsort(jnp.where(fut_miss, 0, 1), stable=True)
+        cand_rows = jnp.concatenate([uniq[perm_now], fut_uniq[perm_fut]])
+        cand_pri = jnp.concatenate(
+            [
+                jnp.where(jnp.arange(k) < n_miss, 0, 2),
+                jnp.where(jnp.arange(kf) < n_fut_miss, 1, 2),
+            ]
+        )
+        perm = jnp.argsort(cand_pri, stable=True)
+        active = lane < n_loads
+        miss_rows = jnp.where(active, cand_rows[perm][:kv], -1)
+    else:
+        n_loads = n_miss
+        active = lane < n_loads  # one victim per actual miss
+        # --- compact miss rows to the front ---------------------------------
+        perm = jnp.argsort(jnp.where(miss, 0, 1), stable=True)
+        miss_rows = jnp.where(active, uniq[perm][:kv], -1)
 
-    # --- compact miss rows to the front -------------------------------------
-    perm = jnp.argsort(jnp.where(miss, 0, 1), stable=True)
-    miss_rows = jnp.where(active, uniq[perm], -1)
-
-    # --- write-back evicted rows (device -> host tier) ----------------------
     victim_rows = state.slot_to_row[victim_slots]
     evict_active = active & (victim_rows >= 0)
-    if cfg.writeback:
-        full_rows = transmitter.move_rows(
-            state.cached_rows,
-            full_rows,
-            victim_slots,
-            victim_rows,
-            evict_active,
-            buffer_rows=cfg.buffer_rows,
-        )
     row_to_slot = state.row_to_slot.at[jnp.where(evict_active, victim_rows, vocab)].set(
         -1, mode="drop"
-    )
-
-    # --- load missed rows (host tier -> device) -----------------------------
-    cached_rows = transmitter.move_rows(
-        full_rows,
-        state.cached_rows,
-        miss_rows,
-        victim_slots,
-        active,
-        buffer_rows=cfg.buffer_rows,
     )
     slot_to_row = state.slot_to_row.at[jnp.where(active, victim_slots, capacity)].set(
         jnp.where(active, miss_rows, -1), mode="drop"
@@ -229,22 +308,103 @@ def prepare(
     # loaded rows start fresh
     fresh = jnp.where(active, victim_slots, capacity)
     use_count = use_count.at[fresh].set(1, mode="drop")
+    if kf:
+        # prefetched rows count as just-arrived so recency policies don't
+        # evict them before their step comes up.
+        last_used = last_used.at[jnp.where(active, victim_slots, capacity)].set(
+            step, mode="drop"
+        )
 
-    new_state = CacheState(
-        cached_rows=cached_rows,
+    # NB: negative indices WRAP in jax even with mode='fill'; mask explicitly.
+    slots = jnp.where(
+        valid, row_to_slot.at[jnp.where(valid, rows, 0)].get(mode="fill", fill_value=-1), -1
+    )
+    return CachePlan(
+        miss_rows=miss_rows,
+        victim_slots=victim_slots,
+        victim_rows=victim_rows,
+        load_active=active,
+        evict_active=evict_active,
         slot_to_row=slot_to_row,
         row_to_slot=row_to_slot,
         last_used=last_used,
         use_count=use_count,
         step=step,
+        # misses counts DEMAND misses only — a prefetched future row is not a
+        # miss, so hit-rate telemetry keeps its meaning and shows the prefetch
+        # benefit; transmitter traffic is visible via evictions + the movement
+        # plan itself.  NB: hits/misses are recorded for the rows passed as
+        # the CURRENT batch; under group scheduling (pipeline_depth > 1) only
+        # group leaders run a plan, so telemetry samples 1/k of the traffic.
         hits=state.hits + id_hits.astype(jnp.int32),
         misses=state.misses + n_miss.astype(jnp.int32),
         evictions=state.evictions + jnp.sum(evict_active).astype(jnp.int32),
         uniq_overflows=state.uniq_overflows + overflow,
+        slots=slots,
     )
-    # NB: negative indices WRAP in jax even with mode='fill'; mask explicitly.
-    slots = jnp.where(valid, row_to_slot.at[jnp.where(valid, rows, 0)].get(mode="fill", fill_value=-1), -1)
-    return full_rows, new_state, slots
+
+
+def apply_plan(
+    cfg: CacheConfig, full_rows: Any, state: CacheState, plan: CachePlan
+) -> Tuple[Any, CacheState]:
+    """Execute a ``CachePlan``: write back displaced rows, load missed rows,
+    install the index image.  The only half that touches weights — in the
+    pipelined trainer it runs after the previous step's row update so evicted
+    rows carry their freshest values."""
+    if cfg.writeback:
+        full_rows = transmitter.move_rows(
+            state.cached_rows,
+            full_rows,
+            plan.victim_slots,
+            plan.victim_rows,
+            plan.evict_active,
+            buffer_rows=cfg.buffer_rows,
+        )
+    cached_rows = transmitter.move_rows(
+        full_rows,
+        state.cached_rows,
+        plan.miss_rows,
+        plan.victim_slots,
+        plan.load_active,
+        buffer_rows=cfg.buffer_rows,
+    )
+    new_state = CacheState(
+        cached_rows=cached_rows,
+        slot_to_row=plan.slot_to_row,
+        row_to_slot=plan.row_to_slot,
+        last_used=plan.last_used,
+        use_count=plan.use_count,
+        step=plan.step,
+        hits=plan.hits,
+        misses=plan.misses,
+        evictions=plan.evictions,
+        uniq_overflows=plan.uniq_overflows,
+    )
+    return full_rows, new_state
+
+
+def prepare(
+    cfg: CacheConfig,
+    full_rows: Any,
+    state: CacheState,
+    rows: jnp.ndarray,
+    future_rows: Optional[jnp.ndarray] = None,
+) -> Tuple[Any, CacheState, jnp.ndarray]:
+    """Algorithm 1 ``PrepareCache``: make every row of ``rows`` resident.
+
+    Args:
+      full_rows: pytree of the full (freq-ordered) table, leaves [vocab, ...].
+      rows: int32 [ids_per_step] freq-ranked row per id (-1 padding). Callers
+        translate raw ids through ``idx_map`` first.
+      future_rows: optional lookahead window of future-batch rows (see
+        ``plan_prepare``) — prefetched alongside the current batch's misses.
+
+    Returns (full_rows', state', slots) where ``slots`` maps each input lane to
+    its resident cache slot (-1 for padding lanes).
+    """
+    plan = plan_prepare(cfg, state, rows, future_rows=future_rows)
+    full_rows, new_state = apply_plan(cfg, full_rows, state, plan)
+    return full_rows, new_state, plan.slots
 
 
 def lookup_slots(state: CacheState, slots: jnp.ndarray, leaf: str | int = 0) -> jnp.ndarray:

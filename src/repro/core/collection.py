@@ -64,6 +64,7 @@ __all__ = [
     "DeviceSlab",
     "CachedSlab",
     "CollectionState",
+    "CollectionPlan",
 ]
 
 SHARED_ARENA = "__shared__"
@@ -364,19 +365,71 @@ class CollectionState:
     slabs: Dict[str, Any]  # name -> DeviceSlab | CachedSlab
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CollectionPlan:
+    """The weight-free half of ``prepare`` for a whole collection.
+
+    Built by ``EmbeddingCollection.plan_prepare`` from ids alone (per-slab
+    ``cache.CachePlan``s plus the per-feature addresses); executed by
+    ``EmbeddingCollection.apply_plan``.  Because planning never reads weights,
+    the plan for step t+1 can be computed while step t's dense compute runs —
+    the pipelined trainer's whole trick.
+
+    When a lookahead window was merged, ``future_addresses[j]`` holds the
+    planned addresses of ``fb_future[j]``'s lanes and ``future_unresident``
+    counts future lanes whose row will NOT be resident after apply (loads
+    dropped or pins reclaimed under capacity pressure).  A trainer that runs
+    whole groups off one merged plan must see ``future_unresident == 0``;
+    the current batch's addresses are unconditionally valid either way.
+    """
+
+    slab_plans: Dict[str, cache_lib.CachePlan]
+    addresses: Dict[str, jnp.ndarray]  # feature -> slots / row ids (-1 pad)
+    future_addresses: Tuple[Dict[str, jnp.ndarray], ...] = ()
+    future_unresident: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32)
+    )
+    writeback: bool = dataclasses.field(default=True, metadata=dict(static=True))
+
+
 # --- slab-level ops (the single-arena core; ``cached_embedding`` adapts
 #     its one-big-table API onto exactly these) ------------------------------
+
+
+def _translate(slab: CachedSlab, raw_ids: jnp.ndarray) -> jnp.ndarray:
+    """Slab-global raw ids (-1 pad) -> freq-ranked rows (-1 pad)."""
+    valid = raw_ids >= 0
+    rows = slab.idx_map.at[jnp.where(valid, raw_ids, 0)].get(mode="fill", fill_value=-1)
+    return jnp.where(valid, rows, -1)
+
+
+def cached_slab_plan(
+    ccfg: cache_lib.CacheConfig,
+    slab: CachedSlab,
+    raw_ids: jnp.ndarray,
+    raw_future: Optional[jnp.ndarray] = None,
+) -> cache_lib.CachePlan:
+    """Planning half of ``cached_slab_prepare``: ids in, movement plan out —
+    no weights touched (see ``cache.plan_prepare``)."""
+    fut = None if raw_future is None else _translate(slab, raw_future)
+    return cache_lib.plan_prepare(ccfg, slab.cache, _translate(slab, raw_ids), future_rows=fut)
+
+
+def cached_slab_apply(
+    ccfg: cache_lib.CacheConfig, slab: CachedSlab, plan: cache_lib.CachePlan
+) -> CachedSlab:
+    """Apply half: execute the planned row movement on this slab's weights."""
+    full, cache_state = cache_lib.apply_plan(ccfg, slab.full, slab.cache, plan)
+    return dataclasses.replace(slab, full=full, cache=cache_state)
 
 
 def cached_slab_prepare(
     ccfg: cache_lib.CacheConfig, slab: CachedSlab, raw_ids: jnp.ndarray
 ) -> Tuple[CachedSlab, jnp.ndarray]:
     """Make all rows for ``raw_ids`` (slab-global, -1 pad) resident."""
-    valid = raw_ids >= 0
-    rows = slab.idx_map.at[jnp.where(valid, raw_ids, 0)].get(mode="fill", fill_value=-1)
-    rows = jnp.where(valid, rows, -1)
-    full, cache_state, slots = cache_lib.prepare(ccfg, slab.full, slab.cache, rows)
-    return dataclasses.replace(slab, full=full, cache=cache_state), slots
+    plan = cached_slab_plan(ccfg, slab, raw_ids)
+    return cached_slab_apply(ccfg, slab, plan), plan.slots
 
 
 def cached_slab_gather(slab: CachedSlab, slots: jnp.ndarray) -> jnp.ndarray:
@@ -608,6 +661,125 @@ class EmbeddingCollection:
                 out.append((f, int(np.prod(fb.ids[f].shape))))
         return out
 
+    def _slab_raw(self, fb: FeatureBatch, sname: str) -> Optional[jnp.ndarray]:
+        """Flat offset-translated id vector of this slab's lanes in ``fb``
+        (slab-lane order); None when the batch has no lanes for the slab."""
+        lanes = self._slab_lanes(fb, sname)
+        if not lanes:
+            return None
+        parts = []
+        for f, _ in lanes:
+            ids = fb.ids[f].reshape(-1).astype(jnp.int32)
+            off = self.table_slab[self.feature_to_table[f]][1]
+            parts.append(jnp.where(ids >= 0, ids + off, -1))
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def plan_prepare(
+        self,
+        state: CollectionState,
+        fb: FeatureBatch,
+        fb_future: Sequence[FeatureBatch] = (),
+        writeback: bool = True,
+    ) -> CollectionPlan:
+        """Planning half of ``prepare``: dedup, slot assignment and the row
+        movement plan, computed from ids and index state alone — no weights
+        are read, so this can run while the previous step's dense compute is
+        still in flight (the pipelined trainer dispatches it there).
+
+        ``fb_future`` is a lookahead window of future batches: their ids are
+        merged into the admission decision so rows needed at step t+k are
+        scheduled for load now, and slots holding soon-needed rows are pinned
+        against eviction (see ``cache.plan_prepare``).  The plan also carries
+        each future batch's addresses (from the post-apply index image) plus a
+        ``future_unresident`` count so a group-scheduled trainer can run the
+        whole window off one merged plan — amortizing the bookkeeping k-fold —
+        after checking that nothing was dropped under capacity pressure.
+        """
+        for b in (fb, *fb_future):
+            for f in b.features:
+                if f not in self.feature_to_table:
+                    raise KeyError(
+                        f"unknown feature {f!r}; known: {sorted(self.feature_to_table)}"
+                    )
+        addresses: Dict[str, jnp.ndarray] = {}
+        future_addresses: List[Dict[str, jnp.ndarray]] = [{} for _ in fb_future]
+        future_unresident = jnp.zeros((), jnp.int32)
+
+        # DEVICE tables: the address IS the (local) row id.
+        for j, b in enumerate((fb, *fb_future)):
+            out = addresses if j == 0 else future_addresses[j - 1]
+            for f in b.features:
+                if self.feature_to_table[f] in self.device_slabs:
+                    out[f] = b.ids[f].astype(jnp.int32)
+
+        # cached slabs: concatenate this batch's lanes, one plan per slab.
+        slab_plans: Dict[str, cache_lib.CachePlan] = {}
+        for sname, spec in self.cached_slabs.items():
+            raw = self._slab_raw(fb, sname)
+            slab = state.slabs[sname]
+            fut_raws = [self._slab_raw(b, sname) for b in fb_future]
+            if raw is None:
+                # a slab touched only by the window is not prefetched (every
+                # batch of a homogeneous stream touches the same slabs; its
+                # own step will fault the rows in exactly) — but its window
+                # lanes are then NOT resident, so a group-scheduled trainer
+                # must see them in the guard instead of a missing address.
+                for raw_j in fut_raws:
+                    if raw_j is not None:
+                        future_unresident = future_unresident + jnp.sum(
+                            raw_j >= 0
+                        ).astype(jnp.int32)
+                continue
+            # translate once per future batch; the merged plan input and the
+            # per-batch address lookups reuse the same translated rows
+            rows_fut = [None if p is None else _translate(slab, p) for p in fut_raws]
+            fut_parts = [r for r in rows_fut if r is not None]
+            future_rows = jnp.concatenate(fut_parts) if fut_parts else None
+            ccfg = spec.cache_config(ids_per_step=int(raw.shape[0]), writeback=writeback)
+            plan = cache_lib.plan_prepare(
+                ccfg, slab.cache, _translate(slab, raw), future_rows=future_rows
+            )
+            slab_plans[sname] = plan
+            pos = 0
+            for f, n in self._slab_lanes(fb, sname):
+                addresses[f] = plan.slots[pos : pos + n].reshape(fb.ids[f].shape)
+                pos += n
+            # future lanes: addresses from the post-apply index image; count
+            # lanes whose row will not be resident (dropped under pressure)
+            for j, (b, rows_j) in enumerate(zip(fb_future, rows_fut)):
+                if rows_j is None:
+                    continue
+                slots_j = plan.row_to_slot.at[jnp.where(rows_j >= 0, rows_j, 0)].get(
+                    mode="fill", fill_value=-1
+                )
+                slots_j = jnp.where(rows_j >= 0, slots_j, -1)
+                future_unresident = future_unresident + jnp.sum(
+                    (rows_j >= 0) & (slots_j < 0)
+                ).astype(jnp.int32)
+                pos = 0
+                for f, n in self._slab_lanes(b, sname):
+                    future_addresses[j][f] = slots_j[pos : pos + n].reshape(b.ids[f].shape)
+                    pos += n
+        return CollectionPlan(
+            slab_plans=slab_plans,
+            addresses=addresses,
+            future_addresses=tuple(future_addresses),
+            future_unresident=future_unresident,
+            writeback=writeback,
+        )
+
+    def apply_plan(self, state: CollectionState, plan: CollectionPlan) -> CollectionState:
+        """Apply half of ``prepare``: execute each slab's planned row movement
+        (the only part that touches weights — in the pipelined trainer it runs
+        after the previous step's row update so evictions write back fresh
+        values) and install the index images."""
+        slabs = dict(state.slabs)
+        for sname, p in plan.slab_plans.items():
+            spec = self.cached_slabs[sname]
+            ccfg = spec.cache_config(writeback=plan.writeback)
+            slabs[sname] = cached_slab_apply(ccfg, slabs[sname], p)
+        return CollectionState(slabs=slabs)
+
     def prepare(
         self, state: CollectionState, fb: FeatureBatch, writeback: bool = True
     ) -> Tuple[CollectionState, Dict[str, jnp.ndarray]]:
@@ -615,39 +787,26 @@ class EmbeddingCollection:
 
         Addresses are cache slots for cached tables and plain row indices for
         DEVICE tables (-1 marks padding lanes in both).  Non-differentiable —
-        call outside the grad closure (Algorithm 1 bookkeeping).
+        call outside the grad closure (Algorithm 1 bookkeeping).  Equivalent
+        to ``apply_plan(state, plan_prepare(state, fb))`` — bit-exact with the pre-split
+        implementation.
         """
-        for f in fb.features:
-            if f not in self.feature_to_table:
-                raise KeyError(f"unknown feature {f!r}; known: {sorted(self.feature_to_table)}")
-        slabs = dict(state.slabs)
-        addresses: Dict[str, jnp.ndarray] = {}
+        p = self.plan_prepare(state, fb, writeback=writeback)
+        return self.apply_plan(state, p), p.addresses
 
-        # DEVICE tables: the address IS the (local) row id.
-        for f in fb.features:
-            tname = self.feature_to_table[f]
-            if tname in self.device_slabs:
-                addresses[f] = fb.ids[f].astype(jnp.int32)
-
-        # cached slabs: concatenate this batch's lanes, one prepare per slab.
-        for sname, spec in self.cached_slabs.items():
-            lanes = self._slab_lanes(fb, sname)
-            if not lanes:
-                continue
-            parts = []
-            for f, n in lanes:
-                ids = fb.ids[f].reshape(-1).astype(jnp.int32)
-                off = self.table_slab[self.feature_to_table[f]][1]
-                parts.append(jnp.where(ids >= 0, ids + off, -1))
-            raw = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
-            ccfg = spec.cache_config(ids_per_step=int(raw.shape[0]), writeback=writeback)
-            slab, slots = cached_slab_prepare(ccfg, slabs[sname], raw)
-            slabs[sname] = slab
-            pos = 0
-            for f, n in lanes:
-                addresses[f] = slots[pos : pos + n].reshape(fb.ids[f].shape)
-                pos += n
-        return CollectionState(slabs=slabs), addresses
+    def prepare_lookahead(
+        self,
+        state: CollectionState,
+        fb_now: FeatureBatch,
+        fb_future: Sequence[FeatureBatch],
+        writeback: bool = True,
+    ) -> Tuple[CollectionState, Dict[str, jnp.ndarray]]:
+        """``prepare`` with a lookahead window: rows needed by ``fb_future``
+        are fetched before they miss and pinned against eviction until their
+        step comes up.  Exactness for ``fb_now`` is unconditional (future
+        loads are dropped first under capacity pressure)."""
+        p = self.plan_prepare(state, fb_now, fb_future=tuple(fb_future), writeback=writeback)
+        return self.apply_plan(state, p), p.addresses
 
     # ----- differentiable read path -----------------------------------------
 
@@ -684,12 +843,44 @@ class EmbeddingCollection:
         return out
 
     def pool(
-        self, rows: Mapping[str, jnp.ndarray], fb: FeatureBatch, combiner: str = "sum"
+        self,
+        rows: Mapping[str, jnp.ndarray],
+        fb: FeatureBatch,
+        combiner: str = "sum",
+        *,
+        weights: Optional[Mapping[str, jnp.ndarray]] = None,
+        addresses: Optional[Mapping[str, jnp.ndarray]] = None,
+        use_pallas: bool = False,
+        max_bag: int = 0,
     ) -> Dict[str, jnp.ndarray]:
         """Segment-reduce bag features ([lanes, dim] -> [num_segments, dim]);
-        one-hot features pass through."""
+        one-hot features pass through.
+
+        With ``use_pallas`` (and ``weights`` + ``addresses`` from the same
+        step), bag features skip the materialized per-lane ``rows`` entirely:
+        the Pallas embedding-bag kernel runs a fused gather+segment-sum
+        straight off the fast-tier slab, with the cache-slot addresses as its
+        ids (-1 lanes are padding).  Differentiable w.r.t. ``weights`` via the
+        kernel's custom VJP; the ``jnp.take``/``segment_sum`` route below
+        stays as the bit-exactness reference.
+        """
         out = dict(rows)
+        if use_pallas and (weights is None or addresses is None):
+            raise ValueError("use_pallas pooling needs weights= and addresses=")
         for f, seg in fb.segments.items():
+            if use_pallas:
+                from repro.kernels.embedding_bag import ops as eb_ops
+
+                sname = self.table_slab[self.feature_to_table[f]][0]
+                out[f] = eb_ops.embedding_bag(
+                    weights[sname],
+                    addresses[f].reshape(-1),
+                    seg,
+                    fb.num_segments,
+                    combiner=combiner,
+                    max_bag=max_bag,
+                )
+                continue
             pooled = jax.ops.segment_sum(rows[f], seg, num_segments=fb.num_segments)
             if combiner == "mean":
                 cnt = jax.ops.segment_sum(

@@ -2,62 +2,111 @@
 
 Batches are pure functions of (seed, step) so resuming at step N after a
 restart replays the identical stream on any topology — a requirement for
-elastic rescaling (DESIGN.md §5).  A small thread pool prefetches ``depth``
+elastic rescaling (DESIGN.md §5).  A worker thread prefetches ``depth``
 batches ahead so host-side generation (incl. neighbor sampling) overlaps
 device compute, complementing JAX's async dispatch.
+
+Because batches are generated ahead of consumption anyway, the exact ids of
+FUTURE batches are known before their step runs (the BagPipe observation,
+arXiv 2202.12429): ``lookahead(k)`` exposes the next k batches without
+consuming them, which is what lets the pipelined trainer plan step t+1's
+cache movement — and prefetch rows needed at t+k — while step t's dense
+compute is still in flight.
 """
 from __future__ import annotations
 
-import queue
+import collections
 import threading
-from typing import Callable, Dict, Iterator, Optional
-
-import numpy as np
+from typing import Callable, Dict, Iterator, List, Tuple
 
 __all__ = ["Prefetcher"]
 
 
 class Prefetcher:
-    """Wrap ``make_batch(step) -> dict`` with background prefetch from ``start_step``."""
+    """Wrap ``make_batch(step) -> dict`` with background prefetch from ``start_step``.
+
+    Iteration yields ``(step, batch)`` in order; ``lookahead(k)`` peeks the
+    batches the next k ``__next__`` calls would return, blocking until the
+    worker has generated them.  ``close()`` stops and *joins* the worker (a
+    drain-only shutdown races with a worker that refills after the drain,
+    leaking a blocked daemon thread per trainer run).
+    """
 
     def __init__(self, make_batch: Callable[[int], Dict], start_step: int = 0, depth: int = 2):
         self.make_batch = make_batch
-        self.depth = depth
-        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
-        self._next = start_step
-        self._stop = threading.Event()
+        self.depth = max(1, depth)
+        self._buf: "collections.deque" = collections.deque()
+        self._cv = threading.Condition()
+        self._err: Exception | None = None
+        self._stop = False
+        self._start = start_step
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self):
-        step = self._next
-        while not self._stop.is_set():
+        step = self._start
+        while True:
+            with self._cv:
+                while len(self._buf) >= self.depth and not self._stop:
+                    self._cv.wait()
+                if self._stop:
+                    return
             try:
                 batch = self.make_batch(step)
-            except Exception as e:  # surface in consumer
-                self._q.put(e)
+            except Exception as e:  # surface in consumer, in stream order
+                with self._cv:
+                    self._err = e
+                    self._cv.notify_all()
                 return
-            while not self._stop.is_set():
-                try:
-                    self._q.put((step, batch), timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
+            with self._cv:
+                if self._stop:
+                    return
+                self._buf.append((step, batch))
+                self._cv.notify_all()
             step += 1
 
     def __iter__(self) -> Iterator:
         return self
 
-    def __next__(self):
-        item = self._q.get()
-        if isinstance(item, Exception):
-            raise item
-        return item  # (step, batch)
+    def __next__(self) -> Tuple[int, Dict]:
+        with self._cv:
+            while not self._buf and self._err is None and not self._stop:
+                self._cv.wait()
+            if self._buf:
+                item = self._buf.popleft()
+                self._cv.notify_all()  # free a slot for the worker
+                return item
+            if self._err is not None:
+                raise self._err
+            raise StopIteration  # closed
+
+    def lookahead(self, k: int) -> List[Tuple[int, Dict]]:
+        """Peek the next ``k`` (step, batch) pairs without consuming them.
+
+        Blocks until the worker has generated them; requires ``k <= depth``
+        (the buffer can never hold more).  If the producer errored before
+        filling the window, the error is raised here (already-buffered batches
+        stay consumable through ``__next__``); a short list is returned only
+        when the prefetcher was closed.
+        """
+        if k <= 0:
+            return []
+        if k > self.depth:
+            raise ValueError(f"lookahead({k}) exceeds prefetch depth {self.depth}")
+        with self._cv:
+            while len(self._buf) < k and self._err is None and not self._stop:
+                self._cv.wait()
+            if len(self._buf) < k and self._err is not None:
+                raise self._err
+            return [self._buf[i] for i in range(min(k, len(self._buf)))]
 
     def close(self):
-        self._stop.set()
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        # bounded join: the worker is a daemon, so if it is wedged inside a
+        # blocking make_batch we must not hang the caller (often a `finally:`
+        # with the real exception in flight) — it dies with the process.
+        self._thread.join(timeout=10.0)
+        with self._cv:
+            self._buf.clear()

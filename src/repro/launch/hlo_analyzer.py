@@ -326,19 +326,30 @@ class Analyzer:
         else:
             c.bytes += out_bytes
 
-        # param reads
+        # param reads.  Row-granular accesses — gather and dynamic-slice with
+        # the param as the sliced operand — charge touched bytes; scatter /
+        # dynamic-update-slice writes into the param are covered by the RMW
+        # result charge.  A param consumed ONLY by such ops (XLA lowers a
+        # donated scatter to a rolled while loop whose body slices one row and
+        # dynamic-update-slices it back) must not be charged its full size.
         for idx, pname in enumerate(fcomp.param_order):
             ptype = fcomp.params[pname]
             uses = usage.get(pname, [])
-            if uses and all(op == "gather" and u.operands and u.operands[0] == pname
-                            for op, u in uses):
-                touched = sum(_bytes_of_type(u.result_type) for _, u in uses)
+            reads = [
+                (op, u)
+                for op, u in uses
+                if op in ("gather", "dynamic-slice") and u.operands and u.operands[0] == pname
+            ]
+            writes = [
+                (op, u)
+                for op, u in uses
+                if op in ("scatter", "dynamic-update-slice", "select-and-scatter")
+                and u.operands
+                and u.operands[0] == pname
+            ]
+            if uses and len(reads) + len(writes) == len(uses):
+                touched = sum(_bytes_of_type(u.result_type) for _, u in reads)
                 c.bytes += min(touched, _bytes_of_type(ptype))
-            elif uses and all(
-                op in ("scatter", "dynamic-update-slice") and u.operands
-                and u.operands[0] == pname for op, u in uses
-            ):
-                pass  # covered by the RMW charge
             else:
                 c.bytes += _bytes_of_type(ptype)
         return c

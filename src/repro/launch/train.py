@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import graphs, synth
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.trainer import PipelinedTrainer, Trainer, TrainerConfig
 
 
 def _recsys_runner(arch: str, batch: int):
@@ -63,6 +63,9 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="0 = serial; k >= 1 = pipelined groups of k steps per "
+                         "merged cache plan (collection-backed archs only)")
     args = ap.parse_args()
 
     if args.arch == "gatedgcn":
@@ -88,14 +91,27 @@ def main():
     else:
         model, make, flush = _recsys_runner(args.arch, args.batch)
 
-    trainer = Trainer(
-        TrainerConfig(max_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=25),
+    tc = TrainerConfig(max_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=25,
+                       pipeline_depth=args.pipeline_depth)
+    kw = dict(
         init_fn=lambda: model.init(jax.random.PRNGKey(0)),
-        step_fn=jax.jit(model.train_step),
         make_batch=make,
         flush_fn=flush,
         on_straggler=lambda s, dt: print(f"[straggler] step {s}: {dt*1e3:.0f} ms"),
     )
+    if args.pipeline_depth > 0:
+        if not hasattr(model, "plan_step"):
+            raise SystemExit(f"--pipeline-depth needs a collection-backed arch; "
+                             f"{args.arch} has no split plan/compute step")
+        trainer = PipelinedTrainer(
+            tc,
+            plan_fn=jax.jit(model.plan_step),
+            compute_fn=jax.jit(model.compute_step),
+            apply_fn=jax.jit(model.apply_step),
+            **kw,
+        )
+    else:
+        trainer = Trainer(tc, step_fn=jax.jit(model.train_step), **kw)
     trainer.run()
     h = trainer.history
     print(f"\narch={args.arch} steps={len(h)} loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")

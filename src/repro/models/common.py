@@ -27,6 +27,7 @@ __all__ = [
     "flush_embeddings",
     "EmbTrainStep",
     "CollectionTrainStep",
+    "CollectionModelMixin",
 ]
 
 
@@ -114,6 +115,13 @@ class CollectionTrainStep:
     receives the keyed gather output (feature name -> [.., dim] rows) so
     gradients reach the fast-tier weights of every slab — DEVICE tables and
     cached arenas alike.
+
+    The step is exposed both fused (``__call__``) and split into the three
+    pipeline stages (``plan_step`` / ``apply_step`` / ``compute_step``) so a
+    pipelined trainer can dispatch step t+1's planning — which reads only ids
+    and cache index state — while step t's dense compute is still running.
+    ``__call__`` is exactly their composition, so the serial path stays the
+    bit-exactness oracle for the pipelined one.
     """
 
     collection: EmbeddingCollection
@@ -123,9 +131,34 @@ class CollectionTrainStep:
     loss: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray] = bce_with_logits
     emb_lr: float = 0.05
 
-    def __call__(self, state: Dict[str, Any], batch: Dict[str, jnp.ndarray]):
+    def plan_step(
+        self,
+        state: Dict[str, Any],
+        batch: Dict[str, jnp.ndarray],
+        future_batches: Tuple[Dict[str, jnp.ndarray], ...] = (),
+    ):
+        """Weight-free planning half: dedup + slot assignment + movement plan
+        for ``batch``, with ``future_batches``' ids merged as a lookahead
+        window (their rows are prefetched and pinned; see
+        ``EmbeddingCollection.plan_prepare``)."""
+        fut = tuple(self.features(b) for b in future_batches)
+        return self.collection.plan_prepare(state["emb"], self.features(batch), fb_future=fut)
+
+    def apply_step(self, state: Dict[str, Any], plan) -> Dict[str, Any]:
+        """Execute a plan's row movement (the only prepare half that touches
+        weights — run it after the previous step's row update)."""
+        return dict(state, emb=self.collection.apply_plan(state["emb"], plan))
+
+    def compute_step(
+        self,
+        state: Dict[str, Any],
+        batch: Dict[str, jnp.ndarray],
+        addresses: Dict[str, jnp.ndarray],
+    ):
+        """Dense fwd/bwd + optimizer + synchronous row update, given the
+        addresses planned for ``batch`` (whose rows are already resident)."""
         fb = self.features(batch)
-        emb_state, addresses = self.collection.prepare(state["emb"], fb)
+        emb_state = state["emb"]
 
         def loss_fn(dense_params, emb_weights):
             rows = self.collection.gather(emb_weights, addresses, fb)
@@ -147,3 +180,43 @@ class CollectionTrainStep:
         }
         new_state = dict(state, params=params, opt=opt_state, emb=emb_state, step=state["step"] + 1)
         return new_state, metrics
+
+    def __call__(self, state: Dict[str, Any], batch: Dict[str, jnp.ndarray]):
+        plan = self.plan_step(state, batch)
+        state = self.apply_step(state, plan)
+        return self.compute_step(state, batch, plan.addresses)
+
+
+class CollectionModelMixin:
+    """The step surface shared by every model whose embeddings live in an
+    ``EmbeddingCollection`` (expects ``self.collection`` / ``self.optimizer``
+    / ``self.features`` / ``self.fwd`` and an embedding LR at ``cfg.lr``):
+    the fused ``train_step`` plus the split pipeline stages ``plan_step`` /
+    ``apply_step`` / ``compute_step`` consumed by ``PipelinedTrainer`` —
+    planning is weight-free, so the trainer dispatches step t+1's plan while
+    step t's dense compute runs."""
+
+    @property
+    def emb_lr(self) -> float:
+        return self.cfg.lr
+
+    def _train_step(self) -> CollectionTrainStep:
+        return CollectionTrainStep(
+            collection=self.collection,
+            optimizer=self.optimizer,
+            features=self.features,
+            fwd=self.fwd,
+            emb_lr=self.emb_lr,
+        )
+
+    def train_step(self, state, batch):
+        return self._train_step()(state, batch)
+
+    def plan_step(self, state, batch, future_batches=()):
+        return self._train_step().plan_step(state, batch, future_batches)
+
+    def apply_step(self, state, plan):
+        return self._train_step().apply_step(state, plan)
+
+    def compute_step(self, state, batch, addresses):
+        return self._train_step().compute_step(state, batch, addresses)

@@ -51,7 +51,7 @@ class DLRMConfig:
         return len(self.vocab_sizes)
 
 
-class DLRM:
+class DLRM(common.CollectionModelMixin):
     def __init__(self, cfg: DLRMConfig):
         from repro.core.policies import Policy
 
@@ -136,17 +136,8 @@ class DLRM:
         logits = mlp(params["top"], x, cfg.dtypes)[:, 0]
         return logits, {}
 
-    # ----- steps -------------------------------------------------------------
-    def train_step(self, state, batch):
-        step = common.CollectionTrainStep(
-            collection=self.collection,
-            optimizer=self.optimizer,
-            features=self.features,
-            fwd=self.fwd,
-            emb_lr=self.cfg.lr,
-        )
-        return step(state, batch)
-
+    # ----- steps: train_step + the split pipeline stages (plan_step /
+    # apply_step / compute_step) come from CollectionModelMixin --------------
     def serve_step(self, state, batch):
         """Inference: cache read path without writeback bookkeeping cost."""
         emb_state, _, rows = self.collection.lookup(

@@ -62,7 +62,7 @@ class FMConfig:
     buffer_rows: int = 65536
 
 
-class FMModel:
+class FMModel(common.CollectionModelMixin):
     def __init__(self, cfg: FMConfig):
         self.cfg = cfg
         self.optimizer = opt_lib.sgd(cfg.lr)
@@ -110,15 +110,7 @@ class FMModel:
         logits = params["bias"] + w.sum(-1) + R.fm_interaction(v, use_pallas=c.use_pallas)
         return logits, {}
 
-    def train_step(self, state, batch):
-        step = common.CollectionTrainStep(
-            collection=self.collection,
-            optimizer=self.optimizer,
-            features=self.features,
-            fwd=self.fwd,
-            emb_lr=self.cfg.lr,
-        )
-        return step(state, batch)
+    # train_step + split pipeline stages come from CollectionModelMixin
 
     def serve_step(self, state, batch):
         emb_state, _, rows = self.collection.lookup(
@@ -185,7 +177,7 @@ class DINConfig:
     dtypes: Dtypes = F32
 
 
-class DINModel:
+class DINModel(common.CollectionModelMixin):
     def __init__(self, cfg: DINConfig):
         self.cfg = cfg
         self.optimizer = opt_lib.sgd(cfg.lr)
@@ -254,15 +246,7 @@ class DINModel:
         logits = mlp(params["mlp"], x, c.dtypes)[:, 0]
         return logits, {}
 
-    def train_step(self, state, batch):
-        step = common.CollectionTrainStep(
-            collection=self.collection,
-            optimizer=self.optimizer,
-            features=self.features,
-            fwd=self.fwd,
-            emb_lr=self.cfg.lr,
-        )
-        return step(state, batch)
+    # train_step + split pipeline stages come from CollectionModelMixin
 
     def serve_step(self, state, batch):
         emb_state, _, rows = self.collection.lookup(
@@ -428,7 +412,7 @@ class MINDConfig:
     dtypes: Dtypes = F32
 
 
-class MINDModel:
+class MINDModel(common.CollectionModelMixin):
     def __init__(self, cfg: MINDConfig):
         self.cfg = cfg
         self.optimizer = opt_lib.sgd(cfg.lr)
@@ -494,15 +478,7 @@ class MINDModel:
         logits = jnp.einsum("bd,bd->b", u, target)
         return logits, {}
 
-    def train_step(self, state, batch):
-        step = common.CollectionTrainStep(
-            collection=self.collection,
-            optimizer=self.optimizer,
-            features=self.features,
-            fwd=self.fwd,
-            emb_lr=self.cfg.lr,
-        )
-        return step(state, batch)
+    # train_step + split pipeline stages come from CollectionModelMixin
 
     def serve_step(self, state, batch):
         emb_state, _, rows = self.collection.lookup(

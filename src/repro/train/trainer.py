@@ -14,9 +14,14 @@
     ``on_straggler`` (log/report/abort — pluggable; on a real pod this wires
     into the coordinator's slow-host eviction).
   * overlap — host batch generation runs in a Prefetcher thread, and JAX
-    async dispatch keeps device compute ahead of the Python loop; the
-    cache-prepare stage of step t+1 can overlap step t's dense compute when
-    the model exposes a split step (``prepare_fn``).
+    async dispatch keeps device compute ahead of the Python loop; with
+    ``TrainerConfig.pipeline_depth > 0`` the ``PipelinedTrainer`` runs the
+    cache-prepare stage of step t+1 overlapped with step t's dense compute:
+    planning (dedup + slot assignment + movement plan) reads only ids and
+    cache index state, so it is dispatched before the trainer blocks on step
+    t's loss, and the Prefetcher's lookahead window lets it prefetch rows
+    needed k steps ahead (BagPipe, arXiv 2202.12429).  The serial ``Trainer``
+    remains the bit-exactness oracle: both paths produce identical losses.
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ import numpy as np
 from repro.data.pipeline import Prefetcher
 from repro.train import checkpoint as ckpt_lib
 
-__all__ = ["TrainerConfig", "Trainer", "StragglerDetector"]
+__all__ = ["TrainerConfig", "Trainer", "PipelinedTrainer", "StragglerDetector"]
 
 
 @dataclasses.dataclass
@@ -67,6 +72,11 @@ class TrainerConfig:
     straggler_factor: float = 3.0
     prefetch_depth: int = 2
     assert_no_uniq_overflow: bool = True
+    # 0 = serial (one fused step_fn per step).  k >= 1 enables the pipelined
+    # path (``PipelinedTrainer``): step t+1's cache plan is dispatched while
+    # step t's dense compute runs, with the ids of the next k batches merged
+    # into each plan so rows needed at t+k are prefetched before they miss.
+    pipeline_depth: int = 0
 
 
 class Trainer:
@@ -107,6 +117,39 @@ class Trainer:
                 pass
         return state, start
 
+    # -- shared per-step bookkeeping (both execution paths) ------------------
+    def _post_step(self, step_i: int, state: Any, metrics: Dict, t0: float) -> Any:
+        """Block on the loss scalar, record history, run the straggler /
+        overflow monitors and the checkpoint cadence; returns the (possibly
+        flushed) state."""
+        cfg = self.cfg
+        # block on one scalar so step time is real, rest stays async
+        loss = float(jax.device_get(metrics["loss"]))
+        dt = time.perf_counter() - t0
+        if self.detector.observe(dt) and self.on_straggler:
+            self.on_straggler(step_i, dt)
+        if cfg.assert_no_uniq_overflow and "uniq_overflows" in metrics:
+            n_over = int(jax.device_get(metrics["uniq_overflows"]))
+            if n_over:
+                raise RuntimeError(
+                    f"cache unique-buffer overflow at step {step_i}: raise "
+                    f"max_unique_per_step (per-table TableConfig bound, or the "
+                    f"arena bound for GROUPED tables — exactness violated otherwise)"
+                )
+        rec = {"step": step_i, "loss": loss, "time_s": dt}
+        for k in ("auc", "hit_rate", "cache_evictions", "grad_norm", "xent"):
+            if k in metrics:
+                rec[k] = float(jax.device_get(metrics[k]))
+        self.history.append(rec)
+        last = step_i + 1 >= cfg.max_steps
+        if self.checkpointer and ((step_i + 1) % cfg.ckpt_every == 0 or last):
+            to_save = state
+            if self.flush_fn is not None:
+                to_save = self.flush_fn(state)
+                state = to_save  # flushed state stays valid to train on
+            self.checkpointer.save_async(step_i + 1, to_save)
+        return state
+
     def run(self) -> Any:
         cfg = self.cfg
         state, start = self._bootstrap()
@@ -119,33 +162,135 @@ class Trainer:
                     break
                 t0 = time.perf_counter()
                 state, metrics = self.step_fn(state, batch)
-                # block on one scalar so step time is real, rest stays async
-                loss = float(jax.device_get(metrics["loss"]))
-                dt = time.perf_counter() - t0
-                if self.detector.observe(dt) and self.on_straggler:
-                    self.on_straggler(step_i, dt)
-                if cfg.assert_no_uniq_overflow and "uniq_overflows" in metrics:
-                    n_over = int(jax.device_get(metrics["uniq_overflows"]))
-                    if n_over:
-                        raise RuntimeError(
-                            f"cache unique-buffer overflow at step {step_i}: raise "
-                            f"max_unique_per_step (per-table TableConfig bound, or the "
-                            f"arena bound for GROUPED tables — exactness violated otherwise)"
+                state = self._post_step(step_i, state, metrics, t0)
+            if self.checkpointer:
+                self.checkpointer.wait()
+        finally:
+            prefetch.close()
+        return state
+
+
+class PipelinedTrainer(Trainer):
+    """Two-stage pipelined execution with lookahead cache prefetch.
+
+    The fused step is split into the model's three stages:
+
+      ``plan_fn(state, batch, future_batches) -> plan``   weight-free: dedup,
+          slot assignment, movement plan; merges the lookahead window's ids so
+          rows needed k steps ahead load early and are pinned until used.
+      ``compute_fn(state, batch, addresses) -> (state, metrics)``   dense
+          fwd/bwd + optimizer + synchronous row update.
+      ``apply_fn(state, plan) -> state``   executes the planned row movement.
+
+    Steps run in GROUPS of ``pipeline_depth``: one merged plan admits the
+    whole group's rows (addresses for every member come from the same plan),
+    so the per-step bookkeeping — dedup, victim argsort, transmitter rounds —
+    is paid once per group instead of once per step.  The next group's plan is
+    dispatched at the FIRST compute of the current group, before the trainer
+    blocks on any loss: planning reads only ids and cache index arrays (which
+    the compute step passes through untouched), so a multi-stream runtime is
+    free to overlap it with the dense work, and the prepare stage leaves the
+    loss-to-loss critical path either way.  Its row movement is applied after
+    the group's last row update, so evictions write back fresh values.
+
+    ``pipeline_depth=1`` is the pure BagPipe pipeline (plan t+1 under compute
+    t); larger depths add the amortization.  Because planning never reads
+    weights and compute never reads the index arrays, any depth is
+    loss-bit-identical to the serial ``Trainer`` (tested property).
+
+    The exact ids of future batches come from ``Prefetcher.lookahead`` — the
+    BagPipe observation that training data is read ahead anyway, so there is
+    nothing speculative about prefetching embedding rows.  Running a group off
+    one plan needs the union of its unique rows to fit the cache: the trainer
+    checks the plan's ``future_unresident`` counter and fails fast with the
+    remedy (raise the cache ratio or lower ``pipeline_depth``) instead of
+    silently gathering zeros.
+
+    Telemetry caveat: cache hit/miss counters are recorded by the plan, so
+    under group scheduling they sample only the group leaders' batches (1/k
+    of the traffic); losses and transfer correctness are unaffected.
+    """
+
+    def __init__(
+        self,
+        cfg: TrainerConfig,
+        init_fn: Callable[[], Any],
+        plan_fn: Callable[[Any, Dict, tuple], Any],  # jitted (state, batch, window)
+        compute_fn: Callable[[Any, Dict, Any], Any],  # jitted (state, batch, addresses)
+        apply_fn: Callable[[Any, Any], Any],  # jitted (state, plan)
+        make_batch: Callable[[int], Dict],
+        flush_fn: Optional[Callable[[Any], Any]] = None,
+        on_straggler: Optional[Callable[[int, float], None]] = None,
+        shard_fn: Optional[Callable[[Any], Any]] = None,
+    ):
+        super().__init__(
+            cfg,
+            init_fn,
+            step_fn=None,
+            make_batch=make_batch,
+            flush_fn=flush_fn,
+            on_straggler=on_straggler,
+            shard_fn=shard_fn,
+        )
+        self.plan_fn = plan_fn
+        self.compute_fn = compute_fn
+        self.apply_fn = apply_fn
+
+    def _check_window(self, plan, group) -> None:
+        """A group runs off one merged plan only if every member's rows made
+        residency — fail fast with the remedy otherwise."""
+        if len(group) <= 1:
+            return
+        n = int(jax.device_get(plan.future_unresident))
+        if n:
+            raise RuntimeError(
+                f"pipelined group of {len(group)} steps needs all its unique rows "
+                f"resident at once, but {n} lookahead lanes were dropped under "
+                f"capacity pressure: raise the cache ratio or lower "
+                f"TrainerConfig.pipeline_depth"
+            )
+
+    def run(self) -> Any:
+        cfg = self.cfg
+        depth = max(1, cfg.pipeline_depth)
+        state, start = self._bootstrap()
+        if start >= cfg.max_steps:
+            return state
+        prefetch = Prefetcher(
+            self.make_batch, start_step=start, depth=max(cfg.prefetch_depth, depth)
+        )
+        try:
+            group = [next(prefetch) for _ in range(min(depth, cfg.max_steps - start))]
+            # prologue: the first group has no shadow to plan under
+            plan = self.plan_fn(state, group[0][1], tuple(b for _, b in group[1:]))
+            self._check_window(plan, group)
+            state = self.apply_fn(state, plan)
+            addrs = (plan.addresses,) + tuple(plan.future_addresses)
+            while group:
+                next_plan = None
+                last_step = group[-1][0]
+                n_next = min(depth, cfg.max_steps - (last_step + 1))
+                for j, (step_i, batch) in enumerate(group):
+                    t0 = time.perf_counter()
+                    if j == 0 and n_next > 0:
+                        # dispatch the NEXT group's merged plan before blocking
+                        # on any of this group's losses — planning reads only
+                        # ids + index state, so it overlaps the dense compute
+                        peek = prefetch.lookahead(n_next)
+                        next_plan = self.plan_fn(
+                            state, peek[0][1], tuple(b for _, b in peek[1:])
                         )
-                rec = {"step": step_i, "loss": loss, "time_s": dt}
-                for k in ("auc", "hit_rate", "cache_evictions", "grad_norm", "xent"):
-                    if k in metrics:
-                        rec[k] = float(jax.device_get(metrics[k]))
-                self.history.append(rec)
-                last = step_i + 1 >= cfg.max_steps
-                if self.checkpointer and (
-                    (step_i + 1) % cfg.ckpt_every == 0 or last
-                ):
-                    to_save = state
-                    if self.flush_fn is not None:
-                        to_save = self.flush_fn(state)
-                        state = to_save  # flushed state stays valid to train on
-                    self.checkpointer.save_async(step_i + 1, to_save)
+                    state, metrics = self.compute_fn(state, batch, addrs[j])
+                    if j == len(group) - 1 and next_plan is not None:
+                        # movement runs after the group's last row update:
+                        # evictions write back the freshest values
+                        state = self.apply_fn(state, next_plan)
+                    state = self._post_step(step_i, state, metrics, t0)
+                if next_plan is None:
+                    break
+                group = [next(prefetch) for _ in range(n_next)]
+                self._check_window(next_plan, group)
+                addrs = (next_plan.addresses,) + tuple(next_plan.future_addresses)
             if self.checkpointer:
                 self.checkpointer.wait()
         finally:

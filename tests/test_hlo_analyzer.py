@@ -25,8 +25,11 @@ def test_scan_body_multiplied_by_trip_count():
     c = analyze_hlo(comp.as_text())
     expect = 8 * 2 * 128**3
     assert 0.8 * expect < c.flops < 1.3 * expect
-    # and XLA's own analysis indeed counts the body once (the motivation)
-    assert comp.cost_analysis()["flops"] < 0.3 * expect
+    # and XLA's own analysis indeed counts the body once (the motivation);
+    # cost_analysis() returns a per-device list on newer jax.
+    ca = comp.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert ca["flops"] < 0.3 * expect
 
 
 def test_gather_charges_touched_rows_not_table():

@@ -1,0 +1,302 @@
+"""Pipelined execution engine: plan/apply split, lookahead admission,
+pipelined-vs-serial bit-identity, and the Prefetcher lookahead view."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collection as col
+from repro.data.pipeline import Prefetcher
+
+
+def _arena(state):
+    return state.slabs[col.SHARED_ARENA]
+
+
+def _resident(state, raw_id):
+    slab = _arena(state)
+    row = int(slab.idx_map[raw_id])
+    return int(slab.cache.row_to_slot[row]) >= 0
+
+
+def _fb(ids):
+    return col.FeatureBatch(ids={"t": jnp.asarray(ids, jnp.int32)})
+
+
+def _coll(vocab=100, cache_ratio=0.12, ids=4, **kw):
+    tables = [col.TableConfig("t", vocab=vocab, dim=4, ids_per_step=ids, **kw)]
+    return col.EmbeddingCollection.create(tables, cache_ratio=cache_ratio)
+
+
+# --------------------------------------------------------------------------
+# plan/apply split
+# --------------------------------------------------------------------------
+
+
+def test_prepare_equals_plan_then_apply():
+    coll = _coll()
+    s1 = coll.init(jax.random.PRNGKey(0))
+    s2 = coll.init(jax.random.PRNGKey(0))
+    for step in range(6):
+        fb = _fb([step * 3, step * 3 + 1, 90 - step, -1])
+        s1, a1 = coll.prepare(s1, fb)
+        p = coll.plan_prepare(s2, fb)
+        s2 = coll.apply_plan(s2, p)
+        np.testing.assert_array_equal(np.asarray(a1["t"]), np.asarray(p.addresses["t"]))
+        jax.tree_util.tree_map(
+            lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)), s1, s2
+        )
+
+
+def test_plan_reads_no_weights():
+    """The planning half must be a function of ids + index state only: zeroing
+    every weight changes nothing in the plan."""
+    coll = _coll()
+    state = coll.init(jax.random.PRNGKey(0))
+    fb, fut = _fb([5, 6, 7, 8]), _fb([40, 41, 42, 43])
+    zeroed = jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x) if jnp.issubdtype(x.dtype, jnp.floating) else x, state
+    )
+    p1 = coll.plan_prepare(state, fb, fb_future=(fut,))
+    p2 = coll.plan_prepare(zeroed, fb, fb_future=(fut,))
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)), p1, p2
+    )
+
+
+# --------------------------------------------------------------------------
+# lookahead admission (satellite: resident by t+k, never evicted in between)
+# --------------------------------------------------------------------------
+
+
+def test_lookahead_row_resident_by_its_step_and_never_evicted():
+    # capacity 12; each step brings 4 fresh rows, so eviction pressure is real
+    coll = _coll(vocab=100, cache_ratio=0.12)
+    state = coll.init(jax.random.PRNGKey(0))  # warm: rows 0..11 resident
+    batches = [[0, 1, 2, 3], [20, 21, 22, 23], [30, 31, 32, 33], [40, 41, 42, 43],
+               [50, 51, 52, 53]]
+    depth = 2  # window: the next 2 batches' ids merge into each plan
+    target = 30  # needed at t=2; must be prefetched at t=0 and pinned at t=1
+
+    residency = []
+    for t in range(3):
+        fb_now = _fb(batches[t])
+        fb_future = [_fb(b) for b in batches[t + 1 : t + 1 + depth]]
+        state, addr = coll.prepare_lookahead(state, fb_now, fb_future)
+        residency.append(_resident(state, target))
+        if t == 2:
+            # the target batch's rows were all prefetched: no new loads beyond
+            # its own lookahead window's, and the target row is a hit
+            assert all(int(a) >= 0 for a in np.asarray(addr["t"]))
+        # exactness every step, lookahead or not
+        rows = coll.gather(coll.weights(state), addr, fb_now)
+        ref = coll.dense_reference(coll.flush(state), fb_now)
+        np.testing.assert_array_equal(np.asarray(rows["t"]), np.asarray(ref["t"]))
+    assert residency == [True, True, True], residency
+
+
+def test_lookahead_current_batch_wins_under_capacity_pressure():
+    """When the window's rows don't fit, future loads are dropped — the
+    current batch stays exact and never overflows the victim budget."""
+    coll = _coll(vocab=100, cache_ratio=0.06, ids=6)  # capacity 6 = one batch
+    state = coll.init(jax.random.PRNGKey(0))
+    fb_now = _fb([10, 11, 12, 13, 14, 15])
+    fb_future = [_fb([20, 21, 22, 23, 24, 25])]
+    state, addr = coll.prepare_lookahead(state, fb_now, fb_future)
+    # every current row resident + exact
+    assert all(int(a) >= 0 for a in np.asarray(addr["t"]))
+    rows = coll.gather(coll.weights(state), addr, fb_now)
+    ref = coll.dense_reference(coll.flush(state), fb_now)
+    np.testing.assert_array_equal(np.asarray(rows["t"]), np.asarray(ref["t"]))
+
+
+def test_future_only_slab_counts_as_unresident_not_keyerror():
+    """A cached slab touched only by the window is not prefetched — the plan
+    must report its lanes in future_unresident (the group trainer's fail-fast)
+    rather than silently omitting their addresses."""
+    tables = [
+        col.TableConfig("a", vocab=64, dim=4, ids_per_step=4,
+                        placement=col.Placement.CACHED, cache_ratio=0.5),
+        col.TableConfig("b", vocab=64, dim=4, ids_per_step=4,
+                        placement=col.Placement.CACHED, cache_ratio=0.5),
+    ]
+    coll = col.EmbeddingCollection(tables, col.PlacementPlanner(10**9).plan(tables))
+    state = coll.init(jax.random.PRNGKey(0))
+    fb_now = col.FeatureBatch(ids={"a": jnp.asarray([1, 2, 3, -1], jnp.int32)})
+    fb_fut = col.FeatureBatch(ids={"a": jnp.asarray([4, 5, -1, -1], jnp.int32),
+                                   "b": jnp.asarray([7, 8, 9, -1], jnp.int32)})
+    p = coll.plan_prepare(state, fb_now, fb_future=(fb_fut,))
+    assert int(p.future_unresident) == 3  # b's three valid lanes
+    assert "a" in p.future_addresses[0] and "b" not in p.future_addresses[0]
+
+
+def test_pallas_bag_grad_respects_max_bag_truncation():
+    """Forward truncates bags at max_bag; the custom VJP must use the same
+    lane mask (no gradient into dropped rows, mean divided by kept count)."""
+    from repro.kernels.embedding_bag import ops as eb_ops
+
+    table = jnp.arange(40, dtype=jnp.float32).reshape(10, 4)
+    flat = jnp.asarray([0, 1, 2, 3, 4, 5], jnp.int32)  # one bag of 6 lanes
+    seg = jnp.zeros(6, jnp.int32)
+    for combiner in ("sum", "mean"):
+        def loss(w):
+            return jnp.sum(
+                eb_ops.embedding_bag(w, flat, seg, 1, combiner=combiner, max_bag=4) ** 2
+            )
+        g = jax.grad(loss)(table)
+        assert bool((np.asarray(g)[4:6] == 0).all()), combiner  # dropped lanes
+        # numeric check against a jnp oracle over the kept lanes only
+        def ref(w):
+            rows = jnp.take(w, flat[:4], axis=0)
+            out = rows.sum(0) / (4.0 if combiner == "mean" else 1.0)
+            return jnp.sum(out**2)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(jax.grad(ref)(table)),
+                                   rtol=1e-5)
+
+
+def test_overflow_accounting_under_merged_lookahead_ids():
+    """uniq_overflows counts CURRENT-batch overflow only: a lookahead window
+    far beyond max_unique_per_step must not trip the exactness guard."""
+    tables = [col.TableConfig("t", vocab=100, dim=4, ids_per_step=8,
+                              max_unique_per_step=8, cache_ratio=0.3,
+                              placement=col.Placement.CACHED)]
+    coll = col.EmbeddingCollection(tables, col.PlacementPlanner(10**9).plan(tables))
+    state = coll.init(jax.random.PRNGKey(0))
+    fb_now = _fb([1, 1, 2, 2, 3, 3, 4, 4])  # 4 distinct <= 8: fine
+    fb_future = [_fb(list(range(20, 28))), _fb(list(range(40, 48)))]  # 16 more distinct
+    state, _ = coll.prepare_lookahead(state, fb_now, fb_future)
+    assert int(coll.metrics(state)["uniq_overflows"]) == 0
+    # a genuinely overflowing CURRENT batch still counts exactly once
+    fb_over = _fb(list(range(80, 92)))  # 12 distinct > max_unique_per_step=8
+    tables12 = [col.TableConfig("t", vocab=100, dim=4, ids_per_step=12,
+                                max_unique_per_step=8, cache_ratio=0.3,
+                                placement=col.Placement.CACHED)]
+    coll12 = col.EmbeddingCollection(tables12, col.PlacementPlanner(10**9).plan(tables12))
+    st12 = coll12.init(jax.random.PRNGKey(0))
+    st12, _ = coll12.prepare_lookahead(st12, fb_over, [_fb(list(range(8)) + [-1] * 4)])
+    assert int(coll12.metrics(st12)["uniq_overflows"]) == 1
+
+
+# --------------------------------------------------------------------------
+# pipelined trainer == serial trainer, bit for bit
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipeline_depth", [1, 3])
+def test_pipelined_trainer_loss_bit_identical_to_serial(pipeline_depth):
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+    from repro.train.trainer import PipelinedTrainer, Trainer, TrainerConfig
+
+    cfg = DLRMConfig(vocab_sizes=(4096, 256, 64), embed_dim=8, batch_size=16,
+                     cache_ratio=0.25, lr=0.1, bottom_mlp=(16, 8), top_mlp=(16,))
+    spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+
+    def make_batch(step):
+        return {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 16, 0, step).items()}
+
+    model = DLRM(cfg)
+    serial = Trainer(TrainerConfig(max_steps=6),
+                     init_fn=lambda: model.init(jax.random.PRNGKey(0)),
+                     step_fn=jax.jit(model.train_step),
+                     make_batch=make_batch, flush_fn=model.flush)
+    serial.run()
+
+    model2 = DLRM(cfg)
+    piped = PipelinedTrainer(
+        TrainerConfig(max_steps=6, pipeline_depth=pipeline_depth),
+        init_fn=lambda: model2.init(jax.random.PRNGKey(0)),
+        plan_fn=jax.jit(model2.plan_step),
+        compute_fn=jax.jit(model2.compute_step),
+        apply_fn=jax.jit(model2.apply_step),
+        make_batch=make_batch, flush_fn=model2.flush)
+    piped.run()
+
+    assert [h["loss"] for h in serial.history] == [h["loss"] for h in piped.history]
+    assert [h["auc"] for h in serial.history] == [h["auc"] for h in piped.history]
+    assert [h["step"] for h in serial.history] == [h["step"] for h in piped.history]
+
+
+# --------------------------------------------------------------------------
+# fused Pallas gather+pool parity (forward AND gradient)
+# --------------------------------------------------------------------------
+
+
+def test_pool_pallas_fused_matches_reference_and_grads():
+    tables = [col.TableConfig("t", vocab=50, dim=4, ids_per_step=12, cache_ratio=0.5)]
+    coll = col.EmbeddingCollection.create(tables, cache_ratio=0.5)
+    state = coll.init(jax.random.PRNGKey(0))
+    flat = jnp.asarray([1, 2, 3, -1, 4, 5, 6, 7, -1, -1, 8, 9], jnp.int32)
+    seg = jnp.asarray([0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2], jnp.int32)
+    fb = col.FeatureBatch.from_bags({"t": (flat, seg)}, num_segments=3)
+    state, addr = coll.prepare(state, fb)
+    w = coll.weights(state)
+
+    for combiner in ("sum", "mean"):
+        rows = coll.gather(w, addr, fb)
+        ref = coll.pool(rows, fb, combiner)["t"]
+        fused = coll.pool({}, fb, combiner, weights=w, addresses=addr, use_pallas=True)["t"]
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(fused), rtol=1e-6)
+
+        g_ref = jax.grad(lambda w: jnp.sum(coll.pool(coll.gather(w, addr, fb), fb, combiner)["t"] ** 2))(w)
+        g_fus = jax.grad(lambda w: jnp.sum(
+            coll.pool({}, fb, combiner, weights=w, addresses=addr, use_pallas=True)["t"] ** 2))(w)
+        for k in g_ref:
+            np.testing.assert_allclose(np.asarray(g_ref[k]), np.asarray(g_fus[k]), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Prefetcher lookahead view + join-on-close (satellite)
+# --------------------------------------------------------------------------
+
+
+def test_prefetcher_lookahead_peeks_without_consuming():
+    pf = Prefetcher(lambda s: {"x": np.asarray([s])}, start_step=0, depth=4)
+    try:
+        step, batch = next(pf)
+        assert (step, int(batch["x"][0])) == (0, 0)
+        peek = pf.lookahead(3)
+        assert [s for s, _ in peek] == [1, 2, 3]
+        peek2 = pf.lookahead(3)  # idempotent: nothing consumed
+        assert [s for s, _ in peek2] == [1, 2, 3]
+        assert next(pf)[0] == 1  # stream order unchanged
+        with pytest.raises(ValueError):
+            pf.lookahead(5)  # beyond buffer depth
+    finally:
+        pf.close()
+
+
+def test_prefetcher_close_joins_worker_thread():
+    before = threading.active_count()
+    pf = Prefetcher(lambda s: {"x": np.asarray([s])}, depth=2)
+    next(pf)
+    pf.close()
+    assert not pf._thread.is_alive()
+    assert threading.active_count() <= before
+
+
+def test_prefetcher_surfaces_producer_error_in_order():
+    def make(step):
+        if step == 2:
+            raise RuntimeError("boom")
+        return {"x": np.asarray([step])}
+
+    pf = Prefetcher(make, depth=2)
+    try:
+        assert next(pf)[0] == 0
+        assert next(pf)[0] == 1
+        with pytest.raises(RuntimeError, match="boom"):
+            next(pf)
+    finally:
+        pf.close()
+    # lookahead must surface the producer error too, not return a short peek
+    pf2 = Prefetcher(make, depth=3)
+    try:
+        assert next(pf2)[0] == 0
+        with pytest.raises(RuntimeError, match="boom"):
+            pf2.lookahead(3)  # only step 1 exists before the error
+        assert next(pf2)[0] == 1  # buffered good batch stays consumable
+    finally:
+        pf2.close()
