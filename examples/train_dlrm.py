@@ -16,9 +16,16 @@ lookahead window prefetches rows before they miss.  Loss-bit-identical to the
 serial path — ``--verify-pipeline`` runs both and asserts it.  Note k > 1
 needs the cache to hold a whole group's unique rows (raise --cache-ratio).
 
+With ``--host-precision {fp16,int8,auto}`` the host-resident table is stored
+through a mixed-precision ``HostStore``: the cached working set stays fp32,
+the cold majority costs 2-4x fewer host bytes, and cache misses cross the
+host link encoded (the bandwidth win).  fp32 (default) is bit-exact with the
+pre-store layout.
+
 Run:  PYTHONPATH=src python examples/train_dlrm.py [--steps 300]
       PYTHONPATH=src python examples/train_dlrm.py --steps 50 \
           --cache-ratio 0.05 --pipeline-depth 2 --verify-pipeline
+      PYTHONPATH=src python examples/train_dlrm.py --steps 100 --host-precision int8
 """
 import argparse
 
@@ -44,6 +51,13 @@ def main():
                          "per merged cache plan (lookahead prefetch)")
     ap.add_argument("--verify-pipeline", action="store_true",
                     help="run serial AND pipelined, assert bit-identical losses")
+    ap.add_argument("--host-precision", default="fp32",
+                    choices=["fp32", "fp16", "int8", "auto"],
+                    help="host-tier embedding storage codec: fp32 keeps the "
+                         "bit-exact pre-store behavior; fp16/int8 store the "
+                         "host-resident table (and cross the host link) at "
+                         "2x/4x fewer bytes; auto picks per slab from the "
+                         "frequency scan's coverage")
     args = ap.parse_args()
 
     cfg = DLRMConfig(
@@ -53,6 +67,7 @@ def main():
         device_budget_bytes=(
             int(args.device_budget_mb * 1e6) if args.device_budget_mb else None
         ),
+        host_precision=args.host_precision,
     )
     model = DLRM(cfg)
     print("placement plan:", model.collection.plan.summary())
@@ -91,15 +106,28 @@ def main():
         depth = max(args.pipeline_depth, 1)
         serial = build_trainer(DLRM(cfg), 0, None)  # no ckpt: fresh runs only
         serial.run()
-        piped = build_trainer(DLRM(cfg), depth, None)
+        model = DLRM(cfg)  # the final summary reads this (trained) instance
+        piped = build_trainer(model, depth, None)
         state = piped.run()
         s_loss = [h["loss"] for h in serial.history]
         p_loss = [h["loss"] for h in piped.history]
-        assert s_loss == p_loss, "pipelined losses diverged from serial!"
+        if args.host_precision == "fp32":
+            assert s_loss == p_loss, "pipelined losses diverged from serial!"
+        else:
+            # lossy host codecs: lookahead pinning AVOIDS quantize/dequantize
+            # round trips the serial schedule pays (a pinned row is never
+            # evicted+reloaded between its uses), so the two schedules read
+            # rows that differ by codec noise — equality holds to tolerance,
+            # not bitwise.
+            import numpy as _np
+            _np.testing.assert_allclose(p_loss, s_loss, rtol=1e-4, atol=1e-5)
         ms = [h["time_s"] for h in serial.history[2:]] or [h["time_s"] for h in serial.history]
         mp = [h["time_s"] for h in piped.history[2:]] or [h["time_s"] for h in piped.history]
         med = lambda xs: sorted(xs)[len(xs) // 2] * 1e3
-        print(f"pipelined (depth={depth}) is LOSS-BIT-IDENTICAL to serial over "
+        claim = ("LOSS-BIT-IDENTICAL to serial" if args.host_precision == "fp32"
+                 else f"loss-equal to serial within codec noise "
+                      f"({args.host_precision} host store, rtol=1e-4)")
+        print(f"pipelined (depth={depth}) is {claim} over "
               f"{len(s_loss)} steps; median step {med(ms):.1f} -> {med(mp):.1f} ms")
         trainer = piped
     else:
@@ -107,12 +135,15 @@ def main():
         state = trainer.run()
 
     h = trainer.history
+    dev_bytes = model.collection.device_bytes()
     if h:
         print(f"\nsteps {h[0]['step']}..{h[-1]['step']}")
         print(f"loss  {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
         print(f"auc   {h[0].get('auc', 0):.4f} -> {h[-1].get('auc', 0):.4f}")
         print(f"cache hit rate: {h[-1].get('hit_rate', 0):.1%}")
-    dev_bytes = model.collection.device_bytes()
+        print(f"host precision {model.collection.host_precision}: "
+              f"saved {dev_bytes['host_bytes_saved']/1e6:.1f} MB vs fp32; "
+              f"host<->device traffic {h[-1].get('host_wire_bytes', 0)/1e6:.1f} MB total")
     print(f"device-resident: {dev_bytes['device_total']/1e6:.1f} MB "
           f"vs slow tier {dev_bytes['slow_tier_bytes']/1e6:.1f} MB "
           f"(budget: {dev_bytes['budget_bytes']})")

@@ -20,6 +20,15 @@ Invariant (tested property): after ``prepare``, every id of the batch maps to
 a resident slot, and lookups through the cache are bit-identical to lookups
 into an uncached table — the cache is pure data movement, which is why the
 paper's accuracy matches the baseline.
+
+Host tier: ``full_rows`` may be either a raw pytree (leaves [vocab, ...]) or
+a :class:`repro.store.HostStore` — the mixed-precision host-side container.
+``apply_plan`` / ``flush`` / ``warmup`` only ever touch it through the
+transmitter, which is codec-aware: loads dequantize the staging block on
+arrival, evictions/flushes quantize before the block crosses the link.  With
+the fp32 codec the store path is bit-identical to the raw-pytree path; with
+fp16/int8 the cache invariant weakens from bit-exact to codec-roundtrip-exact
+(resident rows are still authoritative full-precision copies).
 """
 from __future__ import annotations
 
@@ -393,7 +402,10 @@ def prepare(
     """Algorithm 1 ``PrepareCache``: make every row of ``rows`` resident.
 
     Args:
-      full_rows: pytree of the full (freq-ordered) table, leaves [vocab, ...].
+      full_rows: the full (freq-ordered) table — a raw pytree with leaves
+        [vocab, ...] or a ``repro.store.HostStore`` holding the same leaves
+        encoded (misses are dequantized on load, evictions quantized on
+        writeback, inside the transmitter rounds).
       rows: int32 [ids_per_step] freq-ranked row per id (-1 padding). Callers
         translate raw ids through ``idx_map`` first.
       future_rows: optional lookahead window of future-batch rows (see

@@ -43,6 +43,7 @@ from repro.core import cache as cache_lib
 from repro.core import collection as coll_lib
 from repro.core import freq as freq_lib
 from repro.core.policies import Policy
+from repro.store import HostStore, get_codec
 
 __all__ = [
     "CachedEmbeddingConfig",
@@ -72,6 +73,7 @@ class CachedEmbeddingConfig:
     rowwise_adagrad: bool = False  # carry per-row accumulator through the cache
     max_unique_per_step: int = 0  # 0 = worst case; see CacheConfig
     protect_via_inverse: bool = True  # see CacheConfig (paper isin = False)
+    host_precision: str = "fp32"  # host-tier codec: fp32 (bit-exact) | fp16 | int8
 
     @property
     def vocab(self) -> int:
@@ -105,7 +107,9 @@ class CachedEmbeddingConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class CachedEmbeddingState:
-    full: Any  # {"weight": [vocab, dim], ("accum": [vocab])?} — the slow tier
+    # slow tier: a repro.store.HostStore of {"weight": [vocab, dim],
+    # ("accum": [vocab])?} — fp32 codec = raw arrays (pre-store behavior)
+    full: Any
     cache: cache_lib.CacheState
     idx_map: jnp.ndarray  # int32 [vocab] raw id -> freq-ranked row
     offsets: jnp.ndarray  # int32 [fields] per-field base offset
@@ -148,7 +152,8 @@ def init_state(
     )
     state = cache_lib.init_cache(cfg.cache_config(), row_example)
     offsets = jnp.asarray(freq_lib.concat_table_offsets(cfg.vocab_sizes).astype(np.int32))
-    st = CachedEmbeddingState(full=full, cache=state, idx_map=idx_map, offsets=offsets)
+    store = HostStore.create(full, codec=cfg.host_precision)
+    st = CachedEmbeddingState(full=store, cache=state, idx_map=idx_map, offsets=offsets)
     if warm:
         st = st.with_slab(coll_lib.cached_slab_warmup(cfg.cache_config(), st.slab()))
     return st
@@ -246,11 +251,11 @@ def flush_state(cfg: CachedEmbeddingConfig, state: CachedEmbeddingState) -> Cach
 
 
 def dense_reference_lookup(state: CachedEmbeddingState, field_ids: jnp.ndarray) -> jnp.ndarray:
-    """Oracle: bypass the cache, read the flushed full table (tests only)."""
+    """Oracle: bypass the cache, read the flushed full table (tests only;
+    decoded when the slow tier is quantized)."""
     gids = globalize(state, field_ids)
     rows = state.idx_map[gids]
-    safe = jnp.where(rows >= 0, rows, state.full["weight"].shape[0])
-    return jnp.take(state.full["weight"], safe, axis=0, mode="fill", fill_value=0)
+    return coll_lib._read_full_rows(state.full, rows)
 
 
 def shard_specs(
@@ -270,17 +275,21 @@ def shard_specs(
 
     if mode == "column":
         full_w = cached_w = P(None, model_axis)
+        side_w = P(None, None)  # per-row sideband cannot split the dim
     elif mode == "row":
         full_w, cached_w = P(model_axis, None), P(None, None)
+        side_w = P(model_axis, None)
     else:
-        full_w = cached_w = P(None, None)
+        full_w = cached_w = side_w = P(None, None)
+    full_like = {"weight": jax.ShapeDtypeStruct((cfg.vocab, cfg.dim), cfg.dtype)}
     full = {"weight": full_w}
     cached = {"weight": cached_w}
     if cfg.rowwise_adagrad:
+        full_like["accum"] = jax.ShapeDtypeStruct((cfg.vocab,), jnp.float32)
         full["accum"] = P(model_axis) if mode == "row" else P(None)
         cached["accum"] = P(None)
     return CachedEmbeddingState(
-        full=full,
+        full=HostStore.spec_like(full_like, full, side_w, codec=cfg.host_precision),
         cache=cache_lib.CacheState(
             cached_rows=cached,
             slot_to_row=P(None),
@@ -299,13 +308,14 @@ def shard_specs(
 
 
 def device_bytes(cfg: CachedEmbeddingConfig) -> dict:
-    """Fast-tier vs slow-tier footprint (paper Figs. 7/8 memory accounting)."""
+    """Fast-tier vs slow-tier footprint (paper Figs. 7/8 memory accounting;
+    the slow tier is charged at its encoded, host-precision size)."""
     itemsize = jnp.dtype(cfg.dtype).itemsize
     fast = cfg.capacity * cfg.dim * itemsize  # cached weight
     fast += cfg.capacity * 4 * 3  # slot_to_row, last_used, use_count
     fast += cfg.vocab * 4 * 2  # row_to_slot + idx_map (index arrays live on device)
-    slow = cfg.vocab * cfg.dim * itemsize
+    slow = cfg.vocab * get_codec(cfg.host_precision).row_bytes((cfg.dim,), cfg.dtype)
     if cfg.rowwise_adagrad:
         fast += cfg.capacity * 4
-        slow += cfg.vocab * 4
+        slow += cfg.vocab * 4  # accumulators stay raw fp32 (per-row scalars)
     return {"fast_tier_bytes": fast, "slow_tier_bytes": slow}

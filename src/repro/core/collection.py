@@ -52,6 +52,7 @@ import numpy as np
 from repro.core import cache as cache_lib
 from repro.core import freq as freq_lib
 from repro.core.policies import Policy
+from repro.store import HostStore, PrecisionPolicy, SlabGeometry, get_codec
 
 __all__ = [
     "Placement",
@@ -100,6 +101,12 @@ class TableConfig:
     protect_via_inverse: bool = True
     dtype: Any = jnp.float32
     placement: Optional[Placement] = None  # planner override
+    # host-tier storage codec for this table when CACHED: "fp32" (bit-exact
+    # default), "fp16", "int8" (row-wise scale/zero-point), or "auto"
+    # (PrecisionPolicy picks from frequency coverage at init).  None defers
+    # to the planner / collection-wide setting.  DEVICE tables have no host
+    # tier; GROUPED tables share the arena's codec.
+    host_precision: Optional[str] = None
 
     @property
     def features(self) -> Tuple[str, ...]:
@@ -171,6 +178,8 @@ class TablePlacement:
     # effective ratio for CACHED/GROUPED tables; None = use the table's own.
     # 0.0 is meaningful (planner shrunk to the exactness floor), hence Optional.
     cache_ratio: Optional[float] = None
+    # host-tier codec ("fp32"/"fp16"/"int8"/"auto"); None = table's own / fp32
+    host_precision: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +191,7 @@ class ArenaConfig:
     buffer_rows: int = 65536
     max_unique_per_step: int = 0
     protect_via_inverse: bool = True
+    host_precision: str = "fp32"  # the arena's host-tier codec (shared table)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,11 +212,15 @@ class PlacementPlan:
         buffer_rows: int = 65536,
         max_unique_per_step: int = 0,
         protect_via_inverse: bool = True,
+        host_precision: str = "fp32",
     ) -> "PlacementPlan":
         """The paper's layout: every table GROUPED into one shared cache."""
         return cls(
             placements={
-                t.name: TablePlacement(Placement.GROUPED, cache_ratio) for t in tables
+                t.name: TablePlacement(
+                    Placement.GROUPED, cache_ratio, host_precision=host_precision
+                )
+                for t in tables
             },
             arena=ArenaConfig(
                 cache_ratio=cache_ratio,
@@ -214,16 +228,22 @@ class PlacementPlan:
                 buffer_rows=buffer_rows,
                 max_unique_per_step=max_unique_per_step,
                 protect_via_inverse=protect_via_inverse,
+                host_precision=host_precision,
             ),
             budget_bytes=None,
         )
 
     def summary(self) -> Dict[str, str]:
-        return {
-            n: f"{p.placement.value}"
-            + (f"@{p.cache_ratio:.4f}" if p.placement is not Placement.DEVICE else "")
-            for n, p in self.placements.items()
-        }
+        out = {}
+        for n, p in self.placements.items():
+            s = f"{p.placement.value}"
+            if p.placement is not Placement.DEVICE:
+                s += f"@{p.cache_ratio:.4f}" if p.cache_ratio is not None else ""
+                hp = p.host_precision or "fp32"
+                if hp != "fp32":
+                    s += f":{hp}"  # host-tier codec (bytes saved vs fp32)
+            out[n] = s
+        return out
 
 
 class PlacementPlanner:
@@ -240,6 +260,13 @@ class PlacementPlanner:
       4. everything else is CACHED with its own ratio/policy; if the summed
          fast tiers overflow the remaining budget, ratios are scaled down
          uniformly, floored at one batch's unique rows (exactness floor).
+
+    Host precision: the planner also stamps each CACHED/GROUPED table's
+    host-tier codec (``TablePlacement.host_precision``): the table's own
+    ``TableConfig.host_precision`` wins, then the planner-wide
+    ``host_precision`` default.  ``"auto"`` defers the choice to
+    ``repro.store.PrecisionPolicy`` at ``EmbeddingCollection.init`` time,
+    when frequency counts are available.
     """
 
     def __init__(
@@ -247,10 +274,12 @@ class PlacementPlanner:
         budget_bytes: int,
         group_below_rows: int = 0,
         arena: ArenaConfig = ArenaConfig(),
+        host_precision: Optional[str] = None,
     ):
         self.budget_bytes = int(budget_bytes)
         self.group_below_rows = int(group_below_rows)
         self.arena = arena
+        self.host_precision = host_precision
 
     @staticmethod
     def _fast_bytes(t: TableConfig, ratio: float) -> int:
@@ -312,8 +341,22 @@ class PlacementPlanner:
             else:
                 solo.append(t)
 
+        def host_prec(t: TableConfig) -> Optional[str]:
+            return t.host_precision or self.host_precision
+
+        # the planner-wide default also governs the shared arena (the arena's
+        # own field keeps its fp32 default otherwise); the returned plan's
+        # ArenaConfig carries the resolved codec so the collection's arena
+        # slab agrees with the GROUPED placements.
+        arena = dataclasses.replace(
+            self.arena, host_precision=self.host_precision or self.arena.host_precision
+        )
         for t in grouped:
-            placements[t.name] = TablePlacement(Placement.GROUPED, self.arena.cache_ratio)
+            placements[t.name] = TablePlacement(
+                Placement.GROUPED,
+                arena.cache_ratio,
+                host_precision=arena.host_precision,
+            )
 
         # fit solo cache ratios into what is left (index arrays included)
         remaining = self.budget_bytes - device_bytes - self._arena_bytes(grouped)
@@ -329,10 +372,12 @@ class PlacementPlanner:
             # weight bytes scale ~linearly with ratio; solve for the shrink
             scale = max(0.0, (remaining - floor) / max(want - floor, 1))
         for t in solo:
-            placements[t.name] = TablePlacement(Placement.CACHED, t.cache_ratio * scale)
+            placements[t.name] = TablePlacement(
+                Placement.CACHED, t.cache_ratio * scale, host_precision=host_prec(t)
+            )
 
         return PlacementPlan(
-            placements=placements, arena=self.arena, budget_bytes=self.budget_bytes
+            placements=placements, arena=arena, budget_bytes=self.budget_bytes
         )
 
 
@@ -354,7 +399,12 @@ class DeviceSlab:
 class CachedSlab:
     """A two-tier cached arena (one table, or the shared GROUPED group)."""
 
-    full: Any  # {"weight": [vocab, dim], ...} — slow tier
+    # slow tier: a repro.store.HostStore holding {"weight": [vocab, dim], ...}
+    # encoded by the slab's host codec (fp32 = raw, bit-identical to the
+    # pre-store pytree).  Raw dicts are still accepted anywhere the slab is
+    # consumed (the transmitter handles both), but ``init`` always builds a
+    # store.
+    full: Any
     cache: cache_lib.CacheState
     idx_map: jnp.ndarray  # int32 [vocab] raw id -> freq-ranked row
 
@@ -402,6 +452,16 @@ def _translate(slab: CachedSlab, raw_ids: jnp.ndarray) -> jnp.ndarray:
     valid = raw_ids >= 0
     rows = slab.idx_map.at[jnp.where(valid, raw_ids, 0)].get(mode="fill", fill_value=-1)
     return jnp.where(valid, rows, -1)
+
+
+def _read_full_rows(full: Any, rows: jnp.ndarray) -> jnp.ndarray:
+    """Gather weight rows from a slow tier — decoded when it is a HostStore,
+    raw otherwise; negative lanes give zero rows (oracle/bulk read path)."""
+    if isinstance(full, HostStore):
+        return full.decode_rows(rows)["weight"]
+    w = full["weight"]
+    safe = jnp.where(rows >= 0, rows, w.shape[0])
+    return jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
 
 
 def cached_slab_plan(
@@ -462,6 +522,7 @@ class _CachedSlabSpec:
     buffer_rows: int
     max_unique_per_step: int
     protect_via_inverse: bool
+    host_precision: str = "fp32"  # requested codec; "auto" resolves at init
 
     @property
     def vocab(self) -> int:
@@ -549,6 +610,7 @@ class EmbeddingCollection:
                     buffer_rows=t.buffer_rows,
                     max_unique_per_step=t.max_unique_per_step,
                     protect_via_inverse=t.protect_via_inverse,
+                    host_precision=p.host_precision or t.host_precision or "fp32",
                 )
             else:
                 grouped.append(t)
@@ -564,7 +626,14 @@ class EmbeddingCollection:
                 buffer_rows=a.buffer_rows,
                 max_unique_per_step=a.max_unique_per_step,
                 protect_via_inverse=a.protect_via_inverse,
+                host_precision=a.host_precision,
             )
+        # resolved host codec per cached slab ("auto" is re-resolved by init,
+        # which needs the frequency counts; shard_specs/device_bytes read this)
+        self.host_precision: Dict[str, str] = {
+            sname: spec.host_precision for sname, spec in self.cached_slabs.items()
+        }
+        self.precision_policy = PrecisionPolicy()
 
         # table -> (slab, offset of the table inside the slab's concat vocab)
         self.table_slab: Dict[str, Tuple[str, int]] = {}
@@ -587,10 +656,16 @@ class EmbeddingCollection:
         **arena_kw,
     ) -> "EmbeddingCollection":
         """Plan + build.  Without a budget this is the paper's layout (one
-        shared cache arena over all tables)."""
+        shared cache arena over all tables).  ``host_precision=`` (in
+        ``arena_kw``) selects the host-tier codec collection-wide:
+        "fp32"/"fp16"/"int8"/"auto"."""
         if planner is None and budget_bytes is None:
             return cls(tables, PlacementPlan.single_arena(tables, **arena_kw))
-        planner = planner or PlacementPlanner(budget_bytes, arena=ArenaConfig(**arena_kw))
+        planner = planner or PlacementPlanner(
+            budget_bytes,
+            arena=ArenaConfig(**arena_kw),
+            host_precision=arena_kw.get("host_precision"),
+        )
         return cls(tables, planner.plan(tables, counts=counts))
 
     # ----- init -------------------------------------------------------------
@@ -610,7 +685,14 @@ class EmbeddingCollection:
         rng: jax.Array,
         counts: Optional[Mapping[str, np.ndarray]] = None,
         warm: bool = True,
+        host_precision: Optional[str] = None,
     ) -> CollectionState:
+        """Build the collection state.  ``host_precision`` overrides every
+        cached slab's host-tier codec for this state ("fp32"/"fp16"/"int8"/
+        "auto"); "auto" asks ``PrecisionPolicy`` to pick per slab from the
+        frequency counts (fp16 when no counts are given).  The resolved
+        choice is recorded in ``self.host_precision`` so ``shard_specs`` and
+        ``device_bytes`` stay structurally consistent with the state."""
         slabs: Dict[str, Any] = {}
         keys = jax.random.split(rng, len(self.device_slabs) + len(self.cached_slabs))
         kit = iter(keys)
@@ -624,6 +706,7 @@ class EmbeddingCollection:
             weight = jax.random.uniform(
                 next(kit), (spec.vocab, spec.dim), spec.dtype, -scale, scale
             )
+            slab_counts = None
             if counts is not None:
                 slab_counts = np.concatenate(
                     [
@@ -636,8 +719,23 @@ class EmbeddingCollection:
                 idx_map = jnp.asarray(freq_lib.build_freq_stats(slab_counts).idx_map)
             else:
                 idx_map = jnp.arange(spec.vocab, dtype=jnp.int32)
+            codec = host_precision or spec.host_precision
+            if codec == "auto":
+                codec = self.precision_policy.choose(
+                    SlabGeometry(
+                        name=sname,
+                        vocab=spec.vocab,
+                        dim=spec.dim,
+                        capacity=spec.capacity,
+                        dtype_itemsize=jnp.dtype(spec.dtype).itemsize,
+                    ),
+                    counts=slab_counts,
+                )
+            else:
+                get_codec(codec)  # fail fast on typos
+            self.host_precision[sname] = codec
             slab = CachedSlab(
-                full={"weight": weight},
+                full=HostStore.create({"weight": weight}, codec=codec),
                 cache=cache_lib.init_cache(
                     spec.cache_config(), {"weight": jnp.zeros((spec.dim,), spec.dtype)}
                 ),
@@ -949,15 +1047,15 @@ class EmbeddingCollection:
         rows = slab.idx_map.at[jnp.where(valid, local_ids + off, 0)].get(
             mode="fill", fill_value=-1
         )
-        w = slab.full["weight"]
-        safe = jnp.where(valid, rows, w.shape[0])
-        return jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
+        return _read_full_rows(slab.full, jnp.where(valid, rows, -1))
 
     def dense_reference(
         self, state: CollectionState, fb: FeatureBatch
     ) -> Dict[str, jnp.ndarray]:
         """Oracle lookup reading only authoritative tiers (flush first so the
-        slow tier is current) — the bit-exactness reference for tests."""
+        slow tier is current) — the bit-exactness reference for tests (with a
+        quantized host store the slow tier is codec-roundtrip-exact: what was
+        flushed is what the oracle decodes)."""
         out = {}
         for f in fb.features:
             tname = self.feature_to_table[f]
@@ -967,42 +1065,69 @@ class EmbeddingCollection:
             if sname in self.device_slabs:
                 w = state.slabs[sname].weight
                 safe = jnp.where(flat >= 0, flat, w.shape[0])
+                rows = jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
             else:
                 slab = state.slabs[sname]
-                w = slab.full["weight"]
-                rows = slab.idx_map.at[
+                r = slab.idx_map.at[
                     jnp.where(flat >= 0, flat + off, 0)
                 ].get(mode="fill", fill_value=-1)
-                safe = jnp.where(flat >= 0, rows, w.shape[0])
-            rows = jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
-            out[f] = rows.reshape(ids.shape + (w.shape[-1],))
+                rows = _read_full_rows(slab.full, jnp.where(flat >= 0, r, -1))
+            out[f] = rows.reshape(ids.shape + (rows.shape[-1],))
         return out
 
     # ----- telemetry / accounting -------------------------------------------
 
-    def metrics(self, state: CollectionState) -> Dict[str, jnp.ndarray]:
+    def metrics(
+        self, state: CollectionState, writeback: bool = True
+    ) -> Dict[str, jnp.ndarray]:
         """Cache telemetry aggregated over cached slabs (DEVICE tables have
-        no bookkeeping, hence no misses by construction)."""
+        no bookkeeping, hence no misses by construction).  ``host_wire_bytes``
+        is the cumulative host<->device traffic estimate: demand misses
+        (loads) plus — when the caller runs the cache with writeback —
+        evictions (writebacks), each costing the slab's *encoded* row size,
+        the quantity the mixed-precision store shrinks.  Pass
+        ``writeback=False`` for read-only (serve) states, whose evicted rows
+        are dropped and never cross the link."""
         hits = misses = evictions = overflows = 0
-        for sname in self.cached_slabs:
+        # float32 accumulator: an int32 one overflows at 2 GiB of cumulative
+        # traffic (~3k steps at batch 4096) and x64 is off by default
+        wire = jnp.zeros((), jnp.float32)
+        for sname, spec in self.cached_slabs.items():
             c = state.slabs[sname].cache
             hits = hits + c.hits
             misses = misses + c.misses
             evictions = evictions + c.evictions
             overflows = overflows + c.uniq_overflows
+            full = state.slabs[sname].full
+            row_bytes = (
+                full.row_wire_bytes()
+                if isinstance(full, HostStore)
+                else spec.dim * jnp.dtype(spec.dtype).itemsize
+            )
+            moved = c.misses + c.evictions if writeback else c.misses
+            wire = wire + moved.astype(jnp.float32) * row_bytes
         tot = hits + misses
         return {
             "hit_rate": jnp.where(tot > 0, hits / jnp.maximum(tot, 1), 0.0),
             "cache_misses": jnp.asarray(misses),
             "cache_evictions": jnp.asarray(evictions),
             "uniq_overflows": jnp.asarray(overflows),
+            "host_wire_bytes": wire,
         }
+
+    def _slab_codec(self, sname: str) -> str:
+        """Resolved host codec of one cached slab ("auto" before init falls
+        back to the policy's no-stats default for accounting purposes)."""
+        name = self.host_precision[sname]
+        return self.precision_policy.no_stats if name == "auto" else name
 
     def device_bytes(self) -> Dict[str, int]:
         """Device-resident vs host-tier footprint under the plan (per-slab
-        breakdown included; the planner's budget bounds ``device_total``)."""
+        breakdown included; the planner's budget bounds ``device_total``).
+        The slow tier is accounted at its *encoded* size; ``host_bytes_saved``
+        is what the host-precision codecs shaved off the fp32 layout."""
         per_slab: Dict[str, int] = {}
-        slow = 0
+        slow = slow_fp32 = 0
         for name, t in self.device_slabs.items():
             per_slab[name] = t.full_bytes
         for sname, spec in self.cached_slabs.items():
@@ -1011,10 +1136,13 @@ class EmbeddingCollection:
             fast += spec.capacity * 4 * 3  # slot_to_row, last_used, use_count
             fast += spec.vocab * 4 * 2  # row_to_slot + idx_map
             per_slab[sname] = fast
-            slow += spec.vocab * spec.dim * item
+            codec = get_codec(self._slab_codec(sname))
+            slow += spec.vocab * codec.row_bytes((spec.dim,), spec.dtype)
+            slow_fp32 += spec.vocab * spec.dim * item
         return {
             "device_total": sum(per_slab.values()),
             "slow_tier_bytes": slow,
+            "host_bytes_saved": slow_fp32 - slow,
             "per_slab": per_slab,
             "budget_bytes": self.plan.budget_bytes,
         }
@@ -1023,23 +1151,31 @@ class EmbeddingCollection:
 
     def shard_specs(self, mode: str = "column", model_axis: str = "model"):
         """PartitionSpec pytree matching ``CollectionState`` (see
-        ``cached_embedding.shard_specs`` for the mode semantics)."""
+        ``cached_embedding.shard_specs`` for the mode semantics).  The slow
+        tier's specs mirror the slab's resolved ``HostStore`` layout — with
+        an "auto" precision, call after ``init`` so the resolved codec (and
+        hence the sideband structure) matches the state."""
         from jax.sharding import PartitionSpec as P
 
         if mode == "column":
             full_w = cached_w = dev_w = P(None, model_axis)
+            side_w = P(None, None)  # per-row sideband cannot split the dim
         elif mode == "row":
             full_w, cached_w = P(model_axis, None), P(None, None)
             dev_w = P(model_axis, None)
+            side_w = P(model_axis, None)  # sideband rows travel with the table
         else:
-            full_w = cached_w = dev_w = P(None, None)
+            full_w = cached_w = dev_w = side_w = P(None, None)
 
         slabs: Dict[str, Any] = {}
         for name in self.device_slabs:
             slabs[name] = DeviceSlab(weight=dev_w)
-        for sname in self.cached_slabs:
+        for sname, spec in self.cached_slabs.items():
+            like = {"weight": jax.ShapeDtypeStruct((spec.vocab, spec.dim), spec.dtype)}
             slabs[sname] = CachedSlab(
-                full={"weight": full_w},
+                full=HostStore.spec_like(
+                    like, {"weight": full_w}, side_w, codec=self._slab_codec(sname)
+                ),
                 cache=cache_lib.CacheState(
                     cached_rows={"weight": cached_w},
                     slot_to_row=P(None),

@@ -12,7 +12,7 @@ the resulting arrays are placed on device and consumed by ``core.cache``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -68,13 +68,20 @@ def collect_counts_sampled(
     vocab: int,
     sample_rate: float,
     seed: int = 0,
+    rng: Optional[np.random.Generator] = None,
 ) -> np.ndarray:
     """Sampled counting for very large datasets (paper cites [Adnan et al. 2021]).
 
     Keeps each batch with probability ``sample_rate``; unbiased up to scaling,
     and ranking (all the cache needs) is preserved in expectation.
+
+    Pass an explicit ``rng`` (or a ``seed``) to make the sample — and with it
+    every downstream consumer of the counts, like the ``auto``
+    host-precision policy's coverage estimate — deterministic across hosts
+    and reruns (every data rank must derive identical placement/precision).
     """
-    rng = np.random.default_rng(seed)
+    if rng is None:
+        rng = np.random.default_rng(seed)
     counts = np.zeros((vocab,), dtype=np.int64)
     for ids in id_batches:
         if rng.random() <= sample_rate:

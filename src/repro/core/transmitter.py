@@ -16,6 +16,14 @@ boundary.
 
 Rows are pytrees: every leaf has a leading "row" dimension; auxiliary per-row
 state (e.g. row-wise Adagrad accumulators) moves together with the weights.
+
+Codec-aware movement: either side of ``move_rows`` may be a
+:class:`repro.store.HostStore` (the mixed-precision host tier).  The pack
+stage then gathers the *encoded* payload + sideband into the staging block —
+that is what crosses the slow link, so an int8 store moves ~4x fewer bytes
+per round — and the decode (load) / encode (writeback) runs on the block at
+the device end of the link.  With the fp32 codec the store is raw arrays and
+the path is bit-identical to the plain-pytree one.
 """
 from __future__ import annotations
 
@@ -23,6 +31,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.store.host_store import HostStore
 
 __all__ = ["move_rows", "gather_rows", "scatter_rows", "num_rounds"]
 
@@ -57,6 +67,29 @@ def scatter_rows(tree: Any, idx: jnp.ndarray, block: Any, active: jnp.ndarray) -
     return jax.tree_util.tree_map(s, tree, block)
 
 
+def _gather_store_rows(store: HostStore, idx: jnp.ndarray) -> Any:
+    """Pack from a host store: the staging block is the ENCODED payload +
+    sideband (this is what crosses the link), decoded only on arrival."""
+    block = gather_rows(store.data, idx)
+    side = gather_rows(store.sideband, idx)
+    return store.decode_block(block, side)
+
+
+def _scatter_store_rows(
+    store: HostStore, idx: jnp.ndarray, block: Any, active: jnp.ndarray
+) -> HostStore:
+    """Unpack into a host store: quantize-on-writeback — the block is encoded
+    on the device side, then payload + sideband cross the link and scatter."""
+    data_blk, side_blk = store.encode_block(block)
+    data = scatter_rows(store.data, idx, data_blk, active)
+    sideband = (  # sideband-free codecs (fp32/fp16) carry an empty dict
+        scatter_rows(store.sideband, idx, side_blk, active) if store.sideband else store.sideband
+    )
+    return HostStore(
+        data=data, sideband=sideband, codec=store.codec, out_dtype=store.out_dtype
+    )
+
+
 def move_rows(
     src_tree: Any,
     dst_tree: Any,
@@ -72,6 +105,10 @@ def move_rows(
     performed in ``ceil(K/buffer_rows)`` rounds through a [buffer_rows, ...]
     staging block.  Returns the updated ``dst_tree``.  Designed to be called
     from inside a jitted step (it is pure; no own jit so the caller fuses it).
+
+    Either side may be a ``HostStore``: loads gather the encoded staging
+    block and decode it at the device end; writebacks encode the block
+    before it crosses, then scatter payload + sideband into the store.
     """
     k = src_idx.shape[0]
     buffer_rows = min(buffer_rows, k)
@@ -87,7 +124,13 @@ def move_rows(
         si = jax.lax.dynamic_slice_in_dim(src_idx, s, buffer_rows)
         di = jax.lax.dynamic_slice_in_dim(dst_idx, s, buffer_rows)
         ac = jax.lax.dynamic_slice_in_dim(active, s, buffer_rows)
-        block = gather_rows(src_tree, jnp.where(ac, si, -1))  # pack (staging buffer)
+        si = jnp.where(ac, si, -1)
+        if isinstance(src_tree, HostStore):  # pack + decode-on-load
+            block = _gather_store_rows(src_tree, si)
+        else:
+            block = gather_rows(src_tree, si)  # pack (staging buffer)
+        if isinstance(dst, HostStore):  # encode-on-writeback + unpack
+            return _scatter_store_rows(dst, di, block, ac)
         return scatter_rows(dst, di, block, ac)  # move + unpack
 
     if rounds == 1:

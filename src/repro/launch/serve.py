@@ -55,7 +55,10 @@ def main():
         mk = lambda s: synth.sparse_batch(spec, args.batch, 1, s)
 
     state = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model.serve_step, state, batch_size=args.batch, pad_example=pad)
+    engine = ServeEngine(
+        model.serve_step, state, batch_size=args.batch, pad_example=pad,
+        state_stats_fn=lambda s: model.collection.metrics(s["emb"], writeback=False),
+    )
     n = 0
     step = 0
     while n < args.requests:
@@ -63,8 +66,10 @@ def main():
         engine.score(b)
         n += args.batch
         step += 1
-    print("stats:", engine.stats.summary())
-    print(f"cache hit rate: {float(engine.state['emb'].cache.hit_rate()):.1%}")
+    summary = engine.summary()
+    print("stats:", summary)
+    print(f"cache hit rate: {summary['hit_rate']:.1%} | "
+          f"host<->device traffic: {summary['host_wire_bytes']/1e6:.2f} MB")
 
 
 if __name__ == "__main__":

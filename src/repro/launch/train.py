@@ -17,20 +17,22 @@ from repro.data import graphs, synth
 from repro.train.trainer import PipelinedTrainer, Trainer, TrainerConfig
 
 
-def _recsys_runner(arch: str, batch: int):
+def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32"):
     if arch.startswith("dlrm"):
         from repro.models.dlrm import DLRM, DLRMConfig
 
         cfg = DLRMConfig(vocab_sizes=(100_000, 50_000, 20_000), embed_dim=32,
                          batch_size=batch, cache_ratio=0.02, lr=0.3,
-                         bottom_mlp=(64, 32), top_mlp=(64,))
+                         bottom_mlp=(64, 32), top_mlp=(64,),
+                         host_precision=host_precision)
         model = DLRM(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
     elif arch == "fm":
         from repro.models.recsys_models import FMConfig, FMModel
 
-        cfg = FMConfig(vocab_sizes=(100_000,) * 6, embed_dim=10, batch_size=batch, cache_ratio=0.02)
+        cfg = FMConfig(vocab_sizes=(100_000,) * 6, embed_dim=10, batch_size=batch,
+                       cache_ratio=0.02, host_precision=host_precision)
         model = FMModel(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
@@ -40,13 +42,15 @@ def _recsys_runner(arch: str, batch: int):
 
         if arch == "mind":
             cfg = MINDConfig(n_items=200_000, n_users=20_000, embed_dim=32,
-                             seq_len=50, batch_size=batch, cache_ratio=0.05)
+                             seq_len=50, batch_size=batch, cache_ratio=0.05,
+                             host_precision=host_precision)
             model = MINDModel(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
                 cfg.n_items, cfg.n_users, cfg.seq_len, batch, 0, s).items()}
         else:
             kw = dict(n_items=200_000, n_cates=20_000, n_users=20_000, embed_dim=18,
-                      seq_len=50, batch_size=batch, cache_ratio=0.05)
+                      seq_len=50, batch_size=batch, cache_ratio=0.05,
+                      host_precision=host_precision)
             cfg = DINConfig(**kw) if arch == "din" else DIENConfig(gru_dim=36, **kw)
             model = (DINModel if arch == "din" else DIENModel)(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
@@ -66,6 +70,12 @@ def main():
     ap.add_argument("--pipeline-depth", type=int, default=0,
                     help="0 = serial; k >= 1 = pipelined groups of k steps per "
                          "merged cache plan (collection-backed archs only)")
+    ap.add_argument("--host-precision", default="fp32",
+                    choices=["fp32", "fp16", "int8", "auto"],
+                    help="host-tier embedding storage codec: fp32 = bit-exact "
+                         "pre-store behavior; fp16/int8 shrink host bytes and "
+                         "host<->device traffic; auto = PrecisionPolicy from "
+                         "frequency stats (recsys archs only)")
     args = ap.parse_args()
 
     if args.arch == "gatedgcn":
@@ -89,7 +99,7 @@ def main():
             mod.SMOKE.vocab, 8, 64, 0, s).items()}
         flush = None
     else:
-        model, make, flush = _recsys_runner(args.arch, args.batch)
+        model, make, flush = _recsys_runner(args.arch, args.batch, args.host_precision)
 
     tc = TrainerConfig(max_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=25,
                        pipeline_depth=args.pipeline_depth)
@@ -117,6 +127,12 @@ def main():
     print(f"\narch={args.arch} steps={len(h)} loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
     if "hit_rate" in h[-1]:
         print(f"cache hit rate: {h[-1]['hit_rate']:.1%}")
+    if hasattr(model, "collection"):
+        db = model.collection.device_bytes()
+        print(f"host tier ({args.host_precision}): {db['slow_tier_bytes']/1e6:.1f} MB "
+              f"(saved {db['host_bytes_saved']/1e6:.1f} MB vs fp32)")
+        if "host_wire_bytes" in h[-1]:
+            print(f"host<->device traffic: {h[-1]['host_wire_bytes']/1e6:.1f} MB total")
 
 
 if __name__ == "__main__":

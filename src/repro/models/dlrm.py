@@ -10,6 +10,8 @@ into one shared cache arena — the paper's original one-big-table layout, so
 training curves are invariant to the cache ratio (tested parity property).
 With a budget, ``PlacementPlanner`` promotes small/hot tables to DEVICE and
 leaves the rest cached — the mixed-placement production layout.
+``host_precision`` selects the host-tier storage codec of the cached slabs
+(fp32 bit-exact / fp16 / row-wise int8 / auto) — see ``repro.store``.
 """
 from __future__ import annotations
 
@@ -45,6 +47,10 @@ class DLRMConfig:
     dtypes: Dtypes = Dtypes(param=jnp.float32, compute=jnp.float32)
     use_pallas: bool = False
     device_budget_bytes: Optional[int] = None  # None = paper single-arena mode
+    # host-tier storage codec: "fp32" (bit-exact, default) | "fp16" | "int8"
+    # (row-wise scale/zero-point) | "auto" (PrecisionPolicy picks per slab
+    # from the frequency counts passed to init)
+    host_precision: str = "fp32"
 
     @property
     def n_sparse(self) -> int:
@@ -85,6 +91,7 @@ class DLRM(common.CollectionModelMixin):
             policy=policy,
             buffer_rows=cfg.buffer_rows,
             max_unique_per_step=cfg.max_unique_per_step,
+            host_precision=cfg.host_precision,
         )
 
     # ----- params ----------------------------------------------------------

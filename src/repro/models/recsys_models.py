@@ -60,6 +60,7 @@ class FMConfig:
     emb_dtype: Any = jnp.float32
     protect_via_inverse: bool = True
     buffer_rows: int = 65536
+    host_precision: str = "fp32"  # host-tier codec (see repro.store)
 
 
 class FMModel(common.CollectionModelMixin):
@@ -83,6 +84,7 @@ class FMModel(common.CollectionModelMixin):
             max_unique_per_step=cfg.max_unique_per_step,
             protect_via_inverse=cfg.protect_via_inverse,
             buffer_rows=cfg.buffer_rows,
+            host_precision=cfg.host_precision,
         )
 
     def init(self, rng, counts: Optional[np.ndarray] = None):
@@ -175,6 +177,7 @@ class DINConfig:
     max_unique_per_step: int = 0
     lr: float = 0.05
     dtypes: Dtypes = F32
+    host_precision: str = "fp32"  # host-tier codec (see repro.store)
 
 
 class DINModel(common.CollectionModelMixin):
@@ -194,6 +197,7 @@ class DINModel(common.CollectionModelMixin):
             tables,
             cache_ratio=cfg.cache_ratio,
             max_unique_per_step=cfg.max_unique_per_step,
+            host_precision=cfg.host_precision,
         )
 
     @property
@@ -410,6 +414,7 @@ class MINDConfig:
     label_pow: float = 2.0  # label-aware attention sharpness
     lr: float = 0.05
     dtypes: Dtypes = F32
+    host_precision: str = "fp32"  # host-tier codec (see repro.store)
 
 
 class MINDModel(common.CollectionModelMixin):
@@ -427,6 +432,7 @@ class MINDModel(common.CollectionModelMixin):
             tables,
             cache_ratio=cfg.cache_ratio,
             max_unique_per_step=cfg.max_unique_per_step,
+            host_precision=cfg.host_precision,
         )
 
     @property

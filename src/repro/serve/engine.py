@@ -1,7 +1,10 @@
 """Batched serving engine: request micro-batching over a jitted score fn.
 
 The cache tier runs with ``writeback=False`` (read-only rows); misses still
-fault rows in, so a cold engine warms itself from traffic.  Requests are
+fault rows in, so a cold engine warms itself from traffic.  With a
+mixed-precision host store the faulted rows are dequantized on load — the
+cached working set serves at full precision while the host-resident long
+tail costs fp16/int8 bytes (and crosses the link encoded).  Requests are
 padded to the compiled batch size (recsys serve shapes are fixed) and
 latency/hit-rate stats are tracked per batch.
 """
@@ -67,12 +70,25 @@ class ServeEngine:
         state: Any,
         batch_size: int,
         pad_example: Dict[str, np.ndarray],  # one padding row per field
+        state_stats_fn: Optional[Callable[[Any], Dict[str, Any]]] = None,
+        # ^ optional embedding-tier telemetry read from the live state (e.g.
+        #   ``lambda s: collection.metrics(s["emb"])`` — hit rate, host wire
+        #   bytes of the mixed-precision store); merged into ``summary()``.
     ):
         self.score_fn = jax.jit(score_fn)
         self.state = state
         self.batch_size = batch_size
         self.pad_example = pad_example
+        self.state_stats_fn = state_stats_fn
         self.stats = ServeStats()
+
+    def summary(self) -> Dict[str, float]:
+        """Latency stats plus (when wired) embedding-tier telemetry."""
+        out = dict(self.stats.summary())
+        if self.state_stats_fn is not None:
+            for k, v in self.state_stats_fn(self.state).items():
+                out[k] = float(jax.device_get(v))
+        return out
 
     def _pad(self, batch: Dict[str, np.ndarray], n: int) -> Dict[str, jnp.ndarray]:
         out = {}

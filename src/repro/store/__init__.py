@@ -1,0 +1,22 @@
+"""Mixed-precision host-tier embedding storage (the tier under the cache).
+
+``HostStore`` holds the full (host-resident) table encoded by a ``Codec``
+(fp32 passthrough / fp16 / row-wise int8); ``PrecisionPolicy`` picks a codec
+per table from frequency statistics and a host-byte budget.  The transmitter
+is codec-aware, so staging blocks cross the host<->device link encoded.
+"""
+from repro.store.codec import CODECS, Codec, Fp16Codec, Fp32Codec, Int8Codec, get_codec
+from repro.store.host_store import HostStore
+from repro.store.policy import PrecisionPolicy, SlabGeometry
+
+__all__ = [
+    "CODECS",
+    "Codec",
+    "Fp32Codec",
+    "Fp16Codec",
+    "Int8Codec",
+    "get_codec",
+    "HostStore",
+    "PrecisionPolicy",
+    "SlabGeometry",
+]

@@ -1,0 +1,154 @@
+"""Row codecs for the host-tier embedding store (mixed-precision host memory).
+
+The cache's premise is that the device holds ~1.5 % of the table while the
+host holds everything — so host capacity and host<->device bandwidth are both
+set by the *host-side* representation.  "Mixed-Precision Embedding Using a
+Cache" (arXiv 2010.11305) shows the cold, host-resident majority of rows
+tolerates low precision as long as the hot cached working set stays full
+precision.  A ``Codec`` is that storage transform, applied per row block:
+
+  * ``fp32`` — bit-exact passthrough (the pre-store behavior; zero risk).
+  * ``fp16`` — 2x: cast on encode, upcast on decode.  Round-trip through the
+    projection is idempotent (fp16 values are exactly representable in fp32).
+  * ``int8`` — ~4x: row-wise affine quantization with a per-row
+    (scale, zero_point) fp32 sideband — the row-wise version of the
+    per-tensor scheme in ``optim/compression.py``.  The encode convention
+    maps each row's min/max exactly onto q = -127/+127, so a
+    decode -> encode round trip of an untouched row reproduces the same
+    int8 payload (the projection is stable; tested property).
+
+Codecs are pure jnp functions usable inside jit; ``encode``/``decode``
+operate on row blocks (leading row dim), so the transmitter can encode or
+decode its staging buffer per round — the block that crosses the host link
+is the *encoded* one, which is the bandwidth win.
+
+A leaf is only quantized when ``encodes(leaf)`` holds: floating dtype and a
+per-row vector (ndim >= 2).  Per-row *scalar* leaves (e.g. row-wise Adagrad
+accumulators, shape [vocab]) stay raw — a per-row sideband would cost more
+than the scalar it compresses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Codec", "Fp32Codec", "Fp16Codec", "Int8Codec", "get_codec", "CODECS"]
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Base codec: bit-exact passthrough (the ``fp32`` codec)."""
+
+    name: str = "fp32"
+
+    # -- which leaves this codec transforms ---------------------------------
+    def encodes(self, leaf) -> bool:
+        """Only per-row float vectors are re-coded; everything else is raw."""
+        return jnp.issubdtype(leaf.dtype, jnp.floating) and len(leaf.shape) >= 2
+
+    # -- block transforms (leading dim = rows) ------------------------------
+    def encode(self, rows: jnp.ndarray) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """[n, ...] float rows -> (payload, sideband or None)."""
+        return rows, None
+
+    def decode(
+        self, payload: jnp.ndarray, sideband: Optional[jnp.ndarray], out_dtype
+    ) -> jnp.ndarray:
+        return payload
+
+    # -- static accounting ---------------------------------------------------
+    def payload_dtype(self, orig_dtype):
+        return orig_dtype
+
+    def sideband_row_shape(self) -> Optional[Tuple[int, ...]]:
+        """Per-row sideband shape, or None when the codec needs none."""
+        return None
+
+    def row_bytes(self, row_shape: Tuple[int, ...], orig_dtype) -> int:
+        """Encoded bytes per row (payload + sideband) — what crosses the link."""
+        n = int(np.prod(row_shape)) if row_shape else 1
+        b = n * jnp.dtype(self.payload_dtype(orig_dtype)).itemsize
+        side = self.sideband_row_shape()
+        if side is not None:
+            b += int(np.prod(side, dtype=np.int64)) * 4  # sideband is fp32
+        return b
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp32Codec(Codec):
+    name: str = "fp32"
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp16Codec(Codec):
+    name: str = "fp16"
+
+    def encode(self, rows: jnp.ndarray) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        return rows.astype(jnp.float16), None
+
+    def decode(self, payload, sideband, out_dtype) -> jnp.ndarray:
+        return payload.astype(out_dtype)
+
+    def payload_dtype(self, orig_dtype):
+        return jnp.float16
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec(Codec):
+    """Row-wise affine int8: q = round((x - zp) / scale) in [-127, 127].
+
+    Sideband is [n, 2] fp32 = (scale, zero_point) per row, with
+    ``scale = (max - min) / 254`` and ``zp = (max + min) / 2`` so the row
+    endpoints land exactly on q = +-127.  A decoded row's endpoints are
+    therefore re-encoded to the identical grid, making evict -> reload of an
+    untouched row payload-stable (no quantization drift across cycles).
+    """
+
+    name: str = "int8"
+
+    def encode(self, rows: jnp.ndarray) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        x = rows.astype(jnp.float32)
+        red = tuple(range(1, x.ndim))
+        mn = jnp.min(x, axis=red)
+        mx = jnp.max(x, axis=red)
+        scale = jnp.maximum(mx - mn, _EPS) / 254.0
+        zp = 0.5 * (mx + mn)
+        bshape = (-1,) + (1,) * (x.ndim - 1)
+        q = jnp.clip(
+            jnp.round((x - zp.reshape(bshape)) / scale.reshape(bshape)), -127, 127
+        ).astype(jnp.int8)
+        return q, jnp.stack([scale, zp], axis=-1)
+
+    def decode(self, payload, sideband, out_dtype) -> jnp.ndarray:
+        # sideband is [...batch, 2]; payload may carry extra trailing row dims
+        # (e.g. a [B, F, dim] oracle gather) — broadcast scale/zp over them.
+        extra = payload.ndim - (sideband.ndim - 1)
+        bshape = sideband.shape[:-1] + (1,) * extra
+        scale = sideband[..., 0].reshape(bshape)
+        zp = sideband[..., 1].reshape(bshape)
+        return (payload.astype(jnp.float32) * scale + zp).astype(out_dtype)
+
+    def payload_dtype(self, orig_dtype):
+        return jnp.int8
+
+    def sideband_row_shape(self) -> Optional[Tuple[int, ...]]:
+        return (2,)
+
+
+CODECS: Dict[str, Codec] = {
+    "fp32": Fp32Codec(),
+    "fp16": Fp16Codec(),
+    "int8": Int8Codec(),
+}
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown host-store codec {name!r}; known: {sorted(CODECS)}") from None

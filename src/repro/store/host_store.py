@@ -1,0 +1,246 @@
+"""``HostStore`` — the host-tier (slow, full-table) representation.
+
+A ``HostStore`` replaces the raw fp32 ``full_rows`` pytree under the cache:
+it holds each leaf *encoded* by one :mod:`repro.store.codec` codec (payload
+dict + per-row sideband dict) and exposes row-block ``encode_rows`` /
+``decode_rows`` so the transmitter can quantize-on-writeback and
+dequantize-on-load inside its pack -> move -> scatter rounds.  The staging
+block crosses the host<->device link *encoded* — for int8 that is ~4x fewer
+bytes per cache miss — while the cached working set stays full precision
+(the mixed-precision-cache design of arXiv 2010.11305).
+
+``data`` must be a flat ``Dict[str, jnp.ndarray]`` (the shape every slab's
+``full`` tree already has: ``{"weight": [vocab, dim], ("accum": [vocab])?}``).
+Leaves the codec does not transform (per-row scalars like optimizer
+accumulators, integer leaves) are stored raw and pass through untouched.
+
+The fp32 codec stores raw arrays, so a ``HostStore("fp32")`` is bit-identical
+to the pre-store pytree in every operation — existing callers migrate with
+zero numeric risk.  ``store[key]`` / ``store[key] = v`` index straight into
+``data`` (for fp32 that is the old raw-leaf access; quantized readers must
+use ``decode_rows`` / ``decode_leaf``).
+
+The codec name rides on the pytree as static metadata, so jit specializes
+per codec and checkpoint restore can validate it (leaf dtype/shape mismatch
+= codec mismatch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.store.codec import Codec, get_codec
+
+__all__ = ["HostStore"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HostStore:
+    """Encoded full-table container: ``data`` payload leaves [vocab, ...] in
+    the codec's storage dtype, ``sideband`` per-row codec metadata (e.g.
+    int8's [vocab, 2] (scale, zero_point)), empty for sideband-free codecs."""
+
+    data: Dict[str, jnp.ndarray]
+    sideband: Dict[str, jnp.ndarray]
+    codec: str = dataclasses.field(default="fp32", metadata=dict(static=True))
+    out_dtype: str = dataclasses.field(default="float32", metadata=dict(static=True))
+
+    # ----- construction -----------------------------------------------------
+
+    @staticmethod
+    def _out_dtype(codec: "Codec", full_tree: Dict[str, Any]) -> str:
+        """The single decode-target dtype of the tree's encoded leaves.
+
+        One store decodes to ONE dtype, so all codec-eligible leaves must
+        share their source dtype — reject mixed trees instead of silently
+        decoding the minority leaf to the wrong type."""
+        dts = {str(jnp.dtype(v.dtype)) for v in full_tree.values() if codec.encodes(v)}
+        if len(dts) > 1:
+            raise ValueError(
+                f"HostStore encodes all leaves to one decode dtype, but the "
+                f"tree mixes {sorted(dts)} — split the table into one store "
+                f"per dtype"
+            )
+        return dts.pop() if dts else "float32"
+
+    @classmethod
+    def create(cls, full_tree: Dict[str, jnp.ndarray], codec: str = "fp32") -> "HostStore":
+        """Encode a raw full-table dict into a store (one codec per store)."""
+        c = get_codec(codec)
+        data: Dict[str, jnp.ndarray] = {}
+        sideband: Dict[str, jnp.ndarray] = {}
+        out_dtype = cls._out_dtype(c, full_tree)
+        for k, leaf in full_tree.items():
+            if c.encodes(leaf):
+                payload, side = c.encode(leaf)
+                data[k] = payload
+                if side is not None:
+                    sideband[k] = side
+            else:
+                data[k] = leaf
+        return cls(data=data, sideband=sideband, codec=codec, out_dtype=out_dtype)
+
+    @classmethod
+    def like(cls, full_like: Dict[str, Any], codec: str = "fp32") -> "HostStore":
+        """Structure-only store from shape/dtype examples (specs, eval_shape)."""
+        c = get_codec(codec)
+        data: Dict[str, Any] = {}
+        sideband: Dict[str, Any] = {}
+        out_dtype = cls._out_dtype(c, full_like)
+        for k, leaf in full_like.items():
+            if c.encodes(leaf):
+                data[k] = jax.ShapeDtypeStruct(leaf.shape, c.payload_dtype(leaf.dtype))
+                srow = c.sideband_row_shape()
+                if srow is not None:
+                    sideband[k] = jax.ShapeDtypeStruct((leaf.shape[0],) + srow, jnp.float32)
+            else:
+                data[k] = jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+        return cls(data=data, sideband=sideband, codec=codec, out_dtype=out_dtype)
+
+    @classmethod
+    def spec_like(
+        cls,
+        full_like: Dict[str, Any],
+        leaf_specs: Dict[str, Any],
+        side_spec: Any,
+        codec: str = "fp32",
+    ) -> "HostStore":
+        """PartitionSpec mirror of ``create(full_like, codec)``: a store whose
+        ``data`` holds ``leaf_specs`` and whose sideband entries (``side_spec``
+        per quantized leaf) appear exactly where ``create`` would put arrays —
+        the single source of truth for shard-spec trees that must match a
+        real store's structure."""
+        c = get_codec(codec)
+        out_dtype = cls._out_dtype(c, full_like)
+        sideband = {
+            k: side_spec
+            for k, leaf in full_like.items()
+            if c.encodes(leaf) and c.sideband_row_shape() is not None
+        }
+        return cls(
+            data=dict(leaf_specs), sideband=sideband, codec=c.name, out_dtype=out_dtype
+        )
+
+    # ----- raw-leaf access (fp32 compatibility surface) ---------------------
+
+    def __getitem__(self, key: str) -> jnp.ndarray:
+        """The stored payload leaf — for fp32 stores this is the raw array
+        (the pre-store access idiom); quantized readers want ``decode_leaf``."""
+        return self.data[key]
+
+    def __setitem__(self, key: str, value) -> None:
+        self.data[key] = value
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.data
+
+    # ----- codec plumbing ---------------------------------------------------
+
+    @property
+    def _codec(self) -> Codec:
+        return get_codec(self.codec)
+
+    @property
+    def _out(self):
+        return jnp.dtype(self.out_dtype)
+
+    def is_encoded(self, key: str) -> bool:
+        """True when ``data[key]`` is stored in the codec's low-precision
+        form (self-describing: payload dtype differs from the decode target,
+        or a sideband entry exists)."""
+        if self.codec == "fp32":
+            return False
+        if key in self.sideband:
+            return True
+        return jnp.dtype(self.data[key].dtype) != self._out and jnp.issubdtype(
+            self._out, jnp.floating
+        )
+
+    # ----- block transforms (what the transmitter calls per round) ----------
+
+    def decode_block(
+        self, block: Dict[str, jnp.ndarray], side: Dict[str, jnp.ndarray]
+    ) -> Dict[str, jnp.ndarray]:
+        """Decode a gathered staging block back to full precision."""
+        c = self._codec
+        return {
+            k: c.decode(v, side.get(k), self._out) if self.is_encoded(k) else v
+            for k, v in block.items()
+        }
+
+    def encode_block(
+        self, block: Dict[str, jnp.ndarray]
+    ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
+        """Encode a full-precision staging block for the trip to host."""
+        c = self._codec
+        data: Dict[str, jnp.ndarray] = {}
+        side: Dict[str, jnp.ndarray] = {}
+        for k, v in block.items():
+            if self.is_encoded(k):
+                payload, s = c.encode(v)
+                data[k] = payload
+                if s is not None:
+                    side[k] = s
+            else:
+                data[k] = v
+        return data, side
+
+    # ----- row reads (oracles / bulk scans) ---------------------------------
+
+    def decode_rows(self, idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Gather rows ``idx`` of every leaf, decoded; negative/OOB lanes
+        give zero rows (the ``transmitter.gather_rows`` convention)."""
+        block: Dict[str, jnp.ndarray] = {}
+        side: Dict[str, jnp.ndarray] = {}
+        for k, leaf in self.data.items():
+            safe = jnp.where(idx >= 0, idx, leaf.shape[0])
+            block[k] = jnp.take(leaf, safe, axis=0, mode="fill", fill_value=0)
+            if k in self.sideband:
+                side[k] = jnp.take(
+                    self.sideband[k], safe, axis=0, mode="fill", fill_value=0
+                )
+        return self.decode_block(block, side)
+
+    def decode_leaf(self, key: str) -> jnp.ndarray:
+        """The whole leaf, decoded (oracle/bulk use; fp32 = zero-cost)."""
+        if not self.is_encoded(key):
+            return self.data[key]
+        return self._codec.decode(self.data[key], self.sideband.get(key), self._out)
+
+    # ----- accounting -------------------------------------------------------
+
+    def row_wire_bytes(self) -> int:
+        """Encoded bytes per row across all leaves — what one transmitter
+        lane moves over the host link (load or writeback)."""
+        total = 0
+        for k, leaf in self.data.items():
+            if self.is_encoded(k):
+                total += self._codec.row_bytes(tuple(leaf.shape[1:]), self._out)
+            else:
+                total += int(
+                    np.prod(leaf.shape[1:], dtype=np.int64)
+                ) * jnp.dtype(leaf.dtype).itemsize
+        return total
+
+    def host_bytes(self) -> int:
+        """Total host-tier footprint (payload + sideband)."""
+        n = 0
+        for leaf in list(self.data.values()) + list(self.sideband.values()):
+            n += int(np.prod(leaf.shape, dtype=np.int64)) * jnp.dtype(leaf.dtype).itemsize
+        return n
+
+    def fp32_equiv_bytes(self) -> int:
+        """What the same table would cost stored raw (the pre-store layout)."""
+        n = 0
+        for k, leaf in self.data.items():
+            item = jnp.dtype(self._out if self.is_encoded(k) else leaf.dtype).itemsize
+            n += int(np.prod(leaf.shape, dtype=np.int64)) * item
+        return n
+
+    def bytes_saved(self) -> int:
+        return self.fp32_equiv_bytes() - self.host_bytes()

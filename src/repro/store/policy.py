@@ -1,0 +1,126 @@
+"""``PrecisionPolicy`` — frequency-driven host-precision assignment.
+
+Which codec a table's host tier can afford is a statistical question, and it
+is the same statistic the cache already computes (``core/freq.py``): when the
+cache's capacity fraction covers most accesses, the host copy is effectively
+*cold storage* — decoded rows are rare, quantization noise rarely enters the
+training path, and aggressive int8 is safe.  When coverage is poor, the host
+tier is on the hot path and deserves fp16 or fp32.  ML-guided tiering for
+DLRM inference (arXiv 2511.08568) motivates exactly this frequency-driven
+tier/precision assignment.
+
+The policy is deterministic: coverage thresholds pick a codec per slab, and
+an optional host-byte budget demotes the coldest slabs first (fp32 -> fp16
+-> int8) until the encoded total fits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.store.codec import get_codec
+
+__all__ = ["SlabGeometry", "PrecisionPolicy"]
+
+_LADDER = ("fp32", "fp16", "int8")  # demotion order under a host budget
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabGeometry:
+    """The static facts the policy needs about one slab's host tier."""
+
+    name: str
+    vocab: int
+    dim: int
+    capacity: int  # cached rows (the fast tier)
+    dtype_itemsize: int = 4
+
+
+def _host_bytes(g: SlabGeometry, codec_name: str) -> int:
+    import jax.numpy as jnp
+
+    c = get_codec(codec_name)
+    dt = {4: jnp.float32, 2: jnp.float16}.get(g.dtype_itemsize, jnp.float32)
+    return g.vocab * c.row_bytes((g.dim,), dt)
+
+
+def _coverage(counts: Optional[np.ndarray], capacity: int) -> Optional[float]:
+    """Access share of the ``capacity`` hottest ids (paper Fig. 2 statistic)."""
+    if counts is None:
+        return None
+    counts = np.asarray(counts, dtype=np.float64)
+    tot = counts.sum()
+    if tot <= 0:
+        return None
+    top = np.sort(counts)[::-1][: max(int(capacity), 1)]
+    return float(top.sum() / tot)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Pick a host codec per slab from cache coverage + a host-byte budget.
+
+    ``choose`` (one slab) applies the coverage thresholds; ``assign`` (a
+    collection) additionally enforces ``host_budget_bytes`` by demoting the
+    coldest slabs one precision step at a time.  Without counts the policy
+    falls back to ``no_stats`` (fp16 by default: 2x savings, ~1e-3 relative
+    error — safe for cold rows without any evidence of skew).
+    """
+
+    int8_coverage: float = 0.75  # cache absorbs >= 75 % of accesses -> int8
+    fp16_coverage: float = 0.40
+    no_stats: str = "fp16"
+    host_budget_bytes: Optional[int] = None
+
+    def choose(self, geom: SlabGeometry, counts: Optional[np.ndarray] = None) -> str:
+        cov = _coverage(counts, geom.capacity)
+        if cov is None:
+            return self.no_stats
+        if cov >= self.int8_coverage:
+            return "int8"
+        if cov >= self.fp16_coverage:
+            return "fp16"
+        return "fp32"
+
+    def assign(
+        self,
+        slabs: Sequence[SlabGeometry],
+        counts: Optional[Mapping[str, np.ndarray]] = None,
+        host_budget_bytes: Optional[int] = None,
+    ) -> Dict[str, str]:
+        """Codec per slab; deterministic, budget-aware.
+
+        Demotion order under a budget: HIGHEST cache coverage first (the
+        cache absorbs those slabs' accesses, so their host tier is the
+        coldest storage and quantizes most safely — the same rationale as
+        ``choose``'s thresholds), unknown-coverage slabs last, ties broken by
+        name so every host derives the identical assignment; one rung of
+        ``fp32 -> fp16 -> int8`` at a time.
+        """
+        budget = host_budget_bytes or self.host_budget_bytes
+        out: Dict[str, Tuple[str, float]] = {}
+        for g in slabs:
+            c = counts.get(g.name) if counts else None
+            cov = _coverage(c, g.capacity)
+            out[g.name] = (self.choose(g, c), -1.0 if cov is None else cov)
+        if budget is not None:
+            geoms = {g.name: g for g in slabs}
+            # best-covered (coldest host tier) slabs demote first; the -1.0
+            # unknown-coverage sentinel sorts last (treated as hot)
+            order = sorted(out, key=lambda n: (-out[n][1], n))
+            while sum(_host_bytes(geoms[n], out[n][0]) for n in out) > budget:
+                for n in order:
+                    codec = out[n][0]
+                    i = _LADDER.index(codec)
+                    if i + 1 < len(_LADDER):
+                        out[n] = (_LADDER[i + 1], out[n][1])
+                        break
+                else:  # everything already int8; budget is infeasible
+                    need = sum(_host_bytes(geoms[n], out[n][0]) for n in out)
+                    raise ValueError(
+                        f"host budget {budget} B cannot hold the table set even "
+                        f"at int8 (needs >= {need} B)"
+                    )
+        return {n: c for n, (c, _) in out.items()}

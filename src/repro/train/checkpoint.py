@@ -100,11 +100,26 @@ def latest_step(directory: str | os.PathLike) -> Optional[int]:
     return best
 
 
+def _leaf_meta(like: Any) -> Tuple[Tuple[int, ...], Optional[np.dtype]]:
+    """(shape, dtype) of a template leaf; dtype None when undeterminable."""
+    shape = tuple(getattr(like, "shape", np.shape(like)))
+    dt = getattr(like, "dtype", None)
+    try:
+        return shape, np.dtype(dt) if dt is not None else np.asarray(like).dtype
+    except TypeError:
+        return shape, None
+
+
 def restore(directory: str | os.PathLike, tree_like: Any, step: Optional[int] = None) -> Tuple[Any, int]:
     """Load a checkpoint into the structure of ``tree_like`` (numpy leaves).
 
     The caller re-shards (``jax.device_put`` with the current mesh) — this is
     what makes restarts elastic across topologies.
+
+    Every leaf is validated against ``tree_like``'s shape/dtype before it is
+    accepted: a silent mismatch would hand back a corrupt tree (the classic
+    case being a host-store codec change — int8 payloads restored into an
+    fp32 store — which must fail loudly, not train on garbage).
     """
     directory = pathlib.Path(directory)
     if step is None:
@@ -117,9 +132,38 @@ def restore(directory: str | os.PathLike, tree_like: Any, step: Optional[int] = 
     leaves, treedef = _flatten(tree_like)
     out = []
     for key, like in leaves:
-        e = by_key[key]
+        e = by_key.get(key)
+        if e is None:
+            raise ValueError(
+                f"checkpoint {d} has no leaf {key!r} — the on-disk state was "
+                f"saved with a different structure than the restore template"
+            )
+        shape, dtype = _leaf_meta(like)
+        disk_shape, disk_dtype = tuple(e["shape"]), np.dtype(e["dtype"])
+        if disk_shape != shape or (dtype is not None and disk_dtype != dtype):
+            is_store = ".full." in key or ".sideband" in key
+            hint = (
+                "  The leaf belongs to a host store: the checkpoint was saved "
+                "under a different host-precision codec than the restore "
+                "template expects — restore with the codec it was saved with "
+                "(matching host_precision), then convert explicitly."
+                if is_store
+                else ""
+            )
+            raise ValueError(
+                f"checkpoint leaf {key!r} mismatch: on disk "
+                f"{disk_shape}/{disk_dtype}, template expects {shape}/{dtype}."
+                + hint
+            )
         arr = np.load(d / e["file"], allow_pickle=False)
         out.append(arr)
+    surplus = sorted(set(by_key) - {k for k, _ in leaves})
+    if surplus:
+        raise ValueError(
+            f"checkpoint {d} holds {len(surplus)} leaves the restore template "
+            f"does not (e.g. {surplus[:3]}) — restoring would silently drop "
+            f"state; rebuild the template with the structure it was saved with"
+        )
     return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
 
 

@@ -137,7 +137,11 @@ class Trainer:
                     f"arena bound for GROUPED tables — exactness violated otherwise)"
                 )
         rec = {"step": step_i, "loss": loss, "time_s": dt}
-        for k in ("auc", "hit_rate", "cache_evictions", "grad_norm", "xent"):
+        # host_wire_bytes: cumulative host<->device embedding traffic at the
+        # slab's ENCODED row size — the mixed-precision host store's savings
+        # show up here (see EmbeddingCollection.metrics).
+        for k in ("auc", "hit_rate", "cache_evictions", "grad_norm", "xent",
+                  "host_wire_bytes"):
             if k in metrics:
                 rec[k] = float(jax.device_get(metrics[k]))
         self.history.append(rec)
@@ -196,7 +200,13 @@ class PipelinedTrainer(Trainer):
     ``pipeline_depth=1`` is the pure BagPipe pipeline (plan t+1 under compute
     t); larger depths add the amortization.  Because planning never reads
     weights and compute never reads the index arrays, any depth is
-    loss-bit-identical to the serial ``Trainer`` (tested property).
+    loss-bit-identical to the serial ``Trainer`` (tested property) when the
+    host tier stores fp32.  With a lossy host codec (fp16/int8 ``HostStore``)
+    the schedules agree only to codec noise: lookahead pinning keeps a
+    soon-needed row resident where the serial schedule would evict
+    (quantize) and reload (dequantize) it, so the pipelined path sees
+    strictly FEWER quantization round trips — same parity tolerance, not
+    bitwise equality.
 
     The exact ids of future batches come from ``Prefetcher.lookahead`` — the
     BagPipe observation that training data is read ahead anyway, so there is

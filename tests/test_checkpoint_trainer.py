@@ -60,7 +60,7 @@ def test_crash_mid_save_leaves_previous_intact(tmp_path):
     # simulate a crash: garbage tmp dir + stale LATEST is fine
     (tmp_path / "step_000000002.tmp").mkdir()
     (tmp_path / "step_000000002.tmp" / "0000.npy").write_bytes(b"garbage")
-    restored, step = C.restore(tmp_path, {"x": np.zeros(3)})
+    restored, step = C.restore(tmp_path, {"x": np.zeros(3, np.int32)})
     assert step == 1
 
 
@@ -75,7 +75,7 @@ def test_async_checkpointer(tmp_path):
     ck = C.Checkpointer(tmp_path)
     ck.save_async(3, {"x": jnp.ones(4)})
     ck.wait()
-    restored, step = ck.restore_latest({"x": np.zeros(4)})
+    restored, step = ck.restore_latest({"x": np.zeros(4, np.float32)})
     assert step == 3 and restored["x"].sum() == 4
 
 

@@ -1,0 +1,365 @@
+"""Quantized tiered HostStore: codec bounds, fp32 bit-exactness, evict/reload
+stability, encoded checkpoints, precision policy, and int8 end-to-end parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cache_lib
+from repro.core import cached_embedding as ce
+from repro.core import collection as col
+from repro.core import freq
+from repro.store import HostStore, PrecisionPolicy, SlabGeometry, get_codec
+from repro.train import checkpoint as C
+
+
+# --------------------------------------------------------------------------
+# codec round trips
+# --------------------------------------------------------------------------
+
+
+def _rows(n=32, d=16, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32) * scale
+    )
+
+
+def test_fp32_codec_is_bit_exact():
+    x = _rows()
+    c = get_codec("fp32")
+    p, s = c.encode(x)
+    assert s is None
+    np.testing.assert_array_equal(np.asarray(c.decode(p, s, jnp.float32)), np.asarray(x))
+
+
+def test_fp16_codec_error_bound():
+    x = _rows(scale=3.0)
+    c = get_codec("fp16")
+    p, s = c.encode(x)
+    assert p.dtype == jnp.float16 and s is None
+    y = c.decode(p, s, jnp.float32)
+    # half precision: 11-bit significand -> relative error <= 2^-11
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=2 ** -11, atol=1e-7)
+
+
+def test_int8_codec_error_bound():
+    x = _rows(scale=2.0)
+    c = get_codec("int8")
+    p, s = c.encode(x)
+    assert p.dtype == jnp.int8 and s.shape == (x.shape[0], 2)
+    y = np.asarray(c.decode(p, s, jnp.float32))
+    # affine row-wise: error <= half a quantization step per row
+    step = (np.asarray(x).max(1) - np.asarray(x).min(1)) / 254.0
+    assert (np.abs(y - np.asarray(x)) <= step[:, None] * 0.5 + 1e-6).all()
+
+
+def test_int8_constant_row_and_projection_stability():
+    c = get_codec("int8")
+    const = jnp.full((3, 5), 0.25)
+    p, s = c.encode(const)
+    np.testing.assert_allclose(np.asarray(c.decode(p, s, jnp.float32)), 0.25, atol=1e-6)
+    # decode -> encode is a stable projection: payload identical from cycle 1
+    x = _rows(seed=3)
+    p1, s1 = c.encode(x)
+    y1 = c.decode(p1, s1, jnp.float32)
+    p2, s2 = c.encode(y1)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    y2 = c.decode(p2, s2, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_host_store_accounting():
+    full = {"weight": _rows(64, 16), "accum": jnp.zeros((64,), jnp.float32)}
+    st8 = HostStore.create(full, "int8")
+    st32 = HostStore.create(full, "fp32")
+    # int8 row: 16 payload bytes + 8 sideband + 4 raw accum vs fp32 16*4 + 4
+    assert st8.row_wire_bytes() == 16 + 8 + 4
+    assert st32.row_wire_bytes() == 64 + 4
+    assert st8.bytes_saved() == st32.host_bytes() - st8.host_bytes() > 0
+    # accum (per-row scalar) is stored raw under every codec
+    assert st8.data["accum"].dtype == jnp.float32
+
+
+# --------------------------------------------------------------------------
+# fp32 store is bit-identical to the raw-pytree path through prepare/flush
+# --------------------------------------------------------------------------
+
+
+def test_fp32_store_bit_identical_to_raw_tree():
+    cfg = cache_lib.CacheConfig(vocab=60, capacity=12, ids_per_step=8, buffer_rows=5)
+    w = _rows(60, 8, seed=1)
+    raw = {"weight": w}
+    store = HostStore.create({"weight": w}, "fp32")
+    st_a = cache_lib.init_cache(cfg, {"weight": jnp.zeros((8,), jnp.float32)})
+    st_b = jax.tree_util.tree_map(lambda x: x, st_a)
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        ids = jnp.asarray(rng.integers(0, 60, 8).astype(np.int32))
+        raw, st_a, slots_a = cache_lib.prepare(cfg, raw, st_a, ids)
+        store, st_b, slots_b = cache_lib.prepare(cfg, store, st_b, ids)
+        np.testing.assert_array_equal(np.asarray(slots_a), np.asarray(slots_b))
+        np.testing.assert_array_equal(
+            np.asarray(st_a.cached_rows["weight"]), np.asarray(st_b.cached_rows["weight"])
+        )
+        g = jnp.asarray(rng.normal(size=(12, 8)).astype(np.float32))
+        st_a = dataclasses.replace(st_a, cached_rows={"weight": st_a.cached_rows["weight"] + g})
+        st_b = dataclasses.replace(st_b, cached_rows={"weight": st_b.cached_rows["weight"] + g})
+    raw, st_a = cache_lib.flush(cfg, raw, st_a)
+    store, st_b = cache_lib.flush(cfg, store, st_b)
+    np.testing.assert_array_equal(np.asarray(raw["weight"]), np.asarray(store["weight"]))
+
+
+# --------------------------------------------------------------------------
+# quantize-on-evict -> dequantize-on-reload: untouched rows are stable
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["fp16", "int8"])
+def test_evict_reload_idempotent_for_untouched_rows(codec):
+    cfg = ce.CachedEmbeddingConfig(
+        vocab_sizes=(64,), dim=8, ids_per_step=8, cache_ratio=0.01,  # capacity = 8
+        buffer_rows=4, host_precision=codec,
+    )
+    st = ce.init_state(jax.random.PRNGKey(0), cfg, warm=False)
+    ids_a = jnp.arange(8, dtype=jnp.int32)
+    ids_b = jnp.arange(8, 16, dtype=jnp.int32)
+
+    st, slots = ce.prepare_ids(cfg, st, ids_a)  # load (dequantize) A
+    v1 = np.asarray(ce.gather_slots(st, slots))
+    payload_after = []
+    vals = []
+    for _ in range(3):  # evict A (quantize) / reload A (dequantize), 3 cycles
+        st, _ = ce.prepare_ids(cfg, st, ids_b)
+        payload_after.append(np.asarray(st.full.data["weight"][:8]).copy())
+        st, slots = ce.prepare_ids(cfg, st, ids_a)
+        vals.append(np.asarray(ce.gather_slots(st, slots)))
+    # payload is bit-stable from the first writeback on
+    np.testing.assert_array_equal(payload_after[0], payload_after[1])
+    np.testing.assert_array_equal(payload_after[1], payload_after[2])
+    # values drift at most by sideband recompute noise (float ulps), not by
+    # a quantization step per cycle
+    np.testing.assert_allclose(vals[0], vals[1], atol=1e-6)
+    np.testing.assert_allclose(vals[1], vals[2], atol=1e-6)
+    np.testing.assert_allclose(v1, vals[0], atol=1e-5)
+
+
+def test_fp32_evict_reload_bit_exact():
+    cfg = ce.CachedEmbeddingConfig(
+        vocab_sizes=(64,), dim=8, ids_per_step=8, cache_ratio=0.01, buffer_rows=4,
+    )
+    st = ce.init_state(jax.random.PRNGKey(0), cfg, warm=False)
+    ids_a = jnp.arange(8, dtype=jnp.int32)
+    st, slots = ce.prepare_ids(cfg, st, ids_a)
+    v1 = np.asarray(ce.gather_slots(st, slots))
+    st, _ = ce.prepare_ids(cfg, st, jnp.arange(8, 16, dtype=jnp.int32))
+    st, slots = ce.prepare_ids(cfg, st, ids_a)
+    np.testing.assert_array_equal(v1, np.asarray(ce.gather_slots(st, slots)))
+
+
+# --------------------------------------------------------------------------
+# quantized lookups stay codec-roundtrip-exact vs the dense oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["fp16", "int8"])
+def test_quantized_store_matches_oracle_after_updates(codec):
+    cfg = ce.CachedEmbeddingConfig(
+        vocab_sizes=(50, 30), dim=8, ids_per_step=12, cache_ratio=0.2,
+        buffer_rows=5, host_precision=codec,
+    )
+    st = ce.init_state(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        ids = jnp.asarray(rng.integers(0, (50, 30), size=(6, 2)).astype(np.int32))
+        st, slots, emb = ce.embed_onehot(cfg, st, ids)
+        st = ce.apply_row_grads(cfg, st, jnp.ones_like(st.cache.cached_rows["weight"]), lr=0.01)
+    flushed = ce.flush_state(cfg, st)
+    ref = ce.dense_reference_lookup(flushed, ids)
+    _, _, emb2 = ce.embed_onehot(cfg, flushed, ids)
+    # resident reads and oracle reads agree to within one quantization step
+    atol = 0.01 if codec == "int8" else 1e-3
+    np.testing.assert_allclose(np.asarray(emb2), np.asarray(ref), atol=atol)
+
+
+# --------------------------------------------------------------------------
+# checkpoints persist the ENCODED store; restore validates codec metadata
+# --------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrips_encoded_store(tmp_path):
+    cfg = ce.CachedEmbeddingConfig(
+        vocab_sizes=(64,), dim=8, ids_per_step=8, cache_ratio=0.25,
+        host_precision="int8",
+    )
+    st = ce.init_state(jax.random.PRNGKey(0), cfg)
+    st, _ = ce.prepare_ids(cfg, st, jnp.arange(8, dtype=jnp.int32))
+    st = ce.flush_state(cfg, st)
+    C.save(tmp_path, 3, st)
+    # the on-disk leaves are the ENCODED payload + sideband, not fp32
+    like = jax.tree_util.tree_map(lambda x: np.asarray(x), st)
+    restored, step = C.restore(tmp_path, like)
+    assert step == 3
+    assert restored.full.data["weight"].dtype == np.int8
+    np.testing.assert_array_equal(
+        np.asarray(st.full.data["weight"]), restored.full.data["weight"]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st.full.sideband["weight"]), restored.full.sideband["weight"]
+    )
+
+
+def test_checkpoint_codec_mismatch_raises(tmp_path):
+    kw = dict(vocab_sizes=(64,), dim=8, ids_per_step=8, cache_ratio=0.25)
+    cfg8 = ce.CachedEmbeddingConfig(**kw, host_precision="int8")
+    st8 = ce.init_state(jax.random.PRNGKey(0), cfg8)
+    C.save(tmp_path, 1, st8)
+    cfg16 = ce.CachedEmbeddingConfig(**kw, host_precision="fp16")
+    like = jax.tree_util.tree_map(
+        lambda x: np.asarray(x), ce.init_state(jax.random.PRNGKey(0), cfg16)
+    )
+    with pytest.raises(ValueError, match="host"):
+        C.restore(tmp_path, like)
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    C.save(tmp_path, 1, {"x": jnp.zeros((4,), jnp.float32)})
+    with pytest.raises(ValueError, match="mismatch"):
+        C.restore(tmp_path, {"x": np.zeros((5,), np.float32)})
+
+
+# --------------------------------------------------------------------------
+# precision policy + deterministic sampled counts
+# --------------------------------------------------------------------------
+
+
+def test_precision_policy_coverage_thresholds():
+    pol = PrecisionPolicy()
+    g = SlabGeometry(name="t", vocab=1000, dim=16, capacity=100)
+    hot = np.zeros(1000); hot[:100] = 1000.0; hot[100:] = 0.1  # cache covers ~all
+    cold = np.ones(1000)  # capacity covers 10 % of accesses
+    assert pol.choose(g, hot) == "int8"
+    assert pol.choose(g, cold) == "fp32"
+    assert pol.choose(g, None) == pol.no_stats == "fp16"
+
+
+def test_precision_policy_budget_demotes_coldest_first():
+    pol = PrecisionPolicy()
+    hot = SlabGeometry(name="hot", vocab=1000, dim=16, capacity=500)
+    cold = SlabGeometry(name="cold", vocab=1000, dim=16, capacity=10)
+    skew = np.zeros(1000); skew[:500] = 100.0; skew[500:] = 1.0
+    uniform = np.ones(1000)
+    counts = {"hot": skew, "cold": uniform}
+    free = pol.assign([hot, cold], counts)
+    assert free["cold"] == "fp32"  # low coverage -> full precision...
+    tight = pol.assign([hot, cold], counts, host_budget_bytes=2 * 1000 * 24)
+    assert tight["cold"] != "fp32"  # ...until the host budget forces demotion
+    with pytest.raises(ValueError, match="int8"):
+        pol.assign([hot, cold], counts, host_budget_bytes=100)
+
+
+def test_precision_policy_budget_demotes_best_covered_first():
+    """Under pressure the slab whose host tier is read LEAST (highest cache
+    coverage) quantizes first — the one the codec noise can hurt least."""
+    pol = PrecisionPolicy()
+    a = SlabGeometry(name="a", vocab=1000, dim=16, capacity=100)
+    b = SlabGeometry(name="b", vocab=1000, dim=16, capacity=100)
+    cov45 = np.r_[np.full(100, 0.45), np.full(900, 55.0 / 900)]  # top-100: 45 %
+    cov70 = np.r_[np.full(100, 0.70), np.full(900, 30.0 / 900)]  # top-100: 70 %
+    counts = {"a": cov45, "b": cov70}
+    free = pol.assign([a, b], counts)
+    assert free == {"a": "fp16", "b": "fp16"}  # both in the fp16 band
+    # budget with room for one fp16 + one int8: the better-covered slab (b)
+    # must take the int8 demotion, the hotter host tier (a) keeps fp16
+    tight = pol.assign([a, b], counts, host_budget_bytes=1000 * 32 + 1000 * 24)
+    assert tight == {"a": "fp16", "b": "int8"}
+
+
+def test_metrics_writeback_false_counts_loads_only():
+    tables = [col.TableConfig("t", vocab=64, dim=8, ids_per_step=8, cache_ratio=0.1)]
+    coll = col.EmbeddingCollection.create(tables)
+    state = coll.init(jax.random.PRNGKey(0), warm=False)
+    # two disjoint batches through a capacity-8 cache: loads + evictions
+    for lo in (0, 8, 16):
+        fb = col.FeatureBatch(ids={"t": jnp.arange(lo, lo + 8, dtype=jnp.int32)})
+        state, _ = coll.prepare(state, fb, writeback=False)
+    m_rw = coll.metrics(state)
+    m_ro = coll.metrics(state, writeback=False)
+    misses = float(m_ro["cache_misses"])
+    evs = float(m_ro["cache_evictions"])
+    assert evs > 0
+    assert float(m_ro["host_wire_bytes"]) == misses * 8 * 4
+    assert float(m_rw["host_wire_bytes"]) == (misses + evs) * 8 * 4
+
+
+def test_host_store_rejects_mixed_encoded_dtypes():
+    full = {"w32": _rows(8, 4), "w16": _rows(8, 4).astype(jnp.float16)}
+    with pytest.raises(ValueError, match="one decode dtype"):
+        HostStore.create(full, "int8")
+
+
+def test_auto_precision_resolves_at_init_and_specs_match():
+    tables = [col.TableConfig("t", vocab=512, dim=8, ids_per_step=16, cache_ratio=0.25)]
+    coll = col.EmbeddingCollection.create(tables, host_precision="auto")
+    z = np.random.default_rng(0).zipf(1.6, 100_000) % 512
+    state = coll.init(jax.random.PRNGKey(0), counts={"t": np.bincount(z, minlength=512)})
+    resolved = coll.host_precision[col.SHARED_ARENA]
+    assert resolved in ("fp16", "int8")
+    assert state.slabs[col.SHARED_ARENA].full.codec == resolved
+    specs = coll.shard_specs("column")
+    assert jax.tree_util.tree_structure(state) == jax.tree_util.tree_structure(specs)
+
+
+def test_collect_counts_sampled_deterministic_with_rng():
+    batches = [np.random.default_rng(i).integers(0, 50, 64) for i in range(20)]
+    a = freq.collect_counts_sampled(batches, 50, 0.5, rng=np.random.default_rng(7))
+    b = freq.collect_counts_sampled(batches, 50, 0.5, rng=np.random.default_rng(7))
+    c = freq.collect_counts_sampled(batches, 50, 0.5, seed=7)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+
+
+# --------------------------------------------------------------------------
+# end-to-end: tiny DLRM trains to loss parity with an int8 host store
+# --------------------------------------------------------------------------
+
+
+def _train_losses(host_precision, steps=25):
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+
+    cfg = DLRMConfig(vocab_sizes=(256, 128, 64), embed_dim=8, batch_size=16,
+                     cache_ratio=0.15, lr=0.1, bottom_mlp=(16, 8), top_mlp=(16,),
+                     host_precision=host_precision)
+    model = DLRM(cfg)
+    spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+    state = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(model.train_step)
+    losses = []
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 16, 0, s).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return losses, state, model
+
+
+def test_int8_dlrm_trains_to_loss_parity():
+    ref, _, _ = _train_losses("fp32")
+    got, state, model = _train_losses("int8")
+    # both learn, and the int8 curve tracks fp32 within tolerance
+    assert np.mean(got[-5:]) < np.mean(got[:5])
+    assert abs(np.mean(got[-5:]) - np.mean(ref[-5:])) < 0.05
+    # the quantized host tier really is int8 under the trained state
+    slab = state["emb"].slabs[col.SHARED_ARENA]
+    assert slab.full.codec == "int8" and slab.full.data["weight"].dtype == jnp.int8
+    # wire accounting: int8 rows are cheaper than fp32 rows
+    assert slab.full.row_wire_bytes() < 8 * 4
+
+
+def test_fp32_dlrm_loss_identical_to_pre_store_path():
+    """The fp32 codec must not perturb training at all: two independent runs
+    (fresh model objects) produce bit-identical losses."""
+    a, _, _ = _train_losses("fp32", steps=8)
+    b, _, _ = _train_losses("fp32", steps=8)
+    assert a == b
