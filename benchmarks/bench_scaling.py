@@ -1,30 +1,37 @@
 """Figs. 13/14 — multi-device scaling (1..8 fake CPU devices, subprocess so
 the parent keeps a single device).  Measures the hybrid-parallel DLRM train
-step: column-TP embedding + DP dense, the paper's §4.4 layout."""
+step — the paper's §4.4 layout, now with the sharded EmbeddingCollection:
+every device on the ``model`` axis owns its own cache arena + HostStore
+slice, ids bucketize to their owner and rows return through the combined
+address gather.  Besides step time the child reports the id+row all-to-all
+exchange bytes per step (exact, from the collection's routed-lane counters)
+so ``--json`` runs (BENCH_PR4.json) record both per device count."""
 from __future__ import annotations
 
 import os
 import pathlib
 import subprocess
 import sys
-import textwrap
 
-from benchmarks.common import Table
+from benchmarks.common import SMOKE, Table
 
 _CHILD = """
 import time
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.launch.mesh import make_mesh
+from repro.core.collection import exact_metric_bytes
+from repro.launch.mesh import make_hybrid_mesh
 from repro.data import synth
 from repro.models.dlrm import DLRM, DLRMConfig
 import repro.dist.partitioning as dist
 
 n_dev = {n_dev}
-cfg = DLRMConfig(vocab_sizes=(65536, 32768, 16384, 16384), embed_dim=32,
-                 batch_size=2048, cache_ratio=0.1, lr=0.5,
-                 bottom_mlp=(64, 32), top_mlp=(64,))
+batch = {batch}
+cfg = DLRMConfig(vocab_sizes={vocabs}, embed_dim=32,
+                 batch_size=batch, cache_ratio=0.1, lr=0.5,
+                 bottom_mlp=(64, 32), top_mlp=(64,),
+                 model_shards=(n_dev if n_dev > 1 else 0))
 model = DLRM(cfg)
 state = model.init(jax.random.PRNGKey(0))
 spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
@@ -34,9 +41,10 @@ if n_dev == 1:
     rules = {{}}
     mesh = None
 else:
-    mesh = make_mesh((n_dev // 2 if n_dev > 2 else 1, 2) if n_dev > 2 else (1, n_dev),
-                     ("data", "model"))
-    especs = model.collection.shard_specs(mode="column")
+    # every device is a model shard; the data axis is 1 (the embedding
+    # exchange is what this figure scales — dense stays replicated)
+    mesh = make_hybrid_mesh(n_dev)
+    especs = model.collection.shard_specs()
     sh = lambda s: jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), s,
                                           is_leaf=lambda x: isinstance(x, P))
     state_specs = {{
@@ -45,41 +53,56 @@ else:
         "emb": especs, "step": P(),
     }}
     bspecs = {{"dense": P("data", None), "sparse": P("data", None), "label": P("data")}}
-    rules = {{"batch": ("data",)}}
+    rules = dist.hybrid_rules()
     with dist.axis_rules(mesh, rules):
         step = jax.jit(model.train_step, in_shardings=(sh(state_specs), sh(bspecs)))
     state = jax.device_put(state, sh(state_specs))
 
-batches = [{{k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 2048, 0, i).items()}}
+batches = [{{k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, i).items()}}
            for i in range(6)]
 with dist.axis_rules(mesh, rules) if mesh else __import__("contextlib").nullcontext():
     state, m = step(state, batches[0])  # compile + warm
     jax.block_until_ready(m["loss"])
+    x0 = exact_metric_bytes(m, "exchange_routed_lanes", "exchange_lane_bytes") or 0
     t0 = time.perf_counter()
     for b in batches[1:]:
         state, m = step(state, b)
     jax.block_until_ready(m["loss"])
 sec = (time.perf_counter() - t0) / (len(batches) - 1)
-print(f"RESULT {{sec*1e6:.1f}} {{2048/sec:.0f}}")
+x1 = exact_metric_bytes(m, "exchange_routed_lanes", "exchange_lane_bytes") or 0
+xchg = (x1 - x0) / (len(batches) - 1)
+imb = float(m.get("shard_imbalance", 1.0))
+print(f"RESULT {{sec*1e6:.1f}} {{batch/sec:.0f}} {{xchg:.0f}} {{imb:.2f}}")
 """
 
 
 def bench_scaling(t: Table):
     repo = pathlib.Path(__file__).resolve().parents[1]
-    for n_dev in (1, 2, 4, 8):
+    if SMOKE:
+        devs, vocabs, batch = (1, 2), (4096, 2048, 1024, 1024), 256
+    else:
+        devs, vocabs, batch = (1, 2, 4, 8), (65536, 32768, 16384, 16384), 2048
+    for n_dev in devs:
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
         env["PYTHONPATH"] = str(repo / "src")
         out = subprocess.run(
-            [sys.executable, "-c", _CHILD.format(n_dev=n_dev)],
+            [sys.executable, "-c",
+             _CHILD.format(n_dev=n_dev, batch=batch, vocabs=vocabs)],
             capture_output=True, text=True, env=env, timeout=600,
         )
         line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")]
         if not line:
             t.add(f"fig13/scaling_dev{n_dev}", 0.0, f"FAILED: {out.stderr[-200:]}")
             continue
-        us, sps = line[0].split()[1:3]
-        t.add(f"fig13/scaling_dev{n_dev}", float(us), f"samples_per_s={sps} (host-emulated devices)")
+        us, sps, xchg, imb = line[0].split()[1:5]
+        t.add(
+            f"fig13/scaling_dev{n_dev}", float(us),
+            f"samples_per_s={sps} exchange_bytes_per_step={xchg} "
+            f"shard_imbalance={imb} (host-emulated devices; exchange counts "
+            f"the full id+row payload, expected cross-device fraction "
+            f"{(n_dev - 1) / max(n_dev, 1):.2f})",
+        )
 
 
 ALL = [bench_scaling]

@@ -1,5 +1,9 @@
-"""Hybrid-parallel scaling demo (paper §4.4): column-wise TP embedding +
-data-parallel dense on an emulated 8-device mesh, exactness preserved.
+"""Hybrid-parallel scaling demo (paper §4.4): the sharded EmbeddingCollection
+over an emulated 8-device (data=2, model=4) mesh — dense/MLP params train
+data-parallel, each of the 4 model shards owns its own frequency-aware cache
+arena and HostStore slice, ids bucketize to their owner shard and rows come
+back through the combined-address gather.  Exactness is preserved: the loss
+trajectory matches the single-device collection.
 
 Run:  PYTHONPATH=src python examples/multi_device_scaling.py
 (sets XLA_FLAGS itself — run in a fresh interpreter)
@@ -10,23 +14,39 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8 " + os.envir
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 import repro.dist.partitioning as dist  # noqa: E402
 from repro.data import synth  # noqa: E402
-from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.launch.mesh import make_hybrid_mesh  # noqa: E402
 from repro.models.dlrm import DLRM, DLRMConfig  # noqa: E402
 
+MODEL_SHARDS = 4
 cfg = DLRMConfig(vocab_sizes=(100_000, 50_000), embed_dim=32, batch_size=512,
-                 cache_ratio=0.05, lr=0.3, bottom_mlp=(64, 32), top_mlp=(64,))
+                 cache_ratio=0.05, lr=0.3, bottom_mlp=(64, 32), top_mlp=(64,),
+                 model_shards=MODEL_SHARDS)
 model = DLRM(cfg)
-state = model.init(jax.random.PRNGKey(0))
 
-mesh = make_mesh((2, 4), ("data", "model"))
+# frequency counts drive BOTH the cache layout and the RecShard-style
+# device assignment (balance expected hot-row traffic per shard)
+spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+from repro.core import freq as freq_lib  # noqa: E402
+
+counts = freq_lib.collect_counts(
+    (synth.sparse_batch(spec, 512, 0, s)["sparse"]
+     + freq_lib.concat_table_offsets(cfg.vocab_sizes)[None, :]
+     for s in range(20)),
+    vocab=sum(cfg.vocab_sizes),
+)
+state = model.init(jax.random.PRNGKey(0), counts=counts)
+
+mesh = make_hybrid_mesh(MODEL_SHARDS)  # (data=2, model=4) on 8 devices
 print("mesh:", mesh)
+for sname, a in model.collection.assignments.items():
+    print(f"slab {sname}: rows/shard {a.shard_rows.tolist()}, "
+          f"traffic imbalance {a.imbalance():.3f}x")
 
-emb_specs = model.collection.shard_specs(mode="column")
+emb_specs = model.collection.shard_specs()
 sh = lambda t: jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), t,
                                       is_leaf=lambda x: isinstance(x, P))
 state_specs = {
@@ -38,17 +58,22 @@ state_specs = {
 batch_specs = {"dense": P("data", None), "sparse": P("data", None), "label": P("data")}
 
 state = jax.device_put(state, sh(state_specs))
-spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
 
-with dist.axis_rules(mesh, {"batch": ("data",)}):
+with dist.axis_rules(mesh, dist.hybrid_rules()):
     step = jax.jit(model.train_step, in_shardings=(sh(state_specs), sh(batch_specs)))
     for i in range(5):
         batch = {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 512, 0, i).items()}
         state, metrics = step(state, batch)
         print(f"step {i}: loss={float(metrics['loss']):.4f} "
-              f"hit_rate={float(metrics['hit_rate']):.2%}")
+              f"hit_rate={float(metrics['hit_rate']):.2%} "
+              f"exchange={float(metrics['exchange_bytes'])/1e6:.2f} MB cum "
+              f"imbalance={float(metrics['shard_imbalance']):.2f}x")
 
 from repro.core.collection import SHARED_ARENA  # noqa: E402
 
 w = state["emb"].slabs[SHARED_ARENA].cache.cached_rows["weight"]
-print("cached weight sharding:", w.sharding.spec, "-> dim split over 'model' (paper column-TP)")
+print("cached weight sharding:", w.sharding.spec,
+      "-> one cache arena per 'model' device (hybrid parallel)")
+db = model.collection.device_bytes()
+print(f"per-shard device bytes: {db['device_per_shard']/1e6:.2f} MB "
+      f"(total {db['device_total']/1e6:.2f} MB over {MODEL_SHARDS} shards)")

@@ -16,7 +16,10 @@ from repro.core.collection import (
     Placement,
     PlacementPlan,
     PlacementPlanner,
+    ShardAssignment,
     TableConfig,
+    exact_metric_bytes,
 )
 from repro.core.freq import FreqStats, build_freq_stats, collect_counts, coverage
 from repro.core.policies import Policy
+from repro.core.sharded import ShardedEmbeddingCollection

@@ -186,6 +186,17 @@ def plan_prepare(
     win: if capacity is short, future loads are dropped first and pinned
     future slots may be reclaimed, but rows of the current batch are never
     evicted (exactness is unconditional).
+
+    Pin lifetime (audited invariant, tested in test_pipeline.py): a pin is
+    PLAN-LOCAL.  Nothing in ``CacheState`` records it — the eviction-key
+    demotion exists only inside this call, recomputed from the window the
+    caller passes.  If a pipelined group is abandoned mid-group (early stop,
+    producer error), the next ``plan_prepare`` with a fresh window simply
+    does not re-pin the stale rows: they compete under the normal policy key
+    (for LRU they age from their load step like any other resident row, for
+    FREQ_LFU the pin never influenced the key beyond the planning call) and
+    ``flush`` writes them back like any resident row.  No unpin step exists
+    because no pin state persists.
     """
     k = cfg.unique_size
     # geometry comes from the STATE (a serve-time cfg may quote a smaller

@@ -61,11 +61,13 @@ __all__ = [
     "TablePlacement",
     "PlacementPlan",
     "PlacementPlanner",
+    "ShardAssignment",
     "EmbeddingCollection",
     "DeviceSlab",
     "CachedSlab",
     "CollectionState",
     "CollectionPlan",
+    "exact_metric_bytes",
 ]
 
 SHARED_ARENA = "__shared__"
@@ -246,6 +248,36 @@ class PlacementPlan:
         return out
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardAssignment:
+    """Frequency-driven device assignment of one cached slab's rows.
+
+    Maps every frequency-ranked row of a slab to a ``model``-axis shard so
+    the expected hot-row traffic is balanced across devices (RecShard,
+    arXiv 2201.10095: the statistics a placement pass needs are exactly the
+    frequency counts the planner already collects).  ``owner``/``local`` are
+    host-side numpy; the sharded collection places them on device next to
+    ``idx_map`` so id routing is one extra gather.
+    """
+
+    num_shards: int
+    owner: np.ndarray  # int32 [vocab] freq rank -> owning shard
+    local: np.ndarray  # int32 [vocab] freq rank -> row index on the owner
+    shard_rows: np.ndarray  # int64 [S] real rows per shard (pads excluded)
+    shard_load: np.ndarray  # float64 [S] expected traffic (count mass) per shard
+
+    @property
+    def rows_per_shard(self) -> int:
+        """Uniform local vocab (stacked [S, rows_per_shard, ...] layout);
+        shards with fewer real rows pad with never-referenced zero rows."""
+        return -(-int(self.owner.shape[0]) // self.num_shards)
+
+    def imbalance(self) -> float:
+        """max/mean expected traffic across shards (1.0 = perfectly even)."""
+        mean = float(np.mean(self.shard_load))
+        return float(np.max(self.shard_load)) / mean if mean > 0 else 1.0
+
+
 class PlacementPlanner:
     """Assign each table a memory tier under an explicit device-byte budget.
 
@@ -378,6 +410,62 @@ class PlacementPlanner:
 
         return PlacementPlan(
             placements=placements, arena=arena, budget_bytes=self.budget_bytes
+        )
+
+    @staticmethod
+    def assign_devices(
+        vocab: int,
+        num_shards: int,
+        counts_ranked: Optional[np.ndarray] = None,
+    ) -> ShardAssignment:
+        """Device-assignment pass: spread a slab's frequency-ranked rows over
+        ``num_shards`` model-axis shards, balancing expected hot-row traffic.
+
+        ``counts_ranked`` is the slab's access counts in frequency-rank order
+        (descending — ``FreqStats.counts[inv_map]``, the same statistics that
+        drive ``host_precision="auto"``).  Greedy longest-processing-time:
+        ranks are taken hottest first and each goes to the least-loaded shard
+        that still has room (every shard holds at most ``ceil(vocab/S)`` rows
+        so the stacked state stays uniform).  Without counts the pass
+        degenerates to round-robin over ranks — under a Zipfian ordering that
+        is already near-optimal traffic balance.  Deterministic: ties break
+        by (rows held, shard index), so every host derives the identical
+        assignment (a requirement, like ``build_freq_stats`` stability).
+        """
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        S = int(num_shards)
+        cap = -(-vocab // S)
+        ranks = np.arange(vocab, dtype=np.int64)
+        if counts_ranked is None or S == 1:
+            owner = (ranks % S).astype(np.int32)
+            local = (ranks // S).astype(np.int32)
+            load = np.zeros((S,), np.float64)
+            if counts_ranked is not None:
+                np.add.at(load, owner, np.asarray(counts_ranked, np.float64))
+            else:
+                np.add.at(load, owner, 1.0)
+        else:
+            import heapq
+
+            c = np.asarray(counts_ranked, np.float64)
+            if c.shape[0] != vocab:
+                raise ValueError(f"counts_ranked has {c.shape[0]} entries, want {vocab}")
+            owner = np.empty((vocab,), np.int32)
+            local = np.empty((vocab,), np.int32)
+            heap = [(0.0, 0, s) for s in range(S)]  # (load, rows held, shard)
+            for r in range(vocab):
+                ld, size, s = heapq.heappop(heap)
+                owner[r] = s
+                local[r] = size
+                if size + 1 < cap:  # full shards leave the heap for good
+                    heapq.heappush(heap, (ld + c[r], size + 1, s))
+            load = np.zeros((S,), np.float64)
+            np.add.at(load, owner, c)
+        shard_rows = np.bincount(owner, minlength=S).astype(np.int64)
+        return ShardAssignment(
+            num_shards=S, owner=owner, local=local, shard_rows=shard_rows,
+            shard_load=load,
         )
 
 
@@ -748,6 +836,14 @@ class EmbeddingCollection:
 
     # ----- the non-diff bookkeeping pass ------------------------------------
 
+    def _check_features(self, *fbs: FeatureBatch) -> None:
+        for b in fbs:
+            for f in b.features:
+                if f not in self.feature_to_table:
+                    raise KeyError(
+                        f"unknown feature {f!r}; known: {sorted(self.feature_to_table)}"
+                    )
+
     def _slab_lanes(self, fb: FeatureBatch, sname: str) -> List[Tuple[str, int]]:
         """Static (feature, flat lane count) list this slab serves, in a
         deterministic order (slab table order, then FeatureBatch order)."""
@@ -793,12 +889,7 @@ class EmbeddingCollection:
         whole window off one merged plan — amortizing the bookkeeping k-fold —
         after checking that nothing was dropped under capacity pressure.
         """
-        for b in (fb, *fb_future):
-            for f in b.features:
-                if f not in self.feature_to_table:
-                    raise KeyError(
-                        f"unknown feature {f!r}; known: {sorted(self.feature_to_table)}"
-                    )
+        self._check_features(fb, *fb_future)
         addresses: Dict[str, jnp.ndarray] = {}
         future_addresses: List[Dict[str, jnp.ndarray]] = [{} for _ in fb_future]
         future_unresident = jnp.zeros((), jnp.int32)
@@ -1087,25 +1178,34 @@ class EmbeddingCollection:
         evictions (writebacks), each costing the slab's *encoded* row size,
         the quantity the mixed-precision store shrinks.  Pass
         ``writeback=False`` for read-only (serve) states, whose evicted rows
-        are dropped and never cross the link."""
+        are dropped and never cross the link.
+
+        Two representations are returned: ``host_wire_bytes`` is a float32
+        scalar (in-jit convenience — float32 loses integer resolution past
+        2^24, so it DRIFTS on long runs), while ``host_moved_rows`` /
+        ``host_row_bytes`` are per-slab int32 counters + static encoded row
+        sizes from which :func:`exact_metric_bytes` reconstructs the exact
+        cumulative byte count host-side (what the trainer records)."""
         hits = misses = evictions = overflows = 0
-        # float32 accumulator: an int32 one overflows at 2 GiB of cumulative
-        # traffic (~3k steps at batch 4096) and x64 is off by default
         wire = jnp.zeros((), jnp.float32)
+        moved_rows: Dict[str, jnp.ndarray] = {}
+        row_bytes_map: Dict[str, jnp.ndarray] = {}
         for sname, spec in self.cached_slabs.items():
             c = state.slabs[sname].cache
-            hits = hits + c.hits
-            misses = misses + c.misses
-            evictions = evictions + c.evictions
-            overflows = overflows + c.uniq_overflows
+            hits = hits + jnp.sum(c.hits)
+            misses = misses + jnp.sum(c.misses)
+            evictions = evictions + jnp.sum(c.evictions)
+            overflows = overflows + jnp.sum(c.uniq_overflows)
             full = state.slabs[sname].full
             row_bytes = (
-                full.row_wire_bytes()
+                full.row_wire_bytes(batch_dims=full.data["weight"].ndim - 1)
                 if isinstance(full, HostStore)
                 else spec.dim * jnp.dtype(spec.dtype).itemsize
             )
             moved = c.misses + c.evictions if writeback else c.misses
-            wire = wire + moved.astype(jnp.float32) * row_bytes
+            moved_rows[sname] = jnp.sum(moved).astype(jnp.int32)
+            row_bytes_map[sname] = jnp.asarray(row_bytes, jnp.int32)
+            wire = wire + jnp.sum(moved).astype(jnp.float32) * row_bytes
         tot = hits + misses
         return {
             "hit_rate": jnp.where(tot > 0, hits / jnp.maximum(tot, 1), 0.0),
@@ -1113,6 +1213,8 @@ class EmbeddingCollection:
             "cache_evictions": jnp.asarray(evictions),
             "uniq_overflows": jnp.asarray(overflows),
             "host_wire_bytes": wire,
+            "host_moved_rows": moved_rows,
+            "host_row_bytes": row_bytes_map,
         }
 
     def _slab_codec(self, sname: str) -> str:
@@ -1191,3 +1293,22 @@ class EmbeddingCollection:
                 idx_map=P(None),
             )
         return CollectionState(slabs=slabs)
+
+
+def exact_metric_bytes(
+    metrics: Mapping[str, Any], counts_key: str, bytes_key: str
+) -> Optional[int]:
+    """Exact cumulative byte counter from a metrics dict, as a Python int.
+
+    ``metrics[counts_key]`` holds per-slab int32 cumulative counts and
+    ``metrics[bytes_key]`` the matching per-unit byte sizes (both emitted by
+    ``EmbeddingCollection.metrics``); their products are summed in Python
+    integer arithmetic, so — unlike the float32 ``host_wire_bytes`` scalar,
+    which loses integer resolution past 2^24 — the result is exact for the
+    whole int32 range of the counters.  Returns None when the keys are absent
+    (legacy metrics dicts)."""
+    if counts_key not in metrics or bytes_key not in metrics:
+        return None
+    counts = jax.device_get(metrics[counts_key])
+    unit = jax.device_get(metrics[bytes_key])
+    return sum(int(counts[k]) * int(unit[k]) for k in counts)

@@ -1,0 +1,686 @@
+"""Hybrid-parallel sharded ``EmbeddingCollection`` over a device mesh.
+
+The paper scales its cache "to multiple GPUs in combination with the widely
+used hybrid parallel training approaches": dense/MLP parameters replicate and
+train data-parallel over the ``data`` mesh axis, while the cached embedding
+slabs — too big to replicate — shard over a ``model`` axis, each shard owning
+its own frequency-aware cache arena and its own slice of the host-tier
+``HostStore``.  This module is that layer, built on the PR 1-3 stack:
+
+  * ``PlacementPlanner.assign_devices`` (the RecShard-style pass in
+    ``core.collection``) maps every frequency-ranked row of a cached slab to
+    a shard, balancing expected hot-row traffic from the same ``FreqStats``
+    counts that drive ``host_precision="auto"``.
+  * ``ShardedSlab`` stacks the per-shard state along a leading ``[S, ...]``
+    axis (uniform shapes; short shards pad with never-referenced zero rows).
+    Sharding that axis over the mesh's ``model`` axis puts shard ``s``'s
+    cache arena, index image and host-store slice on device ``s`` — the
+    per-shard cache ops run under ``jax.vmap``, so XLA partitions them
+    device-local with no cross-shard traffic.
+  * ``plan_prepare`` bucketizes each batch's ids by owning shard (the
+    id all-to-all: a ``[S, lanes]`` routed-id image, each row of which lands
+    on its shard) and runs one cache plan per shard; ``gather`` reads the
+    combined ``owner * capacity + slot`` address space off the stacked fast
+    tier (the row all-to-all return path — on a sharded mesh XLA lowers the
+    cross-shard gather to the collective).
+  * DEVICE-placed tables stay replicated (they are dense-sized by
+    definition), training data-parallel like the MLPs.
+
+Exactness is unchanged: the cache remains pure data movement per shard, so a
+sharded collection's lookups still bit-match the dense reference, and the
+training loss trajectory matches the single-device collection (bit-exact for
+fp32, codec-roundtrip-exact for lossy host codecs).  A 1-shard collection is
+bit-identical to the unsharded one by construction (tested).
+
+Worst-case sizing: a batch's lanes may all land on one shard, so each
+per-shard cache keeps the full lane budget as its unique floor — capacity is
+``max(ratio * vocab_s, min(ids_per_step, vocab_s))`` per shard.  Bound it
+with ``TableConfig.max_unique_per_step`` exactly as on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.core import freq as freq_lib
+from repro.core.collection import (
+    ArenaConfig,
+    CollectionState,
+    DeviceSlab,
+    EmbeddingCollection,
+    FeatureBatch,
+    PlacementPlan,
+    PlacementPlanner,
+    ShardAssignment,
+    TableConfig,
+    _CachedSlabSpec,
+    _read_full_rows,
+)
+from repro.store import HostStore, SlabGeometry, get_codec
+
+__all__ = [
+    "ShardedSlab",
+    "ShardedCollectionPlan",
+    "ShardedEmbeddingCollection",
+    "flat_store",
+]
+
+
+def flat_store(store: HostStore) -> HostStore:
+    """View a shard-stacked store ([S, vocab_s, ...] leaves) as one flat
+    [S * vocab_s, ...] store — flat row ``owner * vocab_s + local`` is the
+    rank's slot, which is how oracles and checkpoint validators address it."""
+    def rs(v):
+        return v.reshape((-1,) + v.shape[2:])
+
+    return HostStore(
+        data={k: rs(v) for k, v in store.data.items()},
+        sideband={k: rs(v) for k, v in store.sideband.items()},
+        codec=store.codec,
+        out_dtype=store.out_dtype,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShardedSlab:
+    """One cached slab sharded over the model axis (leading dim = shard)."""
+
+    full: Any  # HostStore, leaves [S, rows_per_shard, ...] (encoded)
+    cache: cache_lib.CacheState  # every leaf [S, ...] (per-shard arena)
+    idx_map: jnp.ndarray  # int32 [vocab] raw id -> freq rank (replicated)
+    rank_owner: jnp.ndarray  # int32 [vocab] rank -> owning shard (replicated)
+    rank_local: jnp.ndarray  # int32 [vocab] rank -> local row (replicated)
+    routed_lanes: jnp.ndarray  # int32 [S] cumulative id lanes routed per shard
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShardedCollectionPlan:
+    """``CollectionPlan`` analogue with per-shard cache plans.
+
+    ``slab_plans`` leaves carry a leading [S] shard dim; ``addresses`` are
+    COMBINED addresses (``owner * shard_capacity + slot``, -1 padding) into
+    the flattened stacked fast tier, so the downstream gather/pool/grad path
+    is shape-identical to the unsharded one.  ``routed`` counts this step's
+    valid id lanes per shard (the id all-to-all payload).  Field names match
+    ``CollectionPlan`` where the trainer reads them (``addresses``,
+    ``future_addresses``, ``future_unresident`` — a scalar, summed over
+    shards, so ``PipelinedTrainer`` needs no sharding awareness).
+    """
+
+    slab_plans: Dict[str, cache_lib.CachePlan]
+    routed: Dict[str, jnp.ndarray]
+    addresses: Dict[str, jnp.ndarray]
+    future_addresses: Tuple[Dict[str, jnp.ndarray], ...] = ()
+    future_unresident: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32)
+    )
+    writeback: bool = dataclasses.field(default=True, metadata=dict(static=True))
+
+
+class ShardedEmbeddingCollection(EmbeddingCollection):
+    """``EmbeddingCollection`` with cached slabs sharded over a model axis.
+
+    Same keyed-feature surface (``init`` / ``plan_prepare`` / ``apply_plan``
+    / ``prepare`` / ``weights`` / ``gather`` / ``pool`` / ``apply_grads`` /
+    ``flush`` / ``metrics`` / ``device_bytes`` / ``shard_specs``), so models
+    and both trainers consume it unchanged.  ``num_shards`` is the size of
+    the mesh's ``model`` axis; on a single device the stacked state simply
+    lives on that device (useful for tests — the math is mesh-agnostic).
+    """
+
+    def __init__(
+        self,
+        tables: Sequence[TableConfig],
+        plan: PlacementPlan,
+        num_shards: int,
+        model_axis: str = "model",
+    ):
+        super().__init__(tables, plan)
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = int(num_shards)
+        self.model_axis = model_axis
+        # per-slab frequency-driven device assignment; populated by ``init``
+        # (it needs the counts) and mirrored host-side for telemetry.
+        self.assignments: Dict[str, ShardAssignment] = {}
+
+    @classmethod
+    def create(
+        cls,
+        tables: Sequence[TableConfig],
+        num_shards: int = 1,
+        budget_bytes: Optional[int] = None,
+        counts: Optional[Mapping[str, np.ndarray]] = None,
+        planner: Optional[PlacementPlanner] = None,
+        model_axis: str = "model",
+        **arena_kw,
+    ) -> "ShardedEmbeddingCollection":
+        """Plan + build, like ``EmbeddingCollection.create`` plus the shard
+        count.  ``budget_bytes`` is the PER-DEVICE budget (each shard holds
+        1/S of every cached slab plus the replicated DEVICE tables)."""
+        if planner is None and budget_bytes is None:
+            return cls(tables, PlacementPlan.single_arena(tables, **arena_kw),
+                       num_shards, model_axis)
+        planner = planner or PlacementPlanner(
+            budget_bytes,
+            arena=ArenaConfig(**arena_kw),
+            host_precision=arena_kw.get("host_precision"),
+        )
+        return cls(tables, planner.plan(tables, counts=counts), num_shards, model_axis)
+
+    # ----- per-shard geometry ----------------------------------------------
+
+    def rows_per_shard(self, spec: _CachedSlabSpec) -> int:
+        return -(-spec.vocab // self.num_shards)
+
+    def shard_capacity(self, spec: _CachedSlabSpec) -> int:
+        """Per-shard cache capacity: the slab ratio applied to the local
+        vocab, floored at one batch's unique rows (worst-case skew: every
+        lane of a batch may land on one shard)."""
+        vs = self.rows_per_shard(spec)
+        k = min(spec.ids_per_step, vs)
+        if spec.max_unique_per_step:
+            k = min(k, spec.max_unique_per_step)
+        return min(max(int(spec.cache_ratio * vs), k), vs)
+
+    def shard_cache_config(
+        self,
+        spec: _CachedSlabSpec,
+        ids_per_step: Optional[int] = None,
+        writeback: bool = True,
+    ) -> cache_lib.CacheConfig:
+        return cache_lib.CacheConfig(
+            vocab=self.rows_per_shard(spec),
+            capacity=self.shard_capacity(spec),
+            ids_per_step=ids_per_step or spec.ids_per_step,
+            buffer_rows=spec.buffer_rows,
+            policy=spec.policy,
+            writeback=writeback,
+            max_unique_per_step=spec.max_unique_per_step,
+            protect_via_inverse=spec.protect_via_inverse,
+        )
+
+    # ----- init -------------------------------------------------------------
+
+    def init(
+        self,
+        rng: jax.Array,
+        counts: Optional[Mapping[str, np.ndarray]] = None,
+        warm: bool = True,
+        host_precision: Optional[str] = None,
+    ) -> CollectionState:
+        """Build the sharded state.  Weight draws mirror the unsharded
+        ``init`` key-for-key, so the sharded collection starts from the exact
+        same logical table as the single-device reference — the basis of the
+        loss-trajectory parity property."""
+        S = self.num_shards
+        slabs: Dict[str, Any] = {}
+        keys = jax.random.split(rng, len(self.device_slabs) + len(self.cached_slabs))
+        kit = iter(keys)
+        for name, t in self.device_slabs.items():
+            scale = 1.0 / np.sqrt(t.dim)
+            slabs[name] = DeviceSlab(
+                weight=jax.random.uniform(next(kit), (t.vocab, t.dim), t.dtype, -scale, scale)
+            )
+        for sname, spec in self.cached_slabs.items():
+            scale = 1.0 / np.sqrt(spec.dim)
+            weight = jax.random.uniform(
+                next(kit), (spec.vocab, spec.dim), spec.dtype, -scale, scale
+            )
+            slab_counts = None
+            counts_ranked = None
+            if counts is not None:
+                slab_counts = np.concatenate(
+                    [
+                        np.asarray(
+                            counts.get(t.name, np.zeros((t.vocab,), np.int64)), np.int64
+                        )
+                        for t in spec.tables
+                    ]
+                )
+                stats = freq_lib.build_freq_stats(slab_counts)
+                idx_map = jnp.asarray(stats.idx_map)
+                counts_ranked = stats.counts[stats.inv_map]  # descending
+            else:
+                idx_map = jnp.arange(spec.vocab, dtype=jnp.int32)
+            assign = PlacementPlanner.assign_devices(spec.vocab, S, counts_ranked)
+            self.assignments[sname] = assign
+            codec = host_precision or spec.host_precision
+            if codec == "auto":
+                codec = self.precision_policy.choose(
+                    SlabGeometry(
+                        name=sname,
+                        vocab=spec.vocab,
+                        dim=spec.dim,
+                        capacity=S * self.shard_capacity(spec),
+                        dtype_itemsize=jnp.dtype(spec.dtype).itemsize,
+                    ),
+                    counts=slab_counts,
+                )
+            else:
+                get_codec(codec)  # fail fast on typos
+            self.host_precision[sname] = codec
+            vs = self.rows_per_shard(spec)
+            # scatter rank r's row to flat slot owner[r]*vs + local[r]; pad
+            # rows (flat slots no rank maps to) stay zero and are never read.
+            dest = jnp.asarray(
+                assign.owner.astype(np.int64) * vs + assign.local.astype(np.int64),
+                jnp.int32,
+            )
+            flat = jnp.zeros((S * vs, spec.dim), spec.dtype).at[dest].set(weight)
+            store = HostStore.create({"weight": flat}, codec=codec)
+            full = HostStore(
+                data={k: v.reshape((S, vs) + v.shape[1:]) for k, v in store.data.items()},
+                sideband={
+                    k: v.reshape((S, vs) + v.shape[1:]) for k, v in store.sideband.items()
+                },
+                codec=store.codec,
+                out_dtype=store.out_dtype,
+            )
+            ccfg = self.shard_cache_config(spec)
+            cache0 = cache_lib.init_cache(
+                ccfg, {"weight": jnp.zeros((spec.dim,), spec.dtype)}
+            )
+            cache = jax.tree_util.tree_map(
+                lambda l: jnp.repeat(l[None], S, axis=0), cache0
+            )
+            if warm:
+                full, cache = jax.vmap(
+                    lambda f, c: cache_lib.warmup(ccfg, f, c)
+                )(full, cache)
+            slabs[sname] = ShardedSlab(
+                full=full,
+                cache=cache,
+                idx_map=idx_map,
+                rank_owner=jnp.asarray(assign.owner),
+                rank_local=jnp.asarray(assign.local),
+                routed_lanes=jnp.zeros((S,), jnp.int32),
+            )
+        return CollectionState(slabs=slabs)
+
+    # ----- id routing (the bucketize / all-to-all image) --------------------
+
+    def _route(
+        self, slab: ShardedSlab, raw: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Slab-global raw ids (-1 pad) -> (owning shard, local row), both -1
+        on padding lanes — the routing table of the id exchange."""
+        valid = raw >= 0
+        rank = slab.idx_map.at[jnp.where(valid, raw, 0)].get(mode="fill", fill_value=-1)
+        rank = jnp.where(valid, rank, -1)
+        ok = rank >= 0
+        owner = slab.rank_owner.at[jnp.where(ok, rank, 0)].get(mode="fill", fill_value=-1)
+        local = slab.rank_local.at[jnp.where(ok, rank, 0)].get(mode="fill", fill_value=-1)
+        return jnp.where(ok, owner, -1), jnp.where(ok, local, -1)
+
+    def _bucketize(
+        self, owner: jnp.ndarray, local: jnp.ndarray
+    ) -> jnp.ndarray:
+        """[lanes] routing -> [S, lanes] per-shard local-row image: shard s's
+        row keeps only the lanes it owns (-1 elsewhere).  Sharding the
+        leading axis over ``model`` makes this the id all-to-all payload."""
+        sids = jnp.arange(self.num_shards, dtype=jnp.int32)[:, None]
+        return jnp.where(
+            (owner[None, :] == sids) & (local[None, :] >= 0), local[None, :], -1
+        ).astype(jnp.int32)
+
+    @staticmethod
+    def _combine_slots(per_shard_slots: jnp.ndarray, cap: int) -> jnp.ndarray:
+        """[S, lanes] per-shard slots (-1 off-shard) -> [lanes] combined
+        addresses ``owner * cap + slot`` (-1 pad).  Each valid lane is
+        resident on exactly one shard, so an integer sum of the shifted
+        one-hot encodings is exact — this is the return half of the
+        exchange, folded into address arithmetic."""
+        S = per_shard_slots.shape[0]
+        enc = jnp.where(
+            per_shard_slots >= 0,
+            jnp.arange(S, dtype=jnp.int32)[:, None] * cap + per_shard_slots + 1,
+            0,
+        )
+        return jnp.sum(enc, axis=0) - 1
+
+    def _lookup_combined(
+        self,
+        row_to_slot: jnp.ndarray,  # [S, vocab_s] index image
+        owner: jnp.ndarray,
+        local: jnp.ndarray,
+        cap: int,
+    ) -> jnp.ndarray:
+        """Combined address of each (owner, local) lane under an index image
+        (-1 when not resident on its owner or a padding lane)."""
+        enc = jnp.zeros(owner.shape, jnp.int32)
+        for s in range(self.num_shards):  # S is small and static
+            rs = row_to_slot[s]
+            slot = rs.at[jnp.where(owner == s, local, 0)].get(mode="fill", fill_value=-1)
+            enc = enc + jnp.where((owner == s) & (slot >= 0), s * cap + slot + 1, 0)
+        return enc - 1
+
+    # ----- the non-diff bookkeeping pass ------------------------------------
+
+    def plan_prepare(
+        self,
+        state: CollectionState,
+        fb: FeatureBatch,
+        fb_future: Sequence[FeatureBatch] = (),
+        writeback: bool = True,
+    ) -> ShardedCollectionPlan:
+        """Sharded planning half: translate ids, bucketize them by owning
+        shard, and run one weight-free cache plan per shard (vmapped over the
+        stacked state — on a mesh each shard plans on its own device).
+        Lookahead windows merge per shard exactly like the unsharded path;
+        ``future_unresident`` sums over shards so the pipelined trainer's
+        group guard is sharding-agnostic."""
+        self._check_features(fb, *fb_future)
+        addresses: Dict[str, jnp.ndarray] = {}
+        future_addresses: List[Dict[str, jnp.ndarray]] = [{} for _ in fb_future]
+        future_unresident = jnp.zeros((), jnp.int32)
+
+        for j, b in enumerate((fb, *fb_future)):
+            out = addresses if j == 0 else future_addresses[j - 1]
+            for f in b.features:
+                if self.feature_to_table[f] in self.device_slabs:
+                    out[f] = b.ids[f].astype(jnp.int32)
+
+        slab_plans: Dict[str, cache_lib.CachePlan] = {}
+        routed: Dict[str, jnp.ndarray] = {}
+        for sname, spec in self.cached_slabs.items():
+            raw = self._slab_raw(fb, sname)
+            slab = state.slabs[sname]
+            fut_raws = [self._slab_raw(b, sname) for b in fb_future]
+            if raw is None:
+                # slab touched only by the window: not prefetched (see the
+                # unsharded path) — surface its lanes in the guard instead.
+                for raw_j in fut_raws:
+                    if raw_j is not None:
+                        future_unresident = future_unresident + jnp.sum(
+                            raw_j >= 0
+                        ).astype(jnp.int32)
+                continue
+            cap = self.shard_capacity(spec)
+            owner, local = self._route(slab, raw)
+            rows_sh = self._bucketize(owner, local)  # [S, lanes]
+            routes_fut = [
+                None if p is None else self._route(slab, p) for p in fut_raws
+            ]
+            fut_parts = [
+                self._bucketize(o, l) for o, l in (r for r in routes_fut if r is not None)
+            ]
+            fut_sh = jnp.concatenate(fut_parts, axis=1) if fut_parts else None
+            ccfg = self.shard_cache_config(
+                spec, ids_per_step=int(raw.shape[0]), writeback=writeback
+            )
+            if fut_sh is None:
+                plan = jax.vmap(
+                    lambda st_, r_: cache_lib.plan_prepare(ccfg, st_, r_)
+                )(slab.cache, rows_sh)
+            else:
+                plan = jax.vmap(
+                    lambda st_, r_, f_: cache_lib.plan_prepare(
+                        ccfg, st_, r_, future_rows=f_
+                    )
+                )(slab.cache, rows_sh, fut_sh)
+            slab_plans[sname] = plan
+            routed[sname] = jnp.sum(rows_sh >= 0, axis=1).astype(jnp.int32)
+            combined = self._combine_slots(plan.slots, cap)
+            pos = 0
+            for f, n in self._slab_lanes(fb, sname):
+                addresses[f] = combined[pos : pos + n].reshape(fb.ids[f].shape)
+                pos += n
+            for j, (b, route_j) in enumerate(zip(fb_future, routes_fut)):
+                if route_j is None:
+                    continue
+                o_j, l_j = route_j
+                slots_j = self._lookup_combined(plan.row_to_slot, o_j, l_j, cap)
+                future_unresident = future_unresident + jnp.sum(
+                    (l_j >= 0) & (slots_j < 0)
+                ).astype(jnp.int32)
+                pos = 0
+                for f, n in self._slab_lanes(b, sname):
+                    future_addresses[j][f] = slots_j[pos : pos + n].reshape(
+                        b.ids[f].shape
+                    )
+                    pos += n
+        return ShardedCollectionPlan(
+            slab_plans=slab_plans,
+            routed=routed,
+            addresses=addresses,
+            future_addresses=tuple(future_addresses),
+            future_unresident=future_unresident,
+            writeback=writeback,
+        )
+
+    def apply_plan(
+        self, state: CollectionState, plan: ShardedCollectionPlan
+    ) -> CollectionState:
+        """Execute every shard's planned row movement (vmapped: each shard
+        moves rows between ITS host-store slice and ITS cache arena — no
+        cross-shard traffic) and accumulate the exchange telemetry."""
+        slabs = dict(state.slabs)
+        for sname, p in plan.slab_plans.items():
+            spec = self.cached_slabs[sname]
+            ccfg = self.shard_cache_config(spec, writeback=plan.writeback)
+            slab = slabs[sname]
+            full, cache = jax.vmap(
+                lambda f, c, pp: cache_lib.apply_plan(ccfg, f, c, pp)
+            )(slab.full, slab.cache, p)
+            slabs[sname] = dataclasses.replace(
+                slab,
+                full=full,
+                cache=cache,
+                routed_lanes=slab.routed_lanes + plan.routed[sname],
+            )
+        return CollectionState(slabs=slabs)
+
+    # ----- differentiable read path -----------------------------------------
+
+    def gather(
+        self,
+        weights: Mapping[str, jnp.ndarray],
+        addresses: Mapping[str, jnp.ndarray],
+        fb: FeatureBatch,
+    ) -> Dict[str, jnp.ndarray]:
+        """Gather through the combined address space: the stacked [S, cap,
+        dim] fast tier flattens to [S*cap, dim] and the parent gather serves
+        every lane off it — on a sharded mesh this lowers to the row
+        all-to-all (each lane's row crosses from its owner shard).  Gradients
+        flow back through the same map, landing on the owning shard's slot."""
+        weights = {
+            k: (v.reshape((-1,) + v.shape[2:]) if k in self.cached_slabs else v)
+            for k, v in weights.items()
+        }
+        return super().gather(weights, addresses, fb)
+
+    def pool(self, rows, fb, combiner="sum", *, weights=None, addresses=None,
+             use_pallas=False, max_bag=0):
+        if use_pallas and weights is not None:
+            weights = {
+                k: (v.reshape((-1,) + v.shape[2:]) if k in self.cached_slabs else v)
+                for k, v in weights.items()
+            }
+        return super().pool(rows, fb, combiner, weights=weights,
+                            addresses=addresses, use_pallas=use_pallas,
+                            max_bag=max_bag)
+
+    # weights / apply_grads are inherited: the stacked [S, cap, dim] cached
+    # leaf updates elementwise exactly like the flat one.
+
+    def flush(self, state: CollectionState) -> CollectionState:
+        slabs = dict(state.slabs)
+        for sname, spec in self.cached_slabs.items():
+            ccfg = self.shard_cache_config(spec)
+            slab = slabs[sname]
+            full, cache = jax.vmap(lambda f, c: cache_lib.flush(ccfg, f, c))(
+                slab.full, slab.cache
+            )
+            slabs[sname] = dataclasses.replace(slab, full=full, cache=cache)
+        return CollectionState(slabs=slabs)
+
+    # ----- oracles / bulk reads ---------------------------------------------
+
+    def _rank_rows(self, slab: ShardedSlab, rank: jnp.ndarray) -> jnp.ndarray:
+        """Decoded slow-tier rows for freq ranks (-1 lanes -> zero rows)."""
+        vs = slab.full.data["weight"].shape[1]
+        ok = rank >= 0
+        owner = slab.rank_owner.at[jnp.where(ok, rank, 0)].get(mode="fill", fill_value=-1)
+        local = slab.rank_local.at[jnp.where(ok, rank, 0)].get(mode="fill", fill_value=-1)
+        flat = jnp.where(ok & (owner >= 0), owner * vs + local, -1)
+        return _read_full_rows(flat_store(slab.full), flat)
+
+    def full_lookup(
+        self, state: CollectionState, table: str, local_ids: jnp.ndarray
+    ) -> jnp.ndarray:
+        sname, off = self.table_slab[table]
+        if sname in self.device_slabs:
+            return super().full_lookup(state, table, local_ids)
+        slab = state.slabs[sname]
+        valid = local_ids >= 0
+        rank = slab.idx_map.at[jnp.where(valid, local_ids + off, 0)].get(
+            mode="fill", fill_value=-1
+        )
+        return self._rank_rows(slab, jnp.where(valid, rank, -1))
+
+    def dense_reference(
+        self, state: CollectionState, fb: FeatureBatch
+    ) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for f in fb.features:
+            tname = self.feature_to_table[f]
+            sname, off = self.table_slab[tname]
+            ids = fb.ids[f]
+            flat = ids.reshape(-1)
+            if sname in self.device_slabs:
+                w = state.slabs[sname].weight
+                safe = jnp.where(flat >= 0, flat, w.shape[0])
+                rows = jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
+            else:
+                slab = state.slabs[sname]
+                r = slab.idx_map.at[jnp.where(flat >= 0, flat + off, 0)].get(
+                    mode="fill", fill_value=-1
+                )
+                rows = self._rank_rows(slab, jnp.where(flat >= 0, r, -1))
+            out[f] = rows.reshape(ids.shape + (rows.shape[-1],))
+        return out
+
+    # ----- telemetry / accounting -------------------------------------------
+
+    def metrics(
+        self, state: CollectionState, writeback: bool = True
+    ) -> Dict[str, jnp.ndarray]:
+        """Unsharded telemetry (counters sum over shards) plus the exchange
+        accounting: ``exchange_routed_lanes`` / ``exchange_lane_bytes`` are
+        per-slab cumulative id lanes routed through the bucketize exchange
+        and the per-lane payload (4 B id out + one fast-tier row back) —
+        exact bytes via ``exact_metric_bytes``; ``exchange_bytes`` is the
+        float32 convenience total and ``shard_imbalance`` the max/mean routed
+        load across shards (1.0 = perfectly balanced).  Of the payload, an
+        expected (S-1)/S fraction crosses devices on an S-shard mesh.
+
+        Telemetry caveat (same as hits/misses): under pipelined group
+        scheduling only group leaders run a plan, so routed lanes sample the
+        leaders' batches."""
+        out = super().metrics(state, writeback=writeback)
+        lanes: Dict[str, jnp.ndarray] = {}
+        lane_bytes: Dict[str, jnp.ndarray] = {}
+        xbytes = jnp.zeros((), jnp.float32)
+        per_shard = jnp.zeros((self.num_shards,), jnp.int32)
+        for sname, spec in self.cached_slabs.items():
+            slab = state.slabs[sname]
+            n = jnp.sum(slab.routed_lanes)
+            lanes[sname] = n.astype(jnp.int32)
+            b = 4 + spec.dim * jnp.dtype(spec.dtype).itemsize
+            lane_bytes[sname] = jnp.asarray(b, jnp.int32)
+            xbytes = xbytes + n.astype(jnp.float32) * b
+            per_shard = per_shard + slab.routed_lanes
+        tot = jnp.sum(per_shard)
+        mean = tot.astype(jnp.float32) / self.num_shards
+        out["exchange_routed_lanes"] = lanes
+        out["exchange_lane_bytes"] = lane_bytes
+        out["exchange_bytes"] = xbytes
+        out["shard_imbalance"] = jnp.where(
+            tot > 0, jnp.max(per_shard).astype(jnp.float32) / jnp.maximum(mean, 1e-9), 1.0
+        )
+        return out
+
+    def device_bytes(self) -> Dict[str, int]:
+        """Footprint under the sharded layout.  ``device_total`` counts one
+        REPLICA of the replicated arrays (DEVICE tables, id routing maps)
+        plus the summed stacked arrays; ``device_per_shard`` is what one mesh
+        device actually holds — the budget-relevant number."""
+        S = self.num_shards
+        per_slab: Dict[str, int] = {}
+        replicated = 0
+        stacked = 0
+        slow = slow_fp32 = 0
+        for name, t in self.device_slabs.items():
+            per_slab[name] = t.full_bytes
+            replicated += t.full_bytes
+        for sname, spec in self.cached_slabs.items():
+            item = jnp.dtype(spec.dtype).itemsize
+            vs = self.rows_per_shard(spec)
+            cap = self.shard_capacity(spec)
+            stack = S * (cap * spec.dim * item + cap * 4 * 3 + vs * 4)
+            rep = spec.vocab * 4 * 3  # idx_map + rank_owner + rank_local
+            per_slab[sname] = stack + rep
+            stacked += stack
+            replicated += rep
+            codec = get_codec(self._slab_codec(sname))
+            slow += S * vs * codec.row_bytes((spec.dim,), spec.dtype)
+            slow_fp32 += S * vs * spec.dim * item
+        return {
+            "device_total": replicated + stacked,
+            "device_per_shard": replicated + stacked // max(S, 1),
+            "slow_tier_bytes": slow,
+            "host_bytes_saved": slow_fp32 - slow,
+            "per_slab": per_slab,
+            "budget_bytes": self.plan.budget_bytes,
+        }
+
+    # ----- sharding ----------------------------------------------------------
+
+    def shard_specs(self, mode: str = "shard", model_axis: Optional[str] = None):
+        """PartitionSpec pytree matching the sharded ``CollectionState``:
+        every stacked leaf splits its leading shard dim over the mesh's
+        ``model`` axis, the id-routing maps and DEVICE tables replicate
+        (DEVICE tables train data-parallel with the MLPs).  ``mode`` is
+        accepted for drop-in compatibility with the unsharded signature but
+        the layout is fixed by the shard structure."""
+        from jax.sharding import PartitionSpec as P
+
+        axis = model_axis or self.model_axis
+        slabs: Dict[str, Any] = {}
+        for name in self.device_slabs:
+            slabs[name] = DeviceSlab(weight=P(None, None))
+        for sname, spec in self.cached_slabs.items():
+            like = {"weight": jax.ShapeDtypeStruct((spec.vocab, spec.dim), spec.dtype)}
+            slabs[sname] = ShardedSlab(
+                full=HostStore.spec_like(
+                    like,
+                    {"weight": P(axis, None, None)},
+                    P(axis, None, None),
+                    codec=self._slab_codec(sname),
+                ),
+                cache=cache_lib.CacheState(
+                    cached_rows={"weight": P(axis, None, None)},
+                    slot_to_row=P(axis, None),
+                    row_to_slot=P(axis, None),
+                    last_used=P(axis, None),
+                    use_count=P(axis, None),
+                    step=P(axis),
+                    hits=P(axis),
+                    misses=P(axis),
+                    evictions=P(axis),
+                    uniq_overflows=P(axis),
+                ),
+                idx_map=P(None),
+                rank_owner=P(None),
+                rank_local=P(None),
+                routed_lanes=P(axis),
+            )
+        return CollectionState(slabs=slabs)

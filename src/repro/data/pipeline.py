@@ -30,6 +30,11 @@ class Prefetcher:
     worker has generated them.  ``close()`` stops and *joins* the worker (a
     drain-only shutdown races with a worker that refills after the drain,
     leaking a blocked daemon thread per trainer run).
+
+    End of stream: ``make_batch`` may raise ``StopIteration`` to end a finite
+    stream.  Already-buffered batches stay consumable; ``__next__`` then ends
+    iteration cleanly and ``lookahead`` returns only what remains.  Any other
+    exception is an ERROR and re-raises in the consumer, in stream order.
     """
 
     def __init__(self, make_batch: Callable[[int], Dict], start_step: int = 0, depth: int = 2):
@@ -38,6 +43,7 @@ class Prefetcher:
         self._buf: "collections.deque" = collections.deque()
         self._cv = threading.Condition()
         self._err: Exception | None = None
+        self._done = False  # producer raised StopIteration (clean end)
         self._stop = False
         self._start = start_step
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -53,6 +59,11 @@ class Prefetcher:
                     return
             try:
                 batch = self.make_batch(step)
+            except StopIteration:  # clean end of a finite stream
+                with self._cv:
+                    self._done = True
+                    self._cv.notify_all()
+                return
             except Exception as e:  # surface in consumer, in stream order
                 with self._cv:
                     self._err = e
@@ -65,12 +76,21 @@ class Prefetcher:
                 self._cv.notify_all()
             step += 1
 
+    @property
+    def exhausted(self) -> bool:
+        """True once the producer has cleanly ended the stream (batches may
+        still be buffered — iteration drains them before stopping)."""
+        with self._cv:
+            return self._done
+
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self) -> Tuple[int, Dict]:
         with self._cv:
-            while not self._buf and self._err is None and not self._stop:
+            while (
+                not self._buf and self._err is None and not self._done and not self._stop
+            ):
                 self._cv.wait()
             if self._buf:
                 item = self._buf.popleft()
@@ -78,26 +98,46 @@ class Prefetcher:
                 return item
             if self._err is not None:
                 raise self._err
-            raise StopIteration  # closed
+            raise StopIteration  # stream ended or prefetcher closed
 
     def lookahead(self, k: int) -> List[Tuple[int, Dict]]:
         """Peek the next ``k`` (step, batch) pairs without consuming them.
 
-        Blocks until the worker has generated them; requires ``k <= depth``
-        (the buffer can never hold more).  If the producer errored before
-        filling the window, the error is raised here (already-buffered batches
-        stay consumable through ``__next__``); a short list is returned only
-        when the prefetcher was closed.
+        Contract (the pipelined trainer's group scheduler relies on it):
+
+          * "not yet produced" BLOCKS — the call waits for the worker, it
+            never returns a short list just because generation is behind;
+          * "stream ended" returns the SHORT list of whatever remains
+            (possibly empty) — a result shorter than ``k`` always means the
+            producer finished, so the caller shrinks its final group instead
+            of treating a mid-epoch stall as "no future ids";
+          * a producer ERROR raises here once fewer than ``k`` batches remain
+            (already-buffered batches stay consumable through ``__next__``);
+          * peeking a CLOSED prefetcher raises ``RuntimeError`` — the old
+            behavior (silent short list) was indistinguishable from end of
+            stream.
+
+        Requires ``k <= depth`` (the buffer can never hold more).
         """
         if k <= 0:
             return []
         if k > self.depth:
             raise ValueError(f"lookahead({k}) exceeds prefetch depth {self.depth}")
         with self._cv:
-            while len(self._buf) < k and self._err is None and not self._stop:
+            while (
+                len(self._buf) < k
+                and self._err is None
+                and not self._done
+                and not self._stop
+            ):
                 self._cv.wait()
-            if len(self._buf) < k and self._err is not None:
-                raise self._err
+            if len(self._buf) < k:
+                if self._err is not None:
+                    raise self._err
+                # a cleanly-ended stream keeps its short-list contract even
+                # after close(); only an un-ended (cancelled) stream raises
+                if self._stop and not self._done:
+                    raise RuntimeError("lookahead on a closed Prefetcher")
             return [self._buf[i] for i in range(min(k, len(self._buf)))]
 
     def close(self):

@@ -32,6 +32,7 @@ __all__ = [
     "constrain",
     "split_params",
     "prepend_axis",
+    "hybrid_rules",
 ]
 
 AxisName = Optional[str]
@@ -158,6 +159,17 @@ def split_params(tree: Any) -> Tuple[Any, Any]:
         is_leaf=is_leaf,
     )
     return values, axes
+
+
+def hybrid_rules(
+    data_axis: str = "data", model_axis: str = "model"
+) -> Dict[str, MeshAxes]:
+    """The rule table of the hybrid-parallel recsys layout: the batch shards
+    over ``data`` (dense params replicate and train data-parallel), embedding
+    shards — the leading dim of a ``ShardedEmbeddingCollection``'s stacked
+    slabs — split over ``model``.  Models speak the logical names ("batch",
+    "shard"); launch code binds them to whatever mesh it built."""
+    return {"batch": (data_axis,), "shard": (model_axis,)}
 
 
 def prepend_axis(tree: Any, name: AxisName) -> Any:

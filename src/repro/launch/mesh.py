@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh"]
+__all__ = ["make_production_mesh", "make_mesh", "make_hybrid_mesh"]
 
 
 def _make(shape, axes):
@@ -33,3 +33,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (benchmarks use 1..8-device slices)."""
     return _make(tuple(shape), tuple(axes))
+
+
+def make_hybrid_mesh(model_shards: int, n_devices: int | None = None):
+    """The hybrid-parallel (data, model) mesh for a sharded collection.
+
+    ``model`` gets exactly ``model_shards`` devices (the shard count of a
+    ``ShardedEmbeddingCollection`` must equal the model-axis size so the
+    stacked state splits one shard per device); the remaining factor becomes
+    ``data`` for batch/dense parallelism.  ``n_devices`` defaults to every
+    local device and must be divisible by ``model_shards``.
+    """
+    n = n_devices if n_devices is not None else len(jax.devices())
+    if model_shards < 1 or n % model_shards:
+        raise ValueError(
+            f"{n} devices not divisible into model={model_shards} shards"
+        )
+    return _make((n // model_shards, model_shards), ("data", "model"))

@@ -17,14 +17,19 @@ from repro.data import graphs, synth
 from repro.train.trainer import PipelinedTrainer, Trainer, TrainerConfig
 
 
-def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32"):
+def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
+                   model_shards: int = 0):
+    if model_shards and not arch.startswith("dlrm"):
+        raise SystemExit(f"--model-shards is wired for dlrm archs; {arch} "
+                         f"builds an unsharded collection")
     if arch.startswith("dlrm"):
         from repro.models.dlrm import DLRM, DLRMConfig
 
         cfg = DLRMConfig(vocab_sizes=(100_000, 50_000, 20_000), embed_dim=32,
                          batch_size=batch, cache_ratio=0.02, lr=0.3,
                          bottom_mlp=(64, 32), top_mlp=(64,),
-                         host_precision=host_precision)
+                         host_precision=host_precision,
+                         model_shards=model_shards)
         model = DLRM(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
@@ -76,6 +81,13 @@ def main():
                          "pre-store behavior; fp16/int8 shrink host bytes and "
                          "host<->device traffic; auto = PrecisionPolicy from "
                          "frequency stats (recsys archs only)")
+    ap.add_argument("--model-shards", type=int, default=0,
+                    help="0 = single-device collection; N >= 1 = hybrid "
+                         "parallel: cached embedding slabs shard over N "
+                         "model-axis shards, each with its own cache arena "
+                         "and HostStore slice (dlrm archs; run under a mesh "
+                         "whose model axis has N devices, or on one device "
+                         "for functional testing)")
     args = ap.parse_args()
 
     if args.arch == "gatedgcn":
@@ -99,7 +111,8 @@ def main():
             mod.SMOKE.vocab, 8, 64, 0, s).items()}
         flush = None
     else:
-        model, make, flush = _recsys_runner(args.arch, args.batch, args.host_precision)
+        model, make, flush = _recsys_runner(args.arch, args.batch,
+                                            args.host_precision, args.model_shards)
 
     tc = TrainerConfig(max_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=25,
                        pipeline_depth=args.pipeline_depth)
@@ -133,6 +146,11 @@ def main():
               f"(saved {db['host_bytes_saved']/1e6:.1f} MB vs fp32)")
         if "host_wire_bytes" in h[-1]:
             print(f"host<->device traffic: {h[-1]['host_wire_bytes']/1e6:.1f} MB total")
+        if args.model_shards:
+            imb = h[-1].get("shard_imbalance", 1.0)
+            print(f"hybrid parallel: {args.model_shards} shards, "
+                  f"exchange {h[-1].get('exchange_bytes', 0)/1e6:.1f} MB total, "
+                  f"routed-load imbalance {imb:.2f}x")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,10 @@ class DLRMConfig:
     # (row-wise scale/zero-point) | "auto" (PrecisionPolicy picks per slab
     # from the frequency counts passed to init)
     host_precision: str = "fp32"
+    # 0 = single-device collection; N >= 1 = hybrid parallel: cached slabs
+    # shard over N model-axis shards (each with its own cache arena and
+    # HostStore slice), dense params + DEVICE tables stay data-parallel.
+    model_shards: int = 0
 
     @property
     def n_sparse(self) -> int:
@@ -84,8 +88,7 @@ class DLRM(common.CollectionModelMixin):
             )
             for n, v in zip(self.feature_names, cfg.vocab_sizes)
         ]
-        self.collection = col.EmbeddingCollection.create(
-            tables,
+        common_kw = dict(
             budget_bytes=cfg.device_budget_bytes,
             cache_ratio=cfg.cache_ratio,
             policy=policy,
@@ -93,6 +96,14 @@ class DLRM(common.CollectionModelMixin):
             max_unique_per_step=cfg.max_unique_per_step,
             host_precision=cfg.host_precision,
         )
+        if cfg.model_shards > 0:
+            from repro.core.sharded import ShardedEmbeddingCollection
+
+            self.collection = ShardedEmbeddingCollection.create(
+                tables, num_shards=cfg.model_shards, **common_kw
+            )
+        else:
+            self.collection = col.EmbeddingCollection.create(tables, **common_kw)
 
     # ----- params ----------------------------------------------------------
     def init(self, rng: jax.Array, counts: Optional[np.ndarray] = None) -> Dict[str, Any]:

@@ -83,11 +83,28 @@ class ServeEngine:
         self.stats = ServeStats()
 
     def summary(self) -> Dict[str, float]:
-        """Latency stats plus (when wired) embedding-tier telemetry."""
+        """Latency stats plus (when wired) embedding-tier telemetry.
+
+        Byte counters with exact per-slab representations (see
+        ``collection.exact_metric_bytes``) are recomputed host-side as exact
+        Python ints — the in-jit float32 scalars drift past 2^24 bytes."""
+        from repro.core.collection import exact_metric_bytes
+
         out = dict(self.stats.summary())
         if self.state_stats_fn is not None:
-            for k, v in self.state_stats_fn(self.state).items():
+            stats = self.state_stats_fn(self.state)
+            for k, v in stats.items():
+                if isinstance(v, dict):  # per-slab counter dicts stay internal
+                    continue
                 out[k] = float(jax.device_get(v))
+            wire = exact_metric_bytes(stats, "host_moved_rows", "host_row_bytes")
+            if wire is not None:
+                out["host_wire_bytes"] = wire
+            xchg = exact_metric_bytes(
+                stats, "exchange_routed_lanes", "exchange_lane_bytes"
+            )
+            if xchg is not None:
+                out["exchange_bytes"] = xchg
         return out
 
     def _pad(self, batch: Dict[str, np.ndarray], n: int) -> Dict[str, jnp.ndarray]:

@@ -214,16 +214,18 @@ class HostStore:
 
     # ----- accounting -------------------------------------------------------
 
-    def row_wire_bytes(self) -> int:
+    def row_wire_bytes(self, batch_dims: int = 1) -> int:
         """Encoded bytes per row across all leaves — what one transmitter
-        lane moves over the host link (load or writeback)."""
+        lane moves over the host link (load or writeback).  ``batch_dims``
+        counts the leading non-row dims: 1 for a plain [vocab, ...] store,
+        2 for a shard-stacked [S, vocab_s, ...] one."""
         total = 0
         for k, leaf in self.data.items():
             if self.is_encoded(k):
-                total += self._codec.row_bytes(tuple(leaf.shape[1:]), self._out)
+                total += self._codec.row_bytes(tuple(leaf.shape[batch_dims:]), self._out)
             else:
                 total += int(
-                    np.prod(leaf.shape[1:], dtype=np.int64)
+                    np.prod(leaf.shape[batch_dims:], dtype=np.int64)
                 ) * jnp.dtype(leaf.dtype).itemsize
         return total
 

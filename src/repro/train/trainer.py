@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core.collection import exact_metric_bytes
 from repro.data.pipeline import Prefetcher
 from repro.train import checkpoint as ckpt_lib
 
@@ -137,13 +138,28 @@ class Trainer:
                     f"arena bound for GROUPED tables — exactness violated otherwise)"
                 )
         rec = {"step": step_i, "loss": loss, "time_s": dt}
-        # host_wire_bytes: cumulative host<->device embedding traffic at the
-        # slab's ENCODED row size — the mixed-precision host store's savings
-        # show up here (see EmbeddingCollection.metrics).
         for k in ("auc", "hit_rate", "cache_evictions", "grad_norm", "xent",
-                  "host_wire_bytes"):
+                  "shard_imbalance"):
             if k in metrics:
                 rec[k] = float(jax.device_get(metrics[k]))
+        # host_wire_bytes: cumulative host<->device embedding traffic at the
+        # slab's ENCODED row size — the mixed-precision host store's savings
+        # show up here.  Recorded as an exact Python int from the per-slab
+        # counters (a float32 accumulator loses integer resolution past 2^24
+        # and drifts within ~25 steps at benchmark rates); the in-jit float32
+        # scalar is only the fallback for legacy metrics dicts.
+        wire = exact_metric_bytes(metrics, "host_moved_rows", "host_row_bytes")
+        if wire is not None:
+            rec["host_wire_bytes"] = wire
+        elif "host_wire_bytes" in metrics:
+            rec["host_wire_bytes"] = float(jax.device_get(metrics["host_wire_bytes"]))
+        # exchange_bytes: cumulative id+row all-to-all payload of a sharded
+        # collection (present only when the model's collection is sharded).
+        xchg = exact_metric_bytes(
+            metrics, "exchange_routed_lanes", "exchange_lane_bytes"
+        )
+        if xchg is not None:
+            rec["exchange_bytes"] = xchg
         self.history.append(rec)
         last = step_i + 1 >= cfg.max_steps
         if self.checkpointer and ((step_i + 1) % cfg.ckpt_every == 0 or last):
@@ -246,6 +262,18 @@ class PipelinedTrainer(Trainer):
         self.compute_fn = compute_fn
         self.apply_fn = apply_fn
 
+    @staticmethod
+    def _take(prefetch, n: int) -> list:
+        """Up to ``n`` (step, batch) pairs; a short list means the stream
+        ended (mirrors ``Prefetcher.lookahead``'s contract)."""
+        out = []
+        for _ in range(n):
+            try:
+                out.append(next(prefetch))
+            except StopIteration:
+                break
+        return out
+
     def _check_window(self, plan, group) -> None:
         """A group runs off one merged plan only if every member's rows made
         residency — fail fast with the remedy otherwise."""
@@ -270,7 +298,9 @@ class PipelinedTrainer(Trainer):
             self.make_batch, start_step=start, depth=max(cfg.prefetch_depth, depth)
         )
         try:
-            group = [next(prefetch) for _ in range(min(depth, cfg.max_steps - start))]
+            group = self._take(prefetch, min(depth, cfg.max_steps - start))
+            if not group:  # stream ended before the first step
+                return state
             # prologue: the first group has no shadow to plan under
             plan = self.plan_fn(state, group[0][1], tuple(b for _, b in group[1:]))
             self._check_window(plan, group)
@@ -285,11 +315,16 @@ class PipelinedTrainer(Trainer):
                     if j == 0 and n_next > 0:
                         # dispatch the NEXT group's merged plan before blocking
                         # on any of this group's losses — planning reads only
-                        # ids + index state, so it overlaps the dense compute
+                        # ids + index state, so it overlaps the dense compute.
+                        # A short peek means the STREAM ENDED (the lookahead
+                        # contract): the final group shrinks to what is left
+                        # rather than planning batches that will never come.
                         peek = prefetch.lookahead(n_next)
-                        next_plan = self.plan_fn(
-                            state, peek[0][1], tuple(b for _, b in peek[1:])
-                        )
+                        n_next = len(peek)
+                        if peek:
+                            next_plan = self.plan_fn(
+                                state, peek[0][1], tuple(b for _, b in peek[1:])
+                            )
                     state, metrics = self.compute_fn(state, batch, addrs[j])
                     if j == len(group) - 1 and next_plan is not None:
                         # movement runs after the group's last row update:
@@ -298,7 +333,7 @@ class PipelinedTrainer(Trainer):
                     state = self._post_step(step_i, state, metrics, t0)
                 if next_plan is None:
                     break
-                group = [next(prefetch) for _ in range(n_next)]
+                group = self._take(prefetch, n_next)
                 self._check_window(next_plan, group)
                 addrs = (next_plan.addresses,) + tuple(next_plan.future_addresses)
             if self.checkpointer:

@@ -298,6 +298,55 @@ def test_serve_stats_reservoir_is_bounded():
     assert s["p50_ms"] > 0 and s["p99_ms"] >= s["p50_ms"]
 
 
+def test_host_wire_bytes_exact_past_float32_resolution():
+    """Satellite regression: cumulative wire traffic must accumulate as an
+    exact Python int.  A float32 accumulator loses integer resolution past
+    2^24, so at benchmark rates the old scalar drifted within ~25 steps; the
+    per-slab (moved rows, row bytes) counters reconstruct the exact count."""
+    import dataclasses
+
+    tables = [col.TableConfig("t", vocab=64, dim=8, ids_per_step=8, cache_ratio=0.5,
+                              placement=col.Placement.CACHED)]
+    coll = col.EmbeddingCollection(tables, col.PlacementPlanner(10**9).plan(tables))
+    state = coll.init(jax.random.PRNGKey(0))
+    moved = 2**24 + 1  # row_bytes = 32 -> exact total 2^29 + 32, not a float32
+    slab = state.slabs["t"]
+    state = col.CollectionState(slabs={"t": dataclasses.replace(
+        slab, cache=dataclasses.replace(
+            slab.cache, misses=jnp.asarray(moved, jnp.int32)))})
+    m = coll.metrics(state)
+    expect = moved * 32
+    assert col.exact_metric_bytes(m, "host_moved_rows", "host_row_bytes") == expect
+    # ...and the in-jit float32 convenience scalar demonstrably drifts
+    assert int(m["host_wire_bytes"]) != expect
+
+    # the trainer records the exact int in its host-side history
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    tr = Trainer(TrainerConfig(max_steps=1), init_fn=lambda: None,
+                 step_fn=None, make_batch=None)
+    metrics = dict(m, loss=jnp.asarray(0.0, jnp.float32))
+    tr._post_step(0, state, metrics, t0=0.0)
+    assert tr.history[-1]["host_wire_bytes"] == expect
+    assert isinstance(tr.history[-1]["host_wire_bytes"], int)
+
+
+def test_serve_summary_reports_exact_wire_bytes():
+    """The serve engine's summary must survive (and exploit) the per-slab
+    counter dicts in the metrics pytree."""
+    from repro.serve.engine import ServeEngine
+
+    tables = [col.TableConfig("t", vocab=64, dim=8, ids_per_step=8, cache_ratio=0.5)]
+    coll = col.EmbeddingCollection.create(tables, cache_ratio=0.5)
+    state = {"emb": coll.init(jax.random.PRNGKey(0))}
+    eng = ServeEngine(lambda s, b: (jnp.zeros((1,)), None), state, batch_size=1,
+                      pad_example={},
+                      state_stats_fn=lambda s: coll.metrics(s["emb"], writeback=False))
+    out = eng.summary()
+    assert isinstance(out["host_wire_bytes"], int)
+    assert "host_moved_rows" not in out  # per-slab dicts stay internal
+
+
 def test_single_arena_plan_is_paper_layout():
     """All-GROUPED = the paper's one concatenated freq-ordered table."""
     tables = small_tables()

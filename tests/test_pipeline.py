@@ -300,3 +300,147 @@ def test_prefetcher_surfaces_producer_error_in_order():
         assert next(pf2)[0] == 1  # buffered good batch stays consumable
     finally:
         pf2.close()
+
+
+# --------------------------------------------------------------------------
+# Prefetcher end-of-stream contract (satellite): "stream ended" is a short
+# list, "not yet produced" blocks, "closed" raises
+# --------------------------------------------------------------------------
+
+
+def _finite(n):
+    def make(step):
+        if step >= n:
+            raise StopIteration
+        return {"x": np.asarray([step])}
+    return make
+
+
+def test_prefetcher_lookahead_short_list_means_stream_ended():
+    pf = Prefetcher(_finite(3), depth=4)
+    try:
+        assert next(pf)[0] == 0
+        peek = pf.lookahead(4)  # only steps 1, 2 remain
+        assert [s for s, _ in peek] == [1, 2]
+        assert pf.exhausted
+        assert next(pf)[0] == 1
+        assert next(pf)[0] == 2
+        with pytest.raises(StopIteration):
+            next(pf)
+        assert pf.lookahead(2) == []  # ended and drained: empty, not a hang
+    finally:
+        pf.close()
+    # a cleanly-ended stream keeps the short-list contract after close() too
+    # (only cancelling an un-ended stream turns lookahead into an error)
+    assert pf.lookahead(2) == []
+
+
+def test_prefetcher_iteration_ends_cleanly_on_finite_stream():
+    pf = Prefetcher(_finite(4), depth=2)
+    try:
+        assert [s for s, _ in pf] == [0, 1, 2, 3]  # for-loop just terminates
+        assert pf.exhausted
+    finally:
+        pf.close()
+
+
+def test_prefetcher_lookahead_on_closed_raises():
+    pf = Prefetcher(lambda s: {"x": np.asarray([s])}, depth=2)
+    next(pf)
+    pf.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        pf.lookahead(1)
+
+
+def test_pipelined_trainer_handles_stream_ending_mid_group():
+    """A finite stream shorter than max_steps must end the pipelined run
+    cleanly — the final group shrinks to the remaining batches and the losses
+    still bit-match the serial trainer over the same stream."""
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+    from repro.train.trainer import PipelinedTrainer, Trainer, TrainerConfig
+
+    cfg = DLRMConfig(vocab_sizes=(1024, 128), embed_dim=8, batch_size=16,
+                     cache_ratio=0.25, lr=0.1, bottom_mlp=(16, 8), top_mlp=(16,))
+    spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
+    n_stream = 5  # ends mid-group at depth 3 (groups of 3 + a short tail of 2)
+
+    def make_batch(step):
+        if step >= n_stream:
+            raise StopIteration
+        return {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 16, 0, step).items()}
+
+    model = DLRM(cfg)
+    serial = Trainer(TrainerConfig(max_steps=50),
+                     init_fn=lambda: model.init(jax.random.PRNGKey(0)),
+                     step_fn=jax.jit(model.train_step),
+                     make_batch=make_batch, flush_fn=model.flush)
+    serial.run()
+    assert len(serial.history) == n_stream
+
+    model2 = DLRM(cfg)
+    piped = PipelinedTrainer(
+        TrainerConfig(max_steps=50, pipeline_depth=3),
+        init_fn=lambda: model2.init(jax.random.PRNGKey(0)),
+        plan_fn=jax.jit(model2.plan_step),
+        compute_fn=jax.jit(model2.compute_step),
+        apply_fn=jax.jit(model2.apply_step),
+        make_batch=make_batch, flush_fn=model2.flush)
+    piped.run()
+    assert len(piped.history) == n_stream
+    assert [h["loss"] for h in serial.history] == [h["loss"] for h in piped.history]
+
+
+# --------------------------------------------------------------------------
+# lookahead pin leakage (satellite): pins are plan-local — an abandoned
+# group's prefetched rows are fully reclaimable by the very next plan
+# --------------------------------------------------------------------------
+
+
+def test_abandoned_group_pins_are_cleared_by_next_plan():
+    """Pin a lookahead window, abandon the group (its batch never runs), then
+    present a batch whose uniques fill the whole cache: every slot — the
+    stale-pinned ones included — must be reclaimed, and the new batch stays
+    exact.  A persistent pin would leave its row resident and break this."""
+    coll = _coll(vocab=100, cache_ratio=0.06, ids=6)  # capacity 6 = one batch
+    state = coll.init(jax.random.PRNGKey(0))  # warm: rows 0..5 resident
+    # group leader plans with a future window; 20..22 load and pin
+    state, addr = coll.prepare_lookahead(
+        state, _fb([0, 1, 2, -1, -1, -1]), [_fb([20, 21, 22, -1, -1, -1])]
+    )
+    assert all(_resident(state, r) for r in (20, 21, 22))
+    # the group is abandoned HERE: batch [20, 21, 22] never runs.
+    # next plan needs all 6 slots -> previously-pinned rows must be evictable
+    fb = _fb([30, 31, 32, 33, 34, 35])
+    state, addr = coll.prepare(state, fb)
+    assert all(int(a) >= 0 for a in np.asarray(addr["t"]))
+    assert not any(_resident(state, r) for r in (20, 21, 22))
+    rows = coll.gather(coll.weights(state), addr, fb)
+    ref = coll.dense_reference(coll.flush(state), fb)
+    np.testing.assert_array_equal(np.asarray(rows["t"]), np.asarray(ref["t"]))
+
+
+@pytest.mark.parametrize("policy", ["lru", "runtime_lfu"])
+def test_stale_prefetch_not_above_normal_tier_for_runtime_policies(policy):
+    """Under recency/counter policies a prefetched-then-abandoned row must
+    compete like any resident row (it aged from its load step) — later-used
+    rows outrank it, so it is evicted first under pressure."""
+    from repro.core.policies import Policy
+
+    pol = Policy(policy)
+    coll = _coll(vocab=100, cache_ratio=0.08, ids=4, policy=pol)  # capacity 8
+    state = coll.init(jax.random.PRNGKey(0))
+    # t0: leader plans with window -> 20, 21 prefetched; group abandoned
+    state, _ = coll.prepare_lookahead(
+        state, _fb([0, 1, -1, -1]), [_fb([20, 21, -1, -1])]
+    )
+    # t1..t2: other rows get USED (their recency/use counters pass the stale
+    # prefetch, whose pin no plan renews)
+    for ids in ([2, 3, 4, 5], [2, 3, 4, 5]):
+        state, _ = coll.prepare(state, _fb(ids))
+    # pressure: 4 fresh rows need slots; the stale prefetched pair must be
+    # among the victims before any of the recently-used rows
+    state, addr = coll.prepare(state, _fb([40, 41, 42, 43]))
+    assert all(int(a) >= 0 for a in np.asarray(addr["t"]))
+    assert not _resident(state, 20) and not _resident(state, 21)
+    assert _resident(state, 2) and _resident(state, 3)
