@@ -1,0 +1,120 @@
+"""Hit-rate collapse and recovery under hot-set drift.
+
+The paper's frequency module is static: counts are collected once before
+training and the FREQ_LFU rank never changes.  This benchmark streams a
+``DriftingZipfSpec`` workload — same skew, but the hot set rotates to a
+disjoint id range every ``drift_every`` steps — through one cached table and
+tracks the per-step (windowed) hit rate:
+
+  * ``drift/no_refresh``: after the first phase change the stale ranking
+    keeps thrash-evicting the new hot rows (they sit at cold ranks, so
+    FREQ_LFU victimizes them first) and the hit rate stays collapsed;
+  * ``drift/refresh``: the adaptive engine (online decayed counters +
+    bounded incremental re-ranking every ``refresh_every`` steps) promotes
+    the new hot rows across the capacity boundary and the hit rate recovers.
+
+Both runs consume the identical stream from identical init.  ``derived``
+records the pre-drift rate, the post-drift steady-state of each mode, and
+the refresh pass cost; the JSON harness (``--json BENCH_PR5.json``) makes
+the collapse-vs-recovery gap a tracked number.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SMOKE, Table
+from repro.core import collection as col
+from repro.core.refresh import RefreshConfig
+from repro.data import synth
+
+
+def _steady(rates, lo, hi):
+    window = [r for r in rates[lo:hi] if r is not None]
+    return float(np.mean(window)) if window else 0.0
+
+
+def bench_drift(t: Table):
+    if SMOKE:
+        vocab, dim, batch = 20_000, 8, 512
+        drift_every, ratio, refresh_every, max_swaps = 40, 0.04, 2, 512
+    else:
+        vocab, dim, batch = 400_000, 32, 8192
+        drift_every, ratio, refresh_every, max_swaps = 150, 0.02, 5, 4096
+    spec = synth.DriftingZipfSpec(
+        base=synth.ZipfSparseSpec(vocab_sizes=(vocab,)), drift_every=drift_every
+    )
+    steps = 3 * drift_every  # phase 0 matches the collected counts; 1-2 drift
+    # tracker decay matched to the drift timescale: a newly-hot row must
+    # outweigh the OLD hot set's decayed mass before a refresh promotes it,
+    # so a half-life ~ a fraction of the phase length recovers within a phase
+    table = col.TableConfig("items", vocab, dim, ids_per_step=batch,
+                            cache_ratio=ratio,
+                            freq_half_life=max(drift_every // 8, 1))
+
+    # static frequency stats from a phase-0 scan (the paper's pre-training
+    # collection) — honestly stale after the first phase change.
+    cnt = np.zeros((vocab,), np.int64)
+    for s in range(drift_every):
+        b = synth.drifting_sparse_batch(spec, batch, 0, s)
+        np.add.at(cnt, b["sparse"].reshape(-1).astype(np.int64), 1)
+    counts = {"items": cnt}
+
+    def make_fb(s):
+        b = synth.drifting_sparse_batch(spec, batch, 0, s)
+        return col.FeatureBatch.from_onehot(("items",), jnp.asarray(b["sparse"]))
+
+    def run(with_refresh: bool):
+        coll = col.EmbeddingCollection.create([table], cache_ratio=ratio)
+        state = coll.init(jax.random.PRNGKey(0), counts=counts)
+        prep = jax.jit(lambda st, fb: coll.prepare(st, fb))
+        (sname,) = coll.cached_slabs
+        rates, step_times, refresh_times = [], [], []
+        ph = pm = 0
+        for s in range(steps):
+            fb = make_fb(s)
+            t0 = time.perf_counter()
+            state, _ = prep(state, fb)
+            c = state.slabs[sname].cache
+            h, m = int(jax.device_get(c.hits)), int(jax.device_get(c.misses))
+            step_times.append(time.perf_counter() - t0)
+            dh, dm = h - ph, m - pm
+            ph, pm = h, m
+            rates.append(dh / (dh + dm) if dh + dm else None)
+            if with_refresh and (s + 1) % refresh_every == 0:
+                t0 = time.perf_counter()
+                # min_gain: a cold row must lead by a margin of decayed
+                # mass — suppresses boundary churn (near-tied rows swapping,
+                # and re-faulting, every pass) once the ranking converges
+                state, _ = coll.refresh(
+                    state, RefreshConfig(max_swaps=max_swaps, min_gain=0.25)
+                )
+                refresh_times.append(time.perf_counter() - t0)
+        report = coll.metrics(state)
+        return rates, step_times, refresh_times, report
+
+    rates_no, times_no, _, _ = run(with_refresh=False)
+    rates_rf, times_rf, rtimes, report = run(with_refresh=True)
+
+    # pre-drift steady state (end of phase 0) and post-drift steady states
+    # (the back half of the final phase, after recovery had time to happen)
+    pre = _steady(rates_no, drift_every - drift_every // 3, drift_every)
+    post_no = _steady(rates_no, steps - drift_every // 2, steps)
+    post_rf = _steady(rates_rf, steps - drift_every // 2, steps)
+    trough = min(r for r in rates_rf[drift_every:] if r is not None)
+    med = lambda x: sorted(x)[len(x) // 2]
+    swaps = int(jax.device_get(report["refresh_swaps"]))
+    moved = int(jax.device_get(report["refresh_rows_moved"]))
+
+    t.add("drift/no_refresh", med(times_no) * 1e6,
+          f"hit_pre={pre:.3f} hit_post={post_no:.3f} (stale FREQ_LFU rank)")
+    t.add("drift/refresh", med(times_rf) * 1e6,
+          f"hit_post={post_rf:.3f} trough={trough:.3f} "
+          f"recovered={post_rf - post_no:+.3f} swaps={swaps} "
+          f"rows_moved={moved} refresh_ms={med(rtimes) * 1e3:.1f}")
+
+
+ALL = (bench_drift,)

@@ -64,10 +64,10 @@ def main() -> None:
                          "medians + git sha + timestamp) to a JSON list file")
     args = ap.parse_args()
 
-    from benchmarks import bench_cache_ops, bench_figures, bench_scaling
+    from benchmarks import bench_cache_ops, bench_drift, bench_figures, bench_scaling
     from benchmarks.common import SMOKE, Table
 
-    fns = list(bench_figures.ALL) + list(bench_cache_ops.ALL)
+    fns = list(bench_figures.ALL) + list(bench_cache_ops.ALL) + list(bench_drift.ALL)
     if not args.skip_scaling:
         fns += list(bench_scaling.ALL)
 

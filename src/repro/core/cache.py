@@ -39,6 +39,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import freq as freq_lib
 from repro.core import transmitter
 from repro.core.policies import Policy, eviction_key
 
@@ -77,6 +78,17 @@ class CacheConfig:
     # paper's strict buffer limit).  Overflow — more distinct rows in a batch
     # than the bound — is counted in ``state.uniq_overflows`` and must stay 0
     # for exactness (the trainer asserts this; tests property-check it).
+    freq_half_life: int = 1024  # PLAN CALLS for a row's decayed access
+    # counter (and the rolling hit-rate window) to halve — the adaptive
+    # frequency engine's memory length.  The tracker clock is ``state.step``,
+    # which advances once per ``plan_prepare``: in the serial trainer that is
+    # one trainer step, but under group scheduling (pipeline_depth = k) only
+    # group leaders plan, so the decay timescale stretches to k trainer steps
+    # per tick — divide the half-life by the depth if you tune it to a drift
+    # timescale measured in steps (same clock caveat as the hits/misses
+    # sampling documented in ``plan_prepare``).  Tracking is always on (two
+    # O(K) scatters per plan); the counters only influence behavior when a
+    # ``core.refresh`` pass is invoked, so untouched runs stay bit-identical.
 
     def __post_init__(self):
         if self.capacity < self.unique_size:
@@ -107,6 +119,7 @@ class CacheState:
     misses: jnp.ndarray  # int32 [] unique-row misses (= rows moved host->device)
     evictions: jnp.ndarray  # int32 [] rows written back device->host
     uniq_overflows: jnp.ndarray  # int32 [] steps whose distinct rows > unique_size
+    tracker: freq_lib.FreqTracker  # online decayed per-row counters (core.freq)
 
     def hit_rate(self) -> jnp.ndarray:
         tot = self.hits + self.misses
@@ -133,6 +146,7 @@ def init_cache(cfg: CacheConfig, row_tree_example: Any) -> CacheState:
         misses=jnp.zeros((), jnp.int32),
         evictions=jnp.zeros((), jnp.int32),
         uniq_overflows=jnp.zeros((), jnp.int32),
+        tracker=freq_lib.init_tracker(cfg.vocab),
     )
 
 
@@ -165,6 +179,7 @@ class CachePlan:
     misses: jnp.ndarray
     evictions: jnp.ndarray
     uniq_overflows: jnp.ndarray
+    tracker: freq_lib.FreqTracker  # post-plan decayed-counter image
     # per-lane resident slot for the CURRENT batch (-1 padding)
     slots: jnp.ndarray
 
@@ -249,6 +264,22 @@ def plan_prepare(
         fut_miss = (fut_slots < 0) & fut_valid
         n_fut_miss = jnp.sum(fut_miss)
 
+    # --- online frequency tracking (adaptive engine input) ------------------
+    # The decayed counters ride the dedup this function already paid for:
+    # current uniques count 1 touch, lookahead uniques count 1 touch (under
+    # group scheduling each batch appears exactly once across the group's
+    # merged plans, so per-batch mass is neither lost nor double-counted).
+    # Purely additive state — no planning decision below reads it.
+    step = state.step + 1
+    tracker = freq_lib.tracker_touch(
+        state.tracker, uniq, uniq_valid, step, cfg.freq_half_life
+    )
+    if kf:
+        tracker = freq_lib.tracker_touch(
+            tracker, fut_uniq, fut_valid, step, cfg.freq_half_life
+        )
+    tracker = freq_lib.tracker_observe(tracker, id_hits, n_miss, cfg.freq_half_life)
+
     # --- victim selection (Algorithm 1 lines 15-26) ------------------------
     # "backlist": rows needed now must not be evicted; rows needed in the
     # lookahead window are pinned one tier above (reclaimed only if the
@@ -320,7 +351,6 @@ def plan_prepare(
     )
 
     # --- recency / runtime-frequency bookkeeping ----------------------------
-    step = state.step + 1
     touched_slots = row_to_slot.at[jnp.where(uniq_valid, uniq, 0)].get(mode="fill", fill_value=-1)
     touch = jnp.where(uniq_valid, touched_slots, capacity)
     last_used = state.last_used.at[touch].set(step, mode="drop")
@@ -360,6 +390,7 @@ def plan_prepare(
         misses=state.misses + n_miss.astype(jnp.int32),
         evictions=state.evictions + jnp.sum(evict_active).astype(jnp.int32),
         uniq_overflows=state.uniq_overflows + overflow,
+        tracker=tracker,
         slots=slots,
     )
 
@@ -399,6 +430,7 @@ def apply_plan(
         misses=plan.misses,
         evictions=plan.evictions,
         uniq_overflows=plan.uniq_overflows,
+        tracker=plan.tracker,
     )
     return full_rows, new_state
 

@@ -74,6 +74,7 @@ class CachedEmbeddingConfig:
     max_unique_per_step: int = 0  # 0 = worst case; see CacheConfig
     protect_via_inverse: bool = True  # see CacheConfig (paper isin = False)
     host_precision: str = "fp32"  # host-tier codec: fp32 (bit-exact) | fp16 | int8
+    freq_half_life: int = 1024  # online frequency tracker decay (CacheConfig)
 
     @property
     def vocab(self) -> int:
@@ -101,6 +102,7 @@ class CachedEmbeddingConfig:
             writeback=self.writeback,
             max_unique_per_step=self.max_unique_per_step,
             protect_via_inverse=self.protect_via_inverse,
+            freq_half_life=self.freq_half_life,
         )
 
 
@@ -301,6 +303,7 @@ def shard_specs(
             misses=P(),
             evictions=P(),
             uniq_overflows=P(),
+            tracker=freq_lib.tracker_spec(P),
         ),
         idx_map=P(None),
         offsets=P(None),
@@ -313,7 +316,8 @@ def device_bytes(cfg: CachedEmbeddingConfig) -> dict:
     itemsize = jnp.dtype(cfg.dtype).itemsize
     fast = cfg.capacity * cfg.dim * itemsize  # cached weight
     fast += cfg.capacity * 4 * 3  # slot_to_row, last_used, use_count
-    fast += cfg.vocab * 4 * 2  # row_to_slot + idx_map (index arrays live on device)
+    # row_to_slot + idx_map + frequency-tracker score/last_touch (on device)
+    fast += cfg.vocab * 4 * 4
     slow = cfg.vocab * get_codec(cfg.host_precision).row_bytes((cfg.dim,), cfg.dtype)
     if cfg.rowwise_adagrad:
         fast += cfg.capacity * 4

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core import cache as cache_lib
 from repro.core import freq as freq_lib
+from repro.core import refresh as refresh_lib
 from repro.core.policies import Policy
 from repro.store import HostStore, PrecisionPolicy, SlabGeometry, get_codec
 
@@ -68,6 +69,7 @@ __all__ = [
     "CollectionState",
     "CollectionPlan",
     "exact_metric_bytes",
+    "ExactCounterTotals",
 ]
 
 SHARED_ARENA = "__shared__"
@@ -109,6 +111,12 @@ class TableConfig:
     # to the planner / collection-wide setting.  DEVICE tables have no host
     # tier; GROUPED tables share the arena's codec.
     host_precision: Optional[str] = None
+    # decay half-life (steps) of the online frequency tracker — how fast the
+    # adaptive engine forgets old traffic; match it to the expected drift
+    # timescale (a refresh can only promote a newly-hot row once its fresh
+    # mass outweighs the old hot set's decayed mass).  GROUPED tables use
+    # the arena's value.
+    freq_half_life: int = 1024
 
     @property
     def features(self) -> Tuple[str, ...]:
@@ -194,6 +202,7 @@ class ArenaConfig:
     max_unique_per_step: int = 0
     protect_via_inverse: bool = True
     host_precision: str = "fp32"  # the arena's host-tier codec (shared table)
+    freq_half_life: int = 1024  # online-tracker decay (see TableConfig)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +224,7 @@ class PlacementPlan:
         max_unique_per_step: int = 0,
         protect_via_inverse: bool = True,
         host_precision: str = "fp32",
+        freq_half_life: int = 1024,
     ) -> "PlacementPlan":
         """The paper's layout: every table GROUPED into one shared cache."""
         return cls(
@@ -231,6 +241,7 @@ class PlacementPlan:
                 max_unique_per_step=max_unique_per_step,
                 protect_via_inverse=protect_via_inverse,
                 host_precision=host_precision,
+                freq_half_life=freq_half_life,
             ),
             budget_bytes=None,
         )
@@ -316,10 +327,12 @@ class PlacementPlanner:
     @staticmethod
     def _fast_bytes(t: TableConfig, ratio: float) -> int:
         """Device footprint of one CACHED table at ``ratio`` (weights + per-slot
-        bookkeeping + the vocab-sized index arrays)."""
+        bookkeeping + the vocab-sized index arrays + the online frequency
+        tracker's decayed counters)."""
         cap = min(max(int(ratio * t.vocab), t.unique_size()), t.vocab)
         item = jnp.dtype(t.dtype).itemsize
-        return cap * t.dim * item + cap * 4 * 3 + t.vocab * 4 * 2
+        # vocab-sized: row_to_slot + idx_map + tracker score + last_touch
+        return cap * t.dim * item + cap * 4 * 3 + t.vocab * 4 * 4
 
     def _arena_bytes(self, grouped: Sequence[TableConfig]) -> int:
         if not grouped:
@@ -328,7 +341,7 @@ class PlacementPlanner:
         gids = sum(t.ids_per_step for t in grouped)
         gitem = jnp.dtype(grouped[0].dtype).itemsize
         gcap = min(max(int(self.arena.cache_ratio * gvocab), min(gids, gvocab)), gvocab)
-        return gcap * grouped[0].dim * gitem + gcap * 4 * 3 + gvocab * 4 * 2
+        return gcap * grouped[0].dim * gitem + gcap * 4 * 3 + gvocab * 4 * 4
 
     def plan(
         self,
@@ -611,6 +624,7 @@ class _CachedSlabSpec:
     max_unique_per_step: int
     protect_via_inverse: bool
     host_precision: str = "fp32"  # requested codec; "auto" resolves at init
+    freq_half_life: int = 1024  # online-tracker decay (adaptive engine)
 
     @property
     def vocab(self) -> int:
@@ -658,6 +672,7 @@ class _CachedSlabSpec:
             writeback=writeback,
             max_unique_per_step=self.max_unique_per_step,
             protect_via_inverse=self.protect_via_inverse,
+            freq_half_life=self.freq_half_life,
         )
 
 
@@ -699,6 +714,7 @@ class EmbeddingCollection:
                     max_unique_per_step=t.max_unique_per_step,
                     protect_via_inverse=t.protect_via_inverse,
                     host_precision=p.host_precision or t.host_precision or "fp32",
+                    freq_half_life=t.freq_half_life,
                 )
             else:
                 grouped.append(t)
@@ -715,6 +731,7 @@ class EmbeddingCollection:
                 max_unique_per_step=a.max_unique_per_step,
                 protect_via_inverse=a.protect_via_inverse,
                 host_precision=a.host_precision,
+                freq_half_life=a.freq_half_life,
             )
         # resolved host codec per cached slab ("auto" is re-resolved by init,
         # which needs the frequency counts; shard_specs/device_bytes read this)
@@ -1121,6 +1138,54 @@ class EmbeddingCollection:
             slabs[sname] = cached_slab_flush(spec.cache_config(), slabs[sname])
         return CollectionState(slabs=slabs)
 
+    # ----- adaptive frequency refresh ---------------------------------------
+
+    def refresh(
+        self,
+        state: CollectionState,
+        cfg: Optional[refresh_lib.RefreshConfig] = None,
+        writeback: bool = True,
+    ) -> Tuple[CollectionState, refresh_lib.RefreshReport]:
+        """Re-rank every cached slab from its online decayed counters and
+        apply the bounded incremental permutation (``core.refresh``).
+
+        Host-side, OUTSIDE any jitted step; run it only when no planned
+        addresses are outstanding (the trainers call it between steps /
+        pipeline groups, the serve engine between batches).  Pure reindexing:
+        ``full_lookup``/``dense_reference``/``lookup`` return bitwise the
+        same values immediately before and after the call for fp32 host
+        stores (codec-noise-bounded for fp16/int8, whose swapped dirty rows
+        pay one quantize round trip on the write-back).  Pass
+        ``writeback=False`` for read-only (serve) states, whose resident rows
+        are clean.  Returns the refreshed state plus a ``RefreshReport``; the
+        same counts accumulate in-state (``metrics()``: ``refresh_swaps`` /
+        ``refresh_rows_moved``).
+        """
+        cfg = cfg or refresh_lib.RefreshConfig()
+        slabs = dict(state.slabs)
+        report = refresh_lib.RefreshReport()
+        for sname, spec in self.cached_slabs.items():
+            slabs[sname], stats = refresh_lib.refresh_cached_slab(
+                spec.cache_config(writeback=writeback), slabs[sname], cfg,
+                writeback=writeback,
+            )
+            report.add(sname, stats)
+        return CollectionState(slabs=slabs), report
+
+    def collect_counts_stream(
+        self, stream, max_batches: Optional[int] = None
+    ) -> Dict[str, np.ndarray]:
+        """``freq.collect_counts_stream`` with this collection's feature ->
+        table routing and vocab sizes filled in: per-table counts straight
+        off a ``Prefetcher`` / ``FeatureBatch`` iterator, ready for
+        ``init(counts=...)``."""
+        return freq_lib.collect_counts_stream(
+            stream,
+            self.feature_to_table,
+            {t.name: t.vocab for t in self.tables.values()},
+            max_batches=max_batches,
+        )
+
     # ----- oracles / bulk reads ---------------------------------------------
 
     def full_lookup(
@@ -1187,15 +1252,25 @@ class EmbeddingCollection:
         sizes from which :func:`exact_metric_bytes` reconstructs the exact
         cumulative byte count host-side (what the trainer records)."""
         hits = misses = evictions = overflows = 0
+        win_h = win_m = jnp.zeros((), jnp.float32)
+        ref_swaps = ref_rows = jnp.zeros((), jnp.int32)
         wire = jnp.zeros((), jnp.float32)
         moved_rows: Dict[str, jnp.ndarray] = {}
         row_bytes_map: Dict[str, jnp.ndarray] = {}
+        slab_hits: Dict[str, jnp.ndarray] = {}
+        slab_misses: Dict[str, jnp.ndarray] = {}
         for sname, spec in self.cached_slabs.items():
             c = state.slabs[sname].cache
             hits = hits + jnp.sum(c.hits)
             misses = misses + jnp.sum(c.misses)
             evictions = evictions + jnp.sum(c.evictions)
             overflows = overflows + jnp.sum(c.uniq_overflows)
+            slab_hits[sname] = jnp.sum(c.hits).astype(jnp.int32)
+            slab_misses[sname] = jnp.sum(c.misses).astype(jnp.int32)
+            win_h = win_h + jnp.sum(c.tracker.win_hits)
+            win_m = win_m + jnp.sum(c.tracker.win_misses)
+            ref_swaps = ref_swaps + jnp.sum(c.tracker.refresh_swaps)
+            ref_rows = ref_rows + jnp.sum(c.tracker.refresh_rows)
             full = state.slabs[sname].full
             row_bytes = (
                 full.row_wire_bytes(batch_dims=full.data["weight"].ndim - 1)
@@ -1207,14 +1282,29 @@ class EmbeddingCollection:
             row_bytes_map[sname] = jnp.asarray(row_bytes, jnp.int32)
             wire = wire + jnp.sum(moved).astype(jnp.float32) * row_bytes
         tot = hits + misses
+        win_tot = win_h + win_m
         return {
             "hit_rate": jnp.where(tot > 0, hits / jnp.maximum(tot, 1), 0.0),
+            # drift telemetry: the exponentially-windowed hit rate reacts to a
+            # hot-set shift within ~one half-life, long before the cumulative
+            # rate moves; refresh_* count the adaptive engine's rank churn
+            # (swapped pairs) and slow-tier rows it permuted.
+            "window_hit_rate": jnp.where(
+                win_tot > 0, win_h / jnp.maximum(win_tot, 1e-9), 0.0
+            ),
+            "refresh_swaps": ref_swaps,
+            "refresh_rows_moved": ref_rows,
             "cache_misses": jnp.asarray(misses),
             "cache_evictions": jnp.asarray(evictions),
             "uniq_overflows": jnp.asarray(overflows),
             "host_wire_bytes": wire,
             "host_moved_rows": moved_rows,
             "host_row_bytes": row_bytes_map,
+            # per-slab cumulative int32 counters: wrap-free exact totals are
+            # reconstructed host-side (``ExactCounterTotals``) — the int32
+            # scalars above wrap past 2^31 on long runs.
+            "slab_hits": slab_hits,
+            "slab_misses": slab_misses,
         }
 
     def _slab_codec(self, sname: str) -> str:
@@ -1236,7 +1326,8 @@ class EmbeddingCollection:
             item = jnp.dtype(spec.dtype).itemsize
             fast = spec.capacity * spec.dim * item
             fast += spec.capacity * 4 * 3  # slot_to_row, last_used, use_count
-            fast += spec.vocab * 4 * 2  # row_to_slot + idx_map
+            # row_to_slot + idx_map + tracker (score + last_touch)
+            fast += spec.vocab * 4 * 4
             per_slab[sname] = fast
             codec = get_codec(self._slab_codec(sname))
             slow += spec.vocab * codec.row_bytes((spec.dim,), spec.dtype)
@@ -1289,6 +1380,7 @@ class EmbeddingCollection:
                     misses=P(),
                     evictions=P(),
                     uniq_overflows=P(),
+                    tracker=freq_lib.tracker_spec(P),
                 ),
                 idx_map=P(None),
             )
@@ -1312,3 +1404,37 @@ def exact_metric_bytes(
     counts = jax.device_get(metrics[counts_key])
     unit = jax.device_get(metrics[bytes_key])
     return sum(int(counts[k]) * int(unit[k]) for k in counts)
+
+
+class ExactCounterTotals:
+    """Wrap-free exact totals over cumulative int32 device counters.
+
+    The in-jit ``hits``/``misses`` accumulators are int32 (x64 is off) and
+    WRAP past 2^31 on long runs — the same class of silent drift the float32
+    ``host_wire_bytes`` scalar had (see :func:`exact_metric_bytes`).  The fix
+    mirrors that pattern host-side: feed each observation of the per-slab
+    cumulative counters (``metrics()['slab_hits']`` / ``['slab_misses']``)
+    to :meth:`update`; the per-interval DELTA is recovered modulo 2^32 —
+    exact whenever fewer than 2^31 events happen between observations, which
+    one step can never exceed — and summed in Python integers.  Totals count
+    from the first observation's raw value (exact for fresh states; a state
+    restored with an already-wrapped counter under-reports only the
+    pre-restore portion).  Idempotent under repeated observation of the same
+    values (delta 0), so summaries may call it freely.
+    """
+
+    def __init__(self):
+        self._prev: Dict[str, int] = {}
+        self._total: Dict[str, int] = {}
+
+    def update(self, per_slab: Mapping[str, Any]) -> int:
+        for k, v in per_slab.items():
+            cur = int(jax.device_get(v))
+            delta = (cur - self._prev.get(k, 0)) % (1 << 32)
+            self._prev[k] = cur
+            self._total[k] = self._total.get(k, 0) + delta
+        return self.total
+
+    @property
+    def total(self) -> int:
+        return sum(self._total.values())

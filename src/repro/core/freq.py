@@ -1,28 +1,48 @@
-"""Static frequency module (paper §4.2).
+"""Frequency module: the paper's static pass (§4.2) plus an online tracker.
 
-Collects id-frequency statistics of the target dataset *before* training,
-reorders the embedding table rows from most- to least-frequent, and builds
-``idx_map`` (raw id -> frequency-ranked row index).  With rows ordered this
-way, LFU eviction degenerates to "evict the largest row index" (paper §4.3),
-which is a single masked argsort on device.
+Static half — collects id-frequency statistics of the target dataset *before*
+training, reorders the embedding table rows from most- to least-frequent, and
+builds ``idx_map`` (raw id -> frequency-ranked row index).  With rows ordered
+this way, LFU eviction degenerates to "evict the largest row index" (paper
+§4.3), which is a single masked argsort on device.  These functions are
+host-side / numpy (they run once, before training); the resulting arrays are
+placed on device and consumed by ``core.cache``.
 
-All functions here are host-side / numpy (they run once, before training);
-the resulting arrays are placed on device and consumed by ``core.cache``.
+Online half — :class:`FreqTracker`, a device-resident pytree of per-ranked-row
+exponentially-decayed access counters.  ``core.cache.plan_prepare`` updates it
+in-jit from the ids it already deduplicates (two O(K) gathers + scatters per
+step — near-zero marginal cost, vmap-safe so the sharded collection tracks per
+shard for free).  Decay is LAZY: a row's stored score is exact as of its
+``last_touch`` step, and :func:`decayed_scores` normalizes all rows to a
+common step when ``core.refresh`` re-ranks.  The tracker also keeps an
+exponentially-windowed hit/miss pair (the rolling-window hit rate that makes
+hot-set drift visible long before the cumulative rate moves) and the
+cumulative refresh telemetry (rank churn / rows moved) that
+``EmbeddingCollection.metrics`` reports.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional, Sequence
+from typing import Any, Dict, Iterable, Mapping, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "FreqStats",
+    "FreqTracker",
     "collect_counts",
     "collect_counts_sampled",
+    "collect_counts_stream",
     "build_freq_stats",
     "concat_table_offsets",
     "coverage",
+    "init_tracker",
+    "tracker_spec",
+    "tracker_touch",
+    "tracker_observe",
+    "decayed_scores",
 ]
 
 
@@ -118,3 +138,158 @@ def coverage(counts: np.ndarray, top_fracs: Sequence[float]) -> dict:
     """Paper Fig. 2 statistic: access share of the top-x%% hottest ids."""
     stats = build_freq_stats(counts)
     return {f: stats.top_fraction_coverage(f) for f in top_fracs}
+
+
+def collect_counts_stream(
+    stream: Iterable,
+    feature_to_table: Mapping[str, str],
+    vocab_sizes: Mapping[str, int],
+    max_batches: Optional[int] = None,
+) -> Dict[str, np.ndarray]:
+    """Collect per-table id counts straight off a stream of keyed batches.
+
+    Unlike :func:`collect_counts`, nothing is materialized: ``stream`` may be
+    a ``data.pipeline.Prefetcher`` (yielding ``(step, batch)`` pairs) or any
+    iterator of ``FeatureBatch``-like objects (anything with an ``.ids``
+    mapping) or plain ``{feature: id array}`` dicts.  The stream ends by the
+    Prefetcher end-of-stream contract: the producer raises ``StopIteration``
+    and iteration stops cleanly (``max_batches`` bounds the scan for infinite
+    streams; producer errors re-raise here, in stream order).
+
+    ``feature_to_table`` routes each feature's ids to its owning table's
+    count vector (several features may share a table); features absent from
+    the mapping (labels, dense fields) are skipped.  Negative ids (padding)
+    are ignored.  Returns the ``{table: int64 [vocab]}`` dict that
+    ``EmbeddingCollection.init(counts=...)`` expects.
+    """
+    counts = {t: np.zeros((v,), np.int64) for t, v in vocab_sizes.items()}
+    n = 0
+    for item in stream:
+        if max_batches is not None and n >= max_batches:
+            break
+        batch = item[1] if isinstance(item, tuple) else item
+        ids = getattr(batch, "ids", batch)
+        for f, arr in ids.items():
+            table = feature_to_table.get(f)
+            if table is None:
+                continue
+            a = np.asarray(arr).reshape(-1).astype(np.int64)
+            a = a[a >= 0]
+            np.add.at(counts[table], a, 1)
+        n += 1
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# online tracker (device-resident, updated in-jit by ``cache.plan_prepare``)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FreqTracker:
+    """Per-ranked-row exponentially-decayed access counters + drift telemetry.
+
+    ``score[r]`` is the decayed access mass of frequency-ranked row ``r`` as
+    of step ``last_touch[r]`` (lazy decay: untouched rows pay nothing per
+    step; readers normalize via :func:`decayed_scores`).  ``win_hits`` /
+    ``win_misses`` are the same-decay rolling window over the cache's
+    id-hit / unique-miss telemetry.  ``refresh_swaps`` / ``refresh_rows`` are
+    cumulative counters stamped host-side by ``core.refresh`` (rank pairs
+    swapped, host rows permuted) so drift telemetry flows through the normal
+    in-jit ``metrics()`` path.  Leaves vmap over a leading shard axis; in the
+    sharded collection the per-shard counters sum exactly (refresh stamps
+    per-shard shares).
+    """
+
+    score: jnp.ndarray  # float32 [vocab] decayed mass, exact at last_touch
+    last_touch: jnp.ndarray  # int32 [vocab] step of the last update
+    win_hits: jnp.ndarray  # float32 [] decayed id-hit window
+    win_misses: jnp.ndarray  # float32 [] decayed unique-miss window
+    refresh_swaps: jnp.ndarray  # int32 [] cumulative swapped rank pairs
+    refresh_rows: jnp.ndarray  # int32 [] cumulative host rows moved by refresh
+
+
+def init_tracker(vocab: int) -> FreqTracker:
+    return FreqTracker(
+        score=jnp.zeros((vocab,), jnp.float32),
+        last_touch=jnp.zeros((vocab,), jnp.int32),
+        win_hits=jnp.zeros((), jnp.float32),
+        win_misses=jnp.zeros((), jnp.float32),
+        refresh_swaps=jnp.zeros((), jnp.int32),
+        refresh_rows=jnp.zeros((), jnp.int32),
+    )
+
+
+def tracker_spec(P, axis: Optional[str] = None) -> FreqTracker:
+    """PartitionSpec mirror of :func:`init_tracker` for ``shard_specs`` trees
+    — the ONE place that must track the dataclass's leaf set.  ``axis=None``
+    replicates (unsharded collections); a mesh-axis name shards the leading
+    per-shard dim of every leaf (stacked sharded collections)."""
+    if axis is None:
+        return FreqTracker(
+            score=P(None), last_touch=P(None),
+            win_hits=P(), win_misses=P(),
+            refresh_swaps=P(), refresh_rows=P(),
+        )
+    return FreqTracker(
+        score=P(axis, None), last_touch=P(axis, None),
+        win_hits=P(axis), win_misses=P(axis),
+        refresh_swaps=P(axis), refresh_rows=P(axis),
+    )
+
+
+def tracker_touch(
+    tracker: FreqTracker,
+    rows: jnp.ndarray,
+    valid: jnp.ndarray,
+    step: jnp.ndarray,
+    half_life: int,
+) -> FreqTracker:
+    """O(K) in-jit decayed-counter bump for one DEDUPED row set.
+
+    ``rows`` must be unique among its valid lanes (the ``jnp.unique`` output
+    ``plan_prepare`` already holds) — the scatter writes one value per row.
+    Each touched row's stored score is first decayed from its own
+    ``last_touch`` to ``step`` (lazy decay), then incremented by 1.
+    """
+    vocab = tracker.score.shape[0]
+    safe = jnp.where(valid, rows, 0)
+    prev = tracker.score[safe]
+    last = tracker.last_touch[safe]
+    dt = jnp.maximum(step - last, 0).astype(jnp.float32)
+    bumped = prev * jnp.exp2(-dt / half_life) + 1.0
+    dest = jnp.where(valid, rows, vocab)  # invalid lanes dropped OOB
+    return dataclasses.replace(
+        tracker,
+        score=tracker.score.at[dest].set(bumped, mode="drop"),
+        last_touch=tracker.last_touch.at[dest].set(step, mode="drop"),
+    )
+
+
+def tracker_observe(
+    tracker: FreqTracker,
+    hits: jnp.ndarray,
+    misses: jnp.ndarray,
+    half_life: int,
+) -> FreqTracker:
+    """Fold one plan's hit/miss telemetry into the rolling window."""
+    d = jnp.float32(2.0 ** (-1.0 / half_life))
+    return dataclasses.replace(
+        tracker,
+        win_hits=tracker.win_hits * d + hits.astype(jnp.float32),
+        win_misses=tracker.win_misses * d + misses.astype(jnp.float32),
+    )
+
+
+def decayed_scores(
+    score: Any, last_touch: Any, step: int, half_life: int
+) -> np.ndarray:
+    """Host-side normalization: every row's decayed mass AS OF ``step``.
+
+    ``core.refresh`` calls this on device_get'd tracker leaves before ranking;
+    float64 so the comparison that picks swap pairs is not re-quantized.
+    """
+    s = np.asarray(score, np.float64)
+    lt = np.asarray(last_touch, np.float64)
+    return s * np.exp2(-np.maximum(step - lt, 0.0) / half_life)

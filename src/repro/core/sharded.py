@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import cache as cache_lib
 from repro.core import freq as freq_lib
+from repro.core import refresh as refresh_lib
 from repro.core.collection import (
     ArenaConfig,
     CollectionState,
@@ -205,6 +206,7 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             writeback=writeback,
             max_unique_per_step=spec.max_unique_per_step,
             protect_via_inverse=spec.protect_via_inverse,
+            freq_half_life=spec.freq_half_life,
         )
 
     # ----- init -------------------------------------------------------------
@@ -522,6 +524,35 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             slabs[sname] = dataclasses.replace(slab, full=full, cache=cache)
         return CollectionState(slabs=slabs)
 
+    # ----- adaptive frequency refresh ---------------------------------------
+
+    def refresh(
+        self,
+        state: CollectionState,
+        cfg: Optional[refresh_lib.RefreshConfig] = None,
+        writeback: bool = True,
+    ) -> Tuple[CollectionState, refresh_lib.RefreshReport]:
+        """Sharded re-ranking refresh (see ``EmbeddingCollection.refresh``).
+
+        The incremental permutation is planned GLOBALLY from the merged
+        per-shard decayed counters, then applied as content exchanges between
+        the swapped ranks' fixed ``(owner, local)`` homes — the traffic
+        balance ``assign_devices`` placed on the hot homes is inherited by
+        the newly-hot rows.  Cross-shard exchanges are metered by
+        ``cfg.exchange_budget`` (rows per refresh; excess pairs defer to the
+        next pass).  With one shard the pass is bit-identical to the
+        unsharded refresh."""
+        cfg = cfg or refresh_lib.RefreshConfig()
+        slabs = dict(state.slabs)
+        report = refresh_lib.RefreshReport()
+        for sname, spec in self.cached_slabs.items():
+            slabs[sname], stats = refresh_lib.refresh_sharded_slab(
+                self.shard_cache_config(spec, writeback=writeback),
+                slabs[sname], cfg, writeback=writeback,
+            )
+            report.add(sname, stats)
+        return CollectionState(slabs=slabs), report
+
     # ----- oracles / bulk reads ---------------------------------------------
 
     def _rank_rows(self, slab: ShardedSlab, rank: jnp.ndarray) -> jnp.ndarray:
@@ -625,7 +656,8 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             item = jnp.dtype(spec.dtype).itemsize
             vs = self.rows_per_shard(spec)
             cap = self.shard_capacity(spec)
-            stack = S * (cap * spec.dim * item + cap * 4 * 3 + vs * 4)
+            # per shard: arena + slot bookkeeping + row_to_slot + tracker
+            stack = S * (cap * spec.dim * item + cap * 4 * 3 + vs * 4 * 3)
             rep = spec.vocab * 4 * 3  # idx_map + rank_owner + rank_local
             per_slab[sname] = stack + rep
             stacked += stack
@@ -677,6 +709,7 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
                     misses=P(axis),
                     evictions=P(axis),
                     uniq_overflows=P(axis),
+                    tracker=freq_lib.tracker_spec(P, axis=axis),
                 ),
                 idx_map=P(None),
                 rank_owner=P(None),

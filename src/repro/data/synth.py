@@ -14,7 +14,15 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["ZipfSparseSpec", "sparse_batch", "seq_batch", "recsys_batch", "count_stream"]
+__all__ = [
+    "ZipfSparseSpec",
+    "DriftingZipfSpec",
+    "sparse_batch",
+    "drifting_sparse_batch",
+    "seq_batch",
+    "recsys_batch",
+    "count_stream",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,14 +46,27 @@ def _zipf_ids(rng: np.random.Generator, vocab: int, size, a: float) -> np.ndarra
 
 
 def sparse_batch(
-    spec: ZipfSparseSpec, batch: int, seed: int, step: int
+    spec: ZipfSparseSpec,
+    batch: int,
+    seed: int,
+    step: int,
+    id_shift: Optional[np.ndarray] = None,
 ) -> Dict[str, np.ndarray]:
-    """Criteo-style batch: one id per field + dense features + clicky label."""
+    """Criteo-style batch: one id per field + dense features + clicky label.
+
+    ``id_shift`` (optional int64 [fields]) rotates each field's id space by a
+    per-field offset AFTER popularity sampling and BEFORE the label model —
+    the popularity RANKING moves but the skew shape doesn't, which is how
+    :func:`drifting_sparse_batch` models hot-set drift.  ``None`` is
+    bit-identical to the historical generator (same rng draw order)."""
     rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
     f = len(spec.vocab_sizes)
     sparse = np.stack(
         [_zipf_ids(rng, v, batch, spec.zipf_a) for v in spec.vocab_sizes], axis=1
     ).astype(np.int32)
+    if id_shift is not None:
+        vocabs = np.asarray(spec.vocab_sizes, dtype=np.int64)
+        sparse = ((sparse.astype(np.int64) + id_shift) % vocabs).astype(np.int32)
     out: Dict[str, np.ndarray] = {"sparse": sparse}
     if spec.n_dense:
         out["dense"] = rng.normal(size=(batch, spec.n_dense)).astype(np.float32)
@@ -54,6 +75,46 @@ def sparse_batch(
     noise = rng.normal(scale=0.3, size=batch)
     out["label"] = ((h + noise) > 0.5).astype(np.float32)
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftingZipfSpec:
+    """A Zipf sparse stream whose HOT SET moves: every ``drift_every`` steps
+    the popularity ranking rotates by ``shift_fraction`` of each vocab (phase
+    ``p`` maps sampled popularity-rank ``r`` to id ``(r + p * shift) % vocab``).
+
+    The skew shape (coverage curve) is phase-invariant — only WHICH ids are
+    hot changes, making this the canonical stress case for the static
+    frequency module (its FREQ_LFU rank goes stale at every phase change) and
+    the recovery case for the adaptive refresh engine.  Still step-seeded:
+    batch ``i`` is a pure function of (seed, i), so checkpoint-resume stays
+    exact and every data rank derives the same stream.
+    """
+
+    base: ZipfSparseSpec
+    drift_every: int = 200  # steps per popularity phase
+    shift_fraction: float = 0.37  # hot-set rotation per phase (per vocab);
+    # irrational-ish so successive phases' hot sets don't re-align quickly
+
+    def shifts(self, step: int) -> np.ndarray:
+        """Per-field id rotation of the phase containing ``step``."""
+        phase = step // self.drift_every
+        vocabs = np.asarray(self.base.vocab_sizes, dtype=np.int64)
+        per_phase = np.maximum(
+            (self.shift_fraction * vocabs).astype(np.int64), 1
+        )
+        return (phase * per_phase) % vocabs
+
+
+def drifting_sparse_batch(
+    spec: DriftingZipfSpec, batch: int, seed: int, step: int
+) -> Dict[str, np.ndarray]:
+    """``sparse_batch`` under hot-set drift: same skew, rotating hot ids.
+
+    Phase 0 (``step < drift_every``) is bit-identical to the un-drifted
+    generator, so frequency stats collected there are honestly stale — not
+    merely wrong — after the first phase change."""
+    return sparse_batch(spec.base, batch, seed, step, id_shift=spec.shifts(step))
 
 
 def recsys_batch(

@@ -14,17 +14,29 @@ from repro.serve.engine import ServeEngine
 
 
 def main():
+    from repro.launch.train import cache_policy
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mind", choices=["mind", "din", "dlrm-criteo"])
     ap.add_argument("--requests", type=int, default=2000)
     ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--cache-policy", default=None,
+                    choices=["freq_lfu", "lru", "runtime_lfu", "uvm_row"],
+                    help="cache eviction policy (core.policies.Policy); "
+                         "default = the model's (freq_lfu)")
+    ap.add_argument("--refresh-interval", type=int, default=0,
+                    help="0 = static ranking; N = adaptive frequency engine: "
+                         "re-rank the read-only cache from online decayed "
+                         "counters every N scored batches (pure reindexing — "
+                         "scores unchanged, hit rate adapts to traffic)")
     args = ap.parse_args()
+    policy = cache_policy(args.cache_policy)
 
     if args.arch == "mind":
         from repro.models.recsys_models import MINDConfig, MINDModel
 
         cfg = MINDConfig(n_items=200_000, n_users=20_000, embed_dim=32, seq_len=50,
-                         batch_size=args.batch, cache_ratio=0.05)
+                         batch_size=args.batch, cache_ratio=0.05, policy=policy)
         model = MINDModel(cfg)
         pad = {"hist_items": np.zeros((cfg.seq_len,), np.int32),
                "hist_len": np.zeros((), np.int32), "user": np.zeros((), np.int32),
@@ -35,7 +47,8 @@ def main():
         from repro.models.recsys_models import DINConfig, DINModel
 
         cfg = DINConfig(n_items=200_000, n_cates=20_000, n_users=20_000, embed_dim=18,
-                        seq_len=50, batch_size=args.batch, cache_ratio=0.05)
+                        seq_len=50, batch_size=args.batch, cache_ratio=0.05,
+                        policy=policy)
         model = DINModel(cfg)
         pad = {k: np.zeros(s, np.int32) for k, s in (
             ("hist_items", (cfg.seq_len,)), ("hist_cates", (cfg.seq_len,)),
@@ -47,7 +60,8 @@ def main():
         from repro.models.dlrm import DLRM, DLRMConfig
 
         cfg = DLRMConfig(vocab_sizes=(100_000, 50_000), embed_dim=32, batch_size=args.batch,
-                         cache_ratio=0.05, bottom_mlp=(64, 32), top_mlp=(64,))
+                         cache_ratio=0.05, bottom_mlp=(64, 32), top_mlp=(64,),
+                         policy=policy)
         model = DLRM(cfg)
         pad = {"dense": np.zeros((13,), np.float32), "sparse": np.zeros((2,), np.int32),
                "label": np.zeros((), np.float32)}
@@ -58,6 +72,10 @@ def main():
     engine = ServeEngine(
         model.serve_step, state, batch_size=args.batch, pad_example=pad,
         state_stats_fn=lambda s: model.collection.metrics(s["emb"], writeback=False),
+        # read-only cache: resident rows are clean, the re-rank skips writebacks
+        refresh_fn=(lambda s: model.refresh(s, writeback=False))
+        if args.refresh_interval else None,
+        refresh_every=args.refresh_interval or None,
     )
     n = 0
     step = 0

@@ -17,8 +17,15 @@ from repro.data import graphs, synth
 from repro.train.trainer import PipelinedTrainer, Trainer, TrainerConfig
 
 
+def cache_policy(name):
+    """CLI string -> ``core.Policy`` (None passes the model default through)."""
+    from repro.core.policies import Policy
+
+    return Policy(name) if name else None
+
+
 def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
-                   model_shards: int = 0):
+                   model_shards: int = 0, policy=None):
     if model_shards and not arch.startswith("dlrm"):
         raise SystemExit(f"--model-shards is wired for dlrm archs; {arch} "
                          f"builds an unsharded collection")
@@ -29,7 +36,7 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
                          batch_size=batch, cache_ratio=0.02, lr=0.3,
                          bottom_mlp=(64, 32), top_mlp=(64,),
                          host_precision=host_precision,
-                         model_shards=model_shards)
+                         model_shards=model_shards, policy=policy)
         model = DLRM(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
@@ -37,7 +44,8 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
         from repro.models.recsys_models import FMConfig, FMModel
 
         cfg = FMConfig(vocab_sizes=(100_000,) * 6, embed_dim=10, batch_size=batch,
-                       cache_ratio=0.02, host_precision=host_precision)
+                       cache_ratio=0.02, host_precision=host_precision,
+                       policy=policy)
         model = FMModel(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
@@ -48,14 +56,14 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
         if arch == "mind":
             cfg = MINDConfig(n_items=200_000, n_users=20_000, embed_dim=32,
                              seq_len=50, batch_size=batch, cache_ratio=0.05,
-                             host_precision=host_precision)
+                             host_precision=host_precision, policy=policy)
             model = MINDModel(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
                 cfg.n_items, cfg.n_users, cfg.seq_len, batch, 0, s).items()}
         else:
             kw = dict(n_items=200_000, n_cates=20_000, n_users=20_000, embed_dim=18,
                       seq_len=50, batch_size=batch, cache_ratio=0.05,
-                      host_precision=host_precision)
+                      host_precision=host_precision, policy=policy)
             cfg = DINConfig(**kw) if arch == "din" else DIENConfig(gru_dim=36, **kw)
             model = (DINModel if arch == "din" else DIENModel)(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
@@ -88,6 +96,19 @@ def main():
                          "and HostStore slice (dlrm archs; run under a mesh "
                          "whose model axis has N devices, or on one device "
                          "for functional testing)")
+    ap.add_argument("--cache-policy", default=None,
+                    choices=["freq_lfu", "lru", "runtime_lfu", "uvm_row"],
+                    help="cache eviction policy (core.policies.Policy): "
+                         "freq_lfu = the paper's static frequency rank "
+                         "(default), lru / uvm_row = recency, runtime_lfu = "
+                         "online counters (recsys archs only)")
+    ap.add_argument("--refresh-interval", type=int, default=0,
+                    help="0 = static frequency ranking (the paper); N = "
+                         "adaptive frequency engine: re-rank cached slabs "
+                         "from online decayed counters every N steps "
+                         "(pipelined runs refresh at group boundaries).  "
+                         "Pure reindexing: fp32 losses are bit-identical "
+                         "with or without it (recsys archs only)")
     args = ap.parse_args()
 
     if args.arch == "gatedgcn":
@@ -112,14 +133,26 @@ def main():
         flush = None
     else:
         model, make, flush = _recsys_runner(args.arch, args.batch,
-                                            args.host_precision, args.model_shards)
+                                            args.host_precision, args.model_shards,
+                                            policy=cache_policy(args.cache_policy))
 
+    if args.cache_policy and not hasattr(model, "collection"):
+        raise SystemExit(f"--cache-policy needs a collection-backed arch; "
+                         f"{args.arch} has no embedding cache")
+    refresh_fn = None
+    if args.refresh_interval:
+        if not hasattr(model, "refresh"):
+            raise SystemExit(f"--refresh-interval needs a collection-backed "
+                             f"arch; {args.arch} has no cached slabs to re-rank")
+        refresh_fn = model.refresh
     tc = TrainerConfig(max_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=25,
-                       pipeline_depth=args.pipeline_depth)
+                       pipeline_depth=args.pipeline_depth,
+                       refresh_interval=args.refresh_interval or None)
     kw = dict(
         init_fn=lambda: model.init(jax.random.PRNGKey(0)),
         make_batch=make,
         flush_fn=flush,
+        refresh_fn=refresh_fn,
         on_straggler=lambda s, dt: print(f"[straggler] step {s}: {dt*1e3:.0f} ms"),
     )
     if args.pipeline_depth > 0:
@@ -140,6 +173,10 @@ def main():
     print(f"\narch={args.arch} steps={len(h)} loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
     if "hit_rate" in h[-1]:
         print(f"cache hit rate: {h[-1]['hit_rate']:.1%}")
+    if args.refresh_interval and "refresh_swaps" in h[-1]:
+        print(f"adaptive refresh: {h[-1]['refresh_swaps']:.0f} rank swaps, "
+              f"{h[-1]['refresh_rows_moved']:.0f} slow-tier rows moved, "
+              f"window hit rate {h[-1].get('window_hit_rate', 0.0):.1%}")
     if hasattr(model, "collection"):
         db = model.collection.device_bytes()
         print(f"host tier ({args.host_precision}): {db['slow_tier_bytes']/1e6:.1f} MB "

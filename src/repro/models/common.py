@@ -220,3 +220,14 @@ class CollectionModelMixin:
 
     def compute_step(self, state, batch, addresses):
         return self._train_step().compute_step(state, batch, addresses)
+
+    def refresh(self, state, cfg=None, writeback: bool = True):
+        """Adaptive frequency refresh: re-rank the collection's cached slabs
+        from their online decayed counters (``EmbeddingCollection.refresh``).
+        Host-side and pure reindexing — call between steps (the trainers wire
+        this as ``refresh_fn`` under ``TrainerConfig.refresh_interval``; serve
+        passes ``writeback=False`` for its read-only cache states)."""
+        new_emb, _ = self.collection.refresh(
+            state["emb"], cfg, writeback=writeback
+        )
+        return dict(state, emb=new_emb)

@@ -61,6 +61,7 @@ class FMConfig:
     protect_via_inverse: bool = True
     buffer_rows: int = 65536
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
+    policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
 class FMModel(common.CollectionModelMixin):
@@ -85,6 +86,7 @@ class FMModel(common.CollectionModelMixin):
             protect_via_inverse=cfg.protect_via_inverse,
             buffer_rows=cfg.buffer_rows,
             host_precision=cfg.host_precision,
+            policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 
     def init(self, rng, counts: Optional[np.ndarray] = None):
@@ -178,6 +180,7 @@ class DINConfig:
     lr: float = 0.05
     dtypes: Dtypes = F32
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
+    policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
 class DINModel(common.CollectionModelMixin):
@@ -198,6 +201,7 @@ class DINModel(common.CollectionModelMixin):
             cache_ratio=cfg.cache_ratio,
             max_unique_per_step=cfg.max_unique_per_step,
             host_precision=cfg.host_precision,
+            policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 
     @property
@@ -415,6 +419,7 @@ class MINDConfig:
     lr: float = 0.05
     dtypes: Dtypes = F32
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
+    policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
 class MINDModel(common.CollectionModelMixin):
@@ -433,6 +438,7 @@ class MINDModel(common.CollectionModelMixin):
             cache_ratio=cfg.cache_ratio,
             max_unique_per_step=cfg.max_unique_per_step,
             host_precision=cfg.host_precision,
+            policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 
     @property

@@ -74,13 +74,30 @@ class ServeEngine:
         # ^ optional embedding-tier telemetry read from the live state (e.g.
         #   ``lambda s: collection.metrics(s["emb"])`` — hit rate, host wire
         #   bytes of the mixed-precision store); merged into ``summary()``.
+        refresh_fn: Optional[Callable[[Any], Any]] = None,
+        refresh_every: Optional[int] = None,
+        # ^ adaptive frequency refresh hook: every ``refresh_every`` scored
+        #   batches the engine runs ``refresh_fn`` (usually
+        #   ``lambda s: model.refresh(s, writeback=False)`` — the read-only
+        #   cache's rows are clean, so the re-rank skips write-backs) over its
+        #   live state, re-ranking the cache toward the traffic it actually
+        #   serves.  Scores are unchanged (pure reindexing); only hit rates
+        #   move.  Runs between batches, never during a score call.
     ):
         self.score_fn = jax.jit(score_fn)
         self.state = state
         self.batch_size = batch_size
         self.pad_example = pad_example
         self.state_stats_fn = state_stats_fn
+        self.refresh_fn = refresh_fn
+        self.refresh_every = refresh_every
+        self._batches_since_refresh = 0
         self.stats = ServeStats()
+        # wrap-free exact hit/miss totals (see collection.ExactCounterTotals)
+        from repro.core.collection import ExactCounterTotals
+
+        self._exact_hits = ExactCounterTotals()
+        self._exact_misses = ExactCounterTotals()
 
     def summary(self) -> Dict[str, float]:
         """Latency stats plus (when wired) embedding-tier telemetry.
@@ -105,6 +122,15 @@ class ServeEngine:
             )
             if xchg is not None:
                 out["exchange_bytes"] = xchg
+            # exact hit/miss totals from the per-slab int32 counters — the
+            # in-jit accumulators wrap past 2^31 under sustained traffic, so
+            # the exact Python ints also rebuild an exact hit_rate.
+            if "slab_hits" in stats and "slab_misses" in stats:
+                h = self._exact_hits.update(stats["slab_hits"])
+                m = self._exact_misses.update(stats["slab_misses"])
+                out["cache_hits"] = h
+                out["cache_misses"] = m
+                out["hit_rate"] = h / max(h + m, 1)
         return out
 
     def _pad(self, batch: Dict[str, np.ndarray], n: int) -> Dict[str, jnp.ndarray]:
@@ -129,4 +155,9 @@ class ServeEngine:
         dt = time.perf_counter() - t0
         self.stats.requests += n
         self.stats.observe(dt)
+        if self.refresh_fn is not None and self.refresh_every:
+            self._batches_since_refresh += 1
+            if self._batches_since_refresh >= self.refresh_every:
+                self.state = self.refresh_fn(self.state)
+                self._batches_since_refresh = 0
         return scores

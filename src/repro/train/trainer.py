@@ -32,7 +32,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core.collection import exact_metric_bytes
+from repro.core.collection import ExactCounterTotals, exact_metric_bytes
 from repro.data.pipeline import Prefetcher
 from repro.train import checkpoint as ckpt_lib
 
@@ -78,6 +78,13 @@ class TrainerConfig:
     # step t's dense compute runs, with the ids of the next k batches merged
     # into each plan so rows needed at t+k are prefetched before they miss.
     pipeline_depth: int = 0
+    # None = static frequency ranking (the paper).  N = run the adaptive
+    # re-ranking refresh (``refresh_fn``, usually ``model.refresh``) every N
+    # steps — the serial trainer refreshes exactly on the cadence; the
+    # pipelined trainer refreshes at the first GROUP BOUNDARY at or past each
+    # multiple of N (a merged plan's addresses must never straddle a refresh).
+    # Refresh is pure reindexing, so fp32 losses are bit-identical either way.
+    refresh_interval: Optional[int] = None
 
 
 class Trainer:
@@ -90,6 +97,9 @@ class Trainer:
         flush_fn: Optional[Callable[[Any], Any]] = None,  # cache barrier pre-ckpt
         on_straggler: Optional[Callable[[int, float], None]] = None,
         shard_fn: Optional[Callable[[Any], Any]] = None,  # re-shard after restore
+        refresh_fn: Optional[Callable[[Any], Any]] = None,  # adaptive re-rank
+        # ^ host-side pure-reindexing pass (``model.refresh``), run every
+        #   ``cfg.refresh_interval`` steps (pipelined: at group boundaries)
     ):
         self.cfg = cfg
         self.init_fn = init_fn
@@ -98,11 +108,17 @@ class Trainer:
         self.flush_fn = flush_fn
         self.on_straggler = on_straggler
         self.shard_fn = shard_fn
+        self.refresh_fn = refresh_fn
         self.detector = StragglerDetector(factor=cfg.straggler_factor)
         self.checkpointer = (
             ckpt_lib.Checkpointer(cfg.ckpt_dir, keep=cfg.ckpt_keep) if cfg.ckpt_dir else None
         )
         self.history: List[Dict[str, float]] = []
+        # exact Python-int hit/miss totals: the in-jit accumulators are int32
+        # and wrap past 2^31 on long runs (same drift class as the float32
+        # host_wire_bytes scalar) — host-side delta accumulation stays exact.
+        self._exact_hits = ExactCounterTotals()
+        self._exact_misses = ExactCounterTotals()
 
     # -- state bootstrap -----------------------------------------------------
     def _bootstrap(self):
@@ -139,9 +155,18 @@ class Trainer:
                 )
         rec = {"step": step_i, "loss": loss, "time_s": dt}
         for k in ("auc", "hit_rate", "cache_evictions", "grad_norm", "xent",
-                  "shard_imbalance"):
+                  "shard_imbalance", "window_hit_rate", "refresh_swaps",
+                  "refresh_rows_moved"):
             if k in metrics:
                 rec[k] = float(jax.device_get(metrics[k]))
+        # exact cumulative hit/miss totals (wrap-free Python ints from the
+        # per-slab int32 counters; the in-jit hit_rate float is kept as-is)
+        if "slab_hits" in metrics and "slab_misses" in metrics:
+            h = self._exact_hits.update(metrics["slab_hits"])
+            m = self._exact_misses.update(metrics["slab_misses"])
+            rec["cache_hits"] = h
+            rec["cache_misses"] = m
+            rec["hit_rate_exact"] = h / max(h + m, 1)
         # host_wire_bytes: cumulative host<->device embedding traffic at the
         # slab's ENCODED row size — the mixed-precision host store's savings
         # show up here.  Recorded as an exact Python int from the per-slab
@@ -183,6 +208,13 @@ class Trainer:
                 t0 = time.perf_counter()
                 state, metrics = self.step_fn(state, batch)
                 state = self._post_step(step_i, state, metrics, t0)
+                if (
+                    self.refresh_fn is not None
+                    and cfg.refresh_interval
+                    and (step_i + 1) % cfg.refresh_interval == 0
+                    and step_i + 1 < cfg.max_steps
+                ):
+                    state = self.refresh_fn(state)
             if self.checkpointer:
                 self.checkpointer.wait()
         finally:
@@ -248,6 +280,7 @@ class PipelinedTrainer(Trainer):
         flush_fn: Optional[Callable[[Any], Any]] = None,
         on_straggler: Optional[Callable[[int, float], None]] = None,
         shard_fn: Optional[Callable[[Any], Any]] = None,
+        refresh_fn: Optional[Callable[[Any], Any]] = None,
     ):
         super().__init__(
             cfg,
@@ -257,6 +290,7 @@ class PipelinedTrainer(Trainer):
             flush_fn=flush_fn,
             on_straggler=on_straggler,
             shard_fn=shard_fn,
+            refresh_fn=refresh_fn,
         )
         self.plan_fn = plan_fn
         self.compute_fn = compute_fn
@@ -306,13 +340,33 @@ class PipelinedTrainer(Trainer):
             self._check_window(plan, group)
             state = self.apply_fn(state, plan)
             addrs = (plan.addresses,) + tuple(plan.future_addresses)
+            refresh_on = self.refresh_fn is not None and cfg.refresh_interval
+            # align the cadence to ABSOLUTE step numbers so a checkpoint
+            # restore resumes the same refresh schedule (the serial trainer's
+            # modulo check is restore-aligned by construction)
+            next_refresh_at = (
+                (start // cfg.refresh_interval + 1) * cfg.refresh_interval
+                if refresh_on
+                else None
+            )
             while group:
                 next_plan = None
                 last_step = group[-1][0]
                 n_next = min(depth, cfg.max_steps - (last_step + 1))
+                # refresh only at GROUP BOUNDARIES: a merged plan's addresses
+                # are computed against one index image, so a group must never
+                # straddle the re-rank.  When a refresh falls due inside this
+                # group, the next group's plan is NOT dispatched early — it is
+                # planned after the refresh, from the refreshed index state
+                # (one serial prepare per refresh_interval steps).
+                refresh_now = (
+                    refresh_on
+                    and last_step + 1 >= next_refresh_at
+                    and n_next > 0
+                )
                 for j, (step_i, batch) in enumerate(group):
                     t0 = time.perf_counter()
-                    if j == 0 and n_next > 0:
+                    if j == 0 and n_next > 0 and not refresh_now:
                         # dispatch the NEXT group's merged plan before blocking
                         # on any of this group's losses — planning reads only
                         # ids + index state, so it overlaps the dense compute.
@@ -331,6 +385,19 @@ class PipelinedTrainer(Trainer):
                         # evictions write back the freshest values
                         state = self.apply_fn(state, next_plan)
                     state = self._post_step(step_i, state, metrics, t0)
+                if refresh_now:
+                    state = self.refresh_fn(state)
+                    done = last_step + 1
+                    next_refresh_at = (
+                        done // cfg.refresh_interval + 1
+                    ) * cfg.refresh_interval
+                    peek = prefetch.lookahead(n_next)
+                    n_next = len(peek)
+                    if peek:
+                        next_plan = self.plan_fn(
+                            state, peek[0][1], tuple(b for _, b in peek[1:])
+                        )
+                        state = self.apply_fn(state, next_plan)
                 if next_plan is None:
                     break
                 group = self._take(prefetch, n_next)

@@ -151,3 +151,84 @@ def test_writeback_false_keeps_full_table():
     before = np.asarray(st.full["weight"]).copy()
     st2, _ = ce.prepare_ids(cfg, st, jax.random.randint(jax.random.PRNGKey(1), (12,), 0, 80).astype(jnp.int32))
     np.testing.assert_array_equal(before, np.asarray(st2.full["weight"]))
+
+
+# --------------------------------------------------------------------------
+# eviction_key: every Policy variant against a numpy oracle + tie order
+# --------------------------------------------------------------------------
+
+
+def _key_oracle(policy, slot_to_row, last_used, use_count):
+    """Independent numpy statement of each policy's eviction key."""
+    if policy is Policy.FREQ_LFU:
+        return slot_to_row.astype(np.int64)  # static rank: larger = colder
+    if policy in (Policy.LRU, Policy.UVM_ROW):
+        return -last_used.astype(np.int64)  # oldest access evicts first
+    if policy is Policy.RUNTIME_LFU:
+        return -use_count.astype(np.int64)  # fewest uses evicts first
+    raise AssertionError(policy)
+
+
+@pytest.mark.parametrize(
+    "policy", [Policy.FREQ_LFU, Policy.LRU, Policy.RUNTIME_LFU, Policy.UVM_ROW]
+)
+def test_eviction_key_matches_numpy_oracle(policy):
+    rng = np.random.default_rng(0)
+    slot_to_row = rng.integers(-1, 40, 24).astype(np.int32)
+    last_used = rng.integers(0, 9, 24).astype(np.int32)
+    use_count = rng.integers(0, 5, 24).astype(np.int32)
+    got = np.asarray(
+        cache_lib.eviction_key(
+            policy,
+            jnp.asarray(slot_to_row),
+            jnp.asarray(last_used),
+            jnp.asarray(use_count),
+        )
+    )
+    np.testing.assert_array_equal(got, _key_oracle(policy, slot_to_row, last_used, use_count))
+
+
+@pytest.mark.parametrize(
+    "policy", [Policy.FREQ_LFU, Policy.LRU, Policy.RUNTIME_LFU, Policy.UVM_ROW]
+)
+def test_victim_order_deterministic_under_ties(policy):
+    """plan_prepare's victim order is a STABLE descending argsort of the key:
+    tied slots evict in slot order, identically across calls — every data
+    rank must pick the same victims (the determinism the paper's replicated
+    bookkeeping relies on)."""
+    cfg = cache_lib.CacheConfig(
+        vocab=40, capacity=8, ids_per_step=4, policy=policy, buffer_rows=4
+    )
+    st = cache_lib.init_cache(cfg, {"weight": jnp.zeros((4,), jnp.float32)})
+    # fill all 8 slots with rows 0..7; uniform recency/use -> all keys tie
+    # (FREQ_LFU keys differ by construction; the others are fully tied)
+    full = {"weight": jnp.arange(40 * 4, dtype=jnp.float32).reshape(40, 4)}
+    full, st, _ = cache_lib.prepare(cfg, full, st, jnp.arange(8, dtype=jnp.int32)[:4])
+    full, st, _ = cache_lib.prepare(cfg, full, st, jnp.arange(4, 8, dtype=jnp.int32))
+    plan_a = cache_lib.plan_prepare(cfg, st, jnp.asarray([20, 21, 22, 23], jnp.int32))
+    plan_b = cache_lib.plan_prepare(cfg, st, jnp.asarray([20, 21, 22, 23], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(plan_a.victim_slots), np.asarray(plan_b.victim_slots)
+    )
+    # numpy oracle of the same stable descending order over the key
+    key = np.asarray(
+        cache_lib.eviction_key(policy, st.slot_to_row, st.last_used, st.use_count)
+    ).astype(np.int64)
+    key[np.asarray(st.slot_to_row) < 0] = np.iinfo(np.int32).max // 2  # empty first
+    protected = np.isin(np.asarray(st.slot_to_row), [20, 21, 22, 23])
+    key[protected] = -(np.iinfo(np.int32).max // 2)
+    # stable descending == lexsort on (slot asc) within equal -key
+    order = np.lexsort((np.arange(8), -key))
+    np.testing.assert_array_equal(np.asarray(plan_a.victim_slots), order[:4])
+
+
+def test_uvm_row_key_is_recency_not_frequency():
+    """UVM_ROW (the TorchRec-UVM stand-in) must key on recency: a slot with
+    huge use_count but stale last_used evicts before a fresh slot."""
+    slot_to_row = jnp.asarray([0, 1], jnp.int32)
+    last_used = jnp.asarray([1, 9], jnp.int32)
+    use_count = jnp.asarray([100, 1], jnp.int32)
+    key = np.asarray(
+        cache_lib.eviction_key(Policy.UVM_ROW, slot_to_row, last_used, use_count)
+    )
+    assert key[0] > key[1]  # stale slot carries the larger (evict-first) key

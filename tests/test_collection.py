@@ -52,8 +52,10 @@ def test_planner_prefers_hot_tables_with_counts():
         col.TableConfig("a", vocab=256, dim=dim, ids_per_step=16),
         col.TableConfig("b", vocab=256, dim=dim, ids_per_step=16),
     ]
-    # room for one DEVICE table plus the other table's cache floor
-    budget = 256 * dim * 4 + 4096
+    # room for one DEVICE table plus the other table's cache floor (which
+    # includes the online frequency tracker's vocab-sized counters), but NOT
+    # for both tables resident
+    budget = 256 * dim * 4 + col.PlacementPlanner._fast_bytes(tables[0], 0.0) + 64
     counts = {"a": np.ones(256), "b": np.full(256, 1000)}
     plan = col.PlacementPlanner(budget).plan(tables, counts=counts)
     assert plan.placements["b"].placement is col.Placement.DEVICE
@@ -97,7 +99,7 @@ def test_dlrm_budget_mode_keeps_max_unique_bound():
 
     cfg = DLRMConfig(vocab_sizes=(4096, 64), embed_dim=8, batch_size=16,
                      cache_ratio=0.25, max_unique_per_step=8,
-                     bottom_mlp=(8,), top_mlp=(8,), device_budget_bytes=40_000)
+                     bottom_mlp=(8,), top_mlp=(8,), device_budget_bytes=80_000)
     model = DLRM(cfg)
     cached = [s for s in model.collection.cached_slabs.values()]
     assert cached and all(s.max_unique_per_step == 8 for s in cached)
@@ -245,7 +247,7 @@ def test_mixed_plan_trains_and_serves_end_to_end():
     from repro.serve.engine import ServeEngine
     from repro.train.trainer import Trainer, TrainerConfig
 
-    budget = 40_000  # promotes the small tables, caches the 4096-row one
+    budget = 90_000  # promotes the small tables, caches the 4096-row one
     cfg = DLRMConfig(vocab_sizes=(4096, 256, 64), embed_dim=8, batch_size=16,
                      cache_ratio=0.25, lr=0.1, bottom_mlp=(16, 8), top_mlp=(16,),
                      device_budget_bytes=budget)

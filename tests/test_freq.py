@@ -46,3 +46,37 @@ def test_reorder_rows():
     w = np.arange(6).reshape(3, 2)
     rw = st.reorder_rows(w)
     np.testing.assert_array_equal(rw[0], w[1])  # hottest first
+
+
+def test_collect_counts_stream_routes_features_to_tables():
+    stream = [
+        {"f_a": np.array([0, 1, 1, -1]), "f_b": np.array([2, 2])},
+        {"f_a": np.array([[1, 3], [3, -1]])},  # any shape; padding skipped
+        {"label": np.array([1.0])},  # unmapped fields ignored
+    ]
+    got = freq.collect_counts_stream(
+        iter(stream), {"f_a": "ta", "f_b": "tb"}, {"ta": 5, "tb": 4}
+    )
+    np.testing.assert_array_equal(got["ta"], [1, 3, 0, 2, 0])
+    np.testing.assert_array_equal(got["tb"], [0, 0, 2, 0])
+    # max_batches bounds the scan
+    got1 = freq.collect_counts_stream(
+        iter(stream), {"f_a": "ta", "f_b": "tb"}, {"ta": 5, "tb": 4}, max_batches=1
+    )
+    assert got1["ta"].sum() == 3 and got1["tb"].sum() == 2
+
+
+def test_tracker_lazy_decay_normalization():
+    import jax.numpy as jnp
+
+    tr = freq.init_tracker(4)
+    # touch rows {0, 2} at step 1, row {0} again at step 3
+    tr = freq.tracker_touch(
+        tr, jnp.array([0, 2]), jnp.array([True, True]), jnp.int32(1), half_life=2
+    )
+    tr = freq.tracker_touch(
+        tr, jnp.array([0, -1]), jnp.array([True, False]), jnp.int32(3), half_life=2
+    )
+    got = freq.decayed_scores(np.asarray(tr.score), np.asarray(tr.last_touch), 3, 2)
+    # row 0: 1 @step1 decayed 2 steps (x 1/2) + 1 = 1.5; row 2: 1 @step1 -> 0.5
+    np.testing.assert_allclose(got, [1.5, 0.0, 0.5, 0.0], rtol=1e-6)
