@@ -1,0 +1,19 @@
+"""Static contract analysis for the hot path (no execution, trace-only).
+
+The paper's end-to-end claim rests on the cache staying a pure on-device
+data-movement layer: one hidden host sync, silent retrace, or missed buffer
+donation in ``plan_prepare``/``apply_plan`` erases the win — and a pipelined
+trainer keeps producing correct losses while the overlap is silently gone.
+This package machine-checks those contracts before every ROADMAP churn:
+
+* ``contracts``    — the ``@contract`` registry jit entry points declare on
+* ``smoke``        — canonical tiny shapes each entry is traced at
+* ``jaxpr_checks`` — trace-level invariants (``jax.make_jaxpr``)
+* ``hlo_checks``   — post-lowering invariants (compiled HLO text, reusing
+                     ``launch.hlo_analyzer``'s parser)
+* ``ast_lint``     — JAX-aware AST pass over ``src/`` for what ruff can't see
+* ``run``          — CLI / CI gate: ``python -m repro.analysis.run [--json]``
+"""
+from repro.analysis.contracts import Contract, Violation, contract, registry
+
+__all__ = ["Contract", "Violation", "contract", "registry"]

@@ -1,0 +1,302 @@
+"""JAX-aware AST lint: what ruff cannot see because it is JAX semantics.
+
+Four rules, applied to *jit-context* functions — functions decorated with
+``jax.jit`` / ``functools.partial(jax.jit, ...)`` / ``@contract``, anything
+nested inside one, plus any (module, qualname) the caller passes in
+``extra_jit`` (``run`` feeds the contract registry, so undecorated methods
+like ``EmbeddingCollection.gather`` are linted as jit bodies too):
+
+* ``ast-host-sync``   — ``.item()`` / ``.block_until_ready()`` on anything,
+  and ``float()`` / ``int()`` / ``np.asarray()`` / ``np.array()`` /
+  ``jax.device_get()`` applied to a traced parameter: each is a synchronous
+  device->host round trip per step.
+* ``ast-tracer-branch`` — Python ``if``/``while`` on an expression that
+  references a traced parameter by bare name (a ``ConcretizationTypeError``
+  at best; at worst a silently shape-specialized branch).  Attribute access
+  (``cfg.writeback``, ``x.shape``), ``isinstance``/``len`` calls and
+  ``is None`` tests are static and excluded.
+* ``ast-unregistered-dataclass`` — a ``@dataclasses.dataclass`` holding
+  ``jnp.ndarray`` / ``jax.Array`` fields without
+  ``jax.tree_util.register_dataclass`` (or a ``register_pytree_node`` call):
+  it silently becomes a static leaf and retraces on every value change.
+* ``ast-state-mutation`` — in-place mutation of a parameter
+  (``state.x = ...``, ``state["k"] = ...``, augmented assigns): functional
+  pytree state must be rebuilt, not mutated; locals (``d = dict(state); ...``)
+  are fine.
+
+Parameters annotated as plain Python scalars (``int``/``bool``/``str``/
+``float``), ``*Config`` types, or named ``self``/``cls``/``cfg``/``config``
+are treated as static and never count as traced.  A line containing
+``jaxlint: ok`` suppresses findings on it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.contracts import Violation
+
+__all__ = ["lint_source", "lint_file", "lint_tree"]
+
+_STATIC_PARAM_NAMES = {"self", "cls", "cfg", "config", "ccfg", "scfg"}
+_STATIC_ANNOTATIONS = {"int", "bool", "str", "float", "bytes"}
+_ARRAY_ANNOTATIONS = ("jnp.ndarray", "jax.Array", "jnp.array", "chex.Array")
+_STATIC_CALLS = {"isinstance", "len", "getattr", "hasattr", "callable", "type"}
+_SUPPRESS = "jaxlint: ok"
+
+
+def _unparse(node: Optional[ast.AST]) -> str:
+    if node is None:
+        return ""
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return ""
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """jax.jit / jit / partial(jax.jit, ...) / functools.partial(jax.jit, ...)
+    / contract(...)."""
+    s = _unparse(dec)
+    head = s.split("(", 1)[0]
+    if head in ("jax.jit", "jit", "contract") or head.endswith(
+        (".jit", ".contract")
+    ):
+        return True
+    return "partial(" in s and "jit" in s.split("partial(", 1)[1]
+
+
+def _traced_params(fn: ast.AST) -> Set[str]:
+    args = fn.args
+    names: Set[str] = set()
+    for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
+        if a.arg in _STATIC_PARAM_NAMES:
+            continue
+        ann = _unparse(a.annotation)
+        if ann in _STATIC_ANNOTATIONS or ann.endswith("Config"):
+            continue
+        names.add(a.arg)
+    return names
+
+
+class _TracerRefFinder(ast.NodeVisitor):
+    """Bare-name references to traced params, skipping static contexts."""
+
+    def __init__(self, traced: Set[str]):
+        self.traced = traced
+        self.hits: List[str] = []
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        return  # cfg.writeback / state.step / x.shape: static or indirect
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Name) and node.func.id in _STATIC_CALLS:
+            return
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return  # `x is None` guards are static
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if node.id in self.traced:
+            self.hits.append(node.id)
+
+
+def _tracer_refs(node: ast.AST, traced: Set[str]) -> List[str]:
+    f = _TracerRefFinder(traced)
+    f.visit(node)
+    return f.hits
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+@dataclasses.dataclass
+class _Ctx:
+    path: str
+    lines: Sequence[str]
+    module: str
+    extra_jit: Set[str]
+    out: List[Violation]
+
+    def add(self, check: str, node: ast.AST, detail: str) -> None:
+        line = node.lineno
+        if 0 < line <= len(self.lines) and _SUPPRESS in self.lines[line - 1]:
+            return
+        self.out.append(Violation(check, f"{self.path}:{line}", detail))
+
+
+def _lint_fn_body(fn: ast.AST, ctx: _Ctx, traced: Set[str]) -> None:
+    for node in ast.walk(fn):
+        # nested defs are handled by the outer walk (they inherit jit ctx
+        # through _walk_defs); don't double-visit their bodies here.
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in (
+                "item",
+                "block_until_ready",
+            ):
+                ctx.add(
+                    "ast-host-sync", node,
+                    f".{f.attr}() forces a host sync inside a jit body",
+                )
+            elif isinstance(f, ast.Name) and f.id in ("float", "int"):
+                refs = [r for a in node.args for r in _tracer_refs(a, traced)]
+                if refs:
+                    ctx.add(
+                        "ast-host-sync", node,
+                        f"{f.id}() on traced value '{refs[0]}' concretizes "
+                        "(host sync / trace error)",
+                    )
+            elif isinstance(f, ast.Attribute):
+                call = _unparse(f)
+                if call in ("np.asarray", "np.array", "numpy.asarray",
+                            "numpy.array", "jax.device_get"):
+                    refs = [
+                        r for a in node.args for r in _tracer_refs(a, traced)
+                    ]
+                    if refs:
+                        ctx.add(
+                            "ast-host-sync", node,
+                            f"{call}() on traced value '{refs[0]}' pulls it "
+                            "to host",
+                        )
+        elif isinstance(node, (ast.If, ast.While)):
+            refs = _tracer_refs(node.test, traced)
+            if refs:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                ctx.add(
+                    "ast-tracer-branch", node,
+                    f"Python `{kind}` on traced value '{refs[0]}' — use "
+                    "jnp.where / lax.cond",
+                )
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for t in targets:
+                if isinstance(t, (ast.Attribute, ast.Subscript)):
+                    root = _root_name(t)
+                    if root in traced:
+                        ctx.add(
+                            "ast-state-mutation", node,
+                            f"in-place mutation of traced parameter '{root}' "
+                            "— rebuild the pytree instead",
+                        )
+
+
+def _walk_defs(
+    node: ast.AST, ctx: _Ctx, qual: str, in_jit: bool
+) -> None:
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            q = f"{qual}.{child.name}" if qual else child.name
+            jit_here = (
+                in_jit
+                or any(_is_jit_decorator(d) for d in child.decorator_list)
+                or f"{ctx.module}.{q}" in ctx.extra_jit
+            )
+            if jit_here:
+                _lint_fn_body(child, ctx, _traced_params(child))
+            _walk_defs(child, ctx, q, jit_here)
+        elif isinstance(child, ast.ClassDef):
+            _check_dataclass(child, ctx)
+            q = f"{qual}.{child.name}" if qual else child.name
+            _walk_defs(child, ctx, q, in_jit)
+        else:
+            _walk_defs(child, ctx, qual, in_jit)
+
+
+def _check_dataclass(cls: ast.ClassDef, ctx: _Ctx) -> None:
+    decs = [_unparse(d) for d in cls.decorator_list]
+    is_dc = any("dataclass" in d for d in decs)
+    registered = any("register" in d for d in decs)
+    if not is_dc or registered:
+        return
+    def _array_field(ann: str) -> bool:
+        # Callable[..., jnp.ndarray] fields hold functions, not array leaves
+        return any(a in ann for a in _ARRAY_ANNOTATIONS) and "Callable" not in ann
+
+    array_fields = [
+        stmt.target.id
+        for stmt in cls.body
+        if isinstance(stmt, ast.AnnAssign)
+        and isinstance(stmt.target, ast.Name)
+        and _array_field(_unparse(stmt.annotation))
+    ]
+    if not array_fields:
+        return
+    # a module-level register_pytree_node(Cls, ...) call also counts
+    src = "\n".join(ctx.lines)
+    if f"register_pytree_node({cls.name}" in src or (
+        f"register_dataclass({cls.name}" in src
+    ):
+        return
+    ctx.add(
+        "ast-unregistered-dataclass", cls,
+        f"dataclass '{cls.name}' holds array fields {array_fields} but is "
+        "not registered as a pytree (jax.tree_util.register_dataclass)",
+    )
+
+
+def _module_name(path: Path, root: Path) -> str:
+    try:
+        rel = path.resolve().relative_to(root.resolve())
+    except ValueError:
+        rel = path
+    parts = list(rel.with_suffix("").parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    return ".".join(parts)
+
+
+def lint_source(
+    source: str,
+    path: str = "<string>",
+    module: str = "",
+    extra_jit: Iterable[str] = (),
+) -> List[Violation]:
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Violation("ast-parse-error", f"{path}:{e.lineno}", str(e))]
+    ctx = _Ctx(
+        path=path,
+        lines=source.splitlines(),
+        module=module,
+        extra_jit=set(extra_jit),
+        out=[],
+    )
+    _walk_defs(tree, ctx, "", in_jit=False)
+    return ctx.out
+
+
+def lint_file(
+    path: Path, root: Path, extra_jit: Iterable[str] = ()
+) -> List[Violation]:
+    rel = str(path.relative_to(root)) if path.is_relative_to(root) else str(path)
+    return lint_source(
+        path.read_text(),
+        path=rel,
+        module=_module_name(path, root),
+        extra_jit=extra_jit,
+    )
+
+
+def lint_tree(
+    root: Path, extra_jit: Iterable[str] = ()
+) -> Tuple[List[Violation], int]:
+    """Lint every ``.py`` under ``root/src``; returns (violations, n_files)."""
+    extra = set(extra_jit)
+    out: List[Violation] = []
+    files = sorted((root / "src").rglob("*.py"))
+    for f in files:
+        out.extend(lint_file(f, root, extra))
+    return out, len(files)

@@ -1,0 +1,159 @@
+"""Post-lowering contract checks on compiled HLO text.
+
+What only the compiled program can prove (reusing
+``launch.hlo_analyzer``'s HLO parser — same regexes, same ``Computation``
+walk):
+
+* **donation** — lower each entry WITH its contract's donation
+  (``SmokeCase.donate_argnums``) and verify XLA actually aliased the large
+  input buffers into the outputs (``input_output_alias`` in the module
+  header).  Declared-but-not-elided donation means the arena/HostStore
+  payload is double-buffered — the exact failure the paper's memory budget
+  cannot absorb.
+* **f64** — no f64/c128 buffer survives optimization (a jaxpr-level cast can
+  be folded away; one that reaches HLO is real).
+* **host-call** — no host callback custom-calls / infeed / outfeed in the
+  optimized program (oneDNN/matmul custom-calls are fine and expected on
+  CPU).
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+import jax
+
+from repro.analysis.contracts import Contract, Violation
+from repro.analysis.smoke import SmokeCase
+from repro.launch.hlo_analyzer import _bytes_of_type, parse_computations
+
+__all__ = ["check_case_hlo", "parse_input_output_alias", "compiled_text"]
+
+_ALIAS_PAIR_RE = re.compile(r"\{[\d,\s]*\}:\s*\((\d+),\s*\{[\d,\s]*\}")
+_HOST_CALL_RE = re.compile(
+    r'custom_call_target="([^"]*(?:callback|host|infeed|outfeed)[^"]*)"', re.I
+)
+
+
+def compiled_text(case: SmokeCase, donate: bool = False) -> str:
+    donate_argnums = case.donate_argnums if donate else ()
+    return (
+        jax.jit(case.fn, donate_argnums=donate_argnums)
+        .lower(*case.args)
+        .compile()
+        .as_text()
+    )
+
+
+def parse_input_output_alias(hlo: str) -> List[int]:
+    """Donated-parameter numbers aliased into outputs, from the module
+    header's ``input_output_alias={ {out}: (param, {path}, kind), ... }``."""
+    start = hlo.find("input_output_alias=")
+    if start < 0:
+        return []
+    # brace-matched scan over the alias map (entries contain nested braces)
+    i = hlo.find("{", start)
+    depth, j = 0, i
+    while j < len(hlo):
+        if hlo[j] == "{":
+            depth += 1
+        elif hlo[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    body = hlo[i : j + 1]
+    return [int(m.group(1)) for m in _ALIAS_PAIR_RE.finditer(body)]
+
+
+def _entry_param_bytes(hlo: str) -> List[int]:
+    comps, entry = parse_computations(hlo)
+    if entry is None or entry not in comps:
+        return []
+    comp = comps[entry]
+    return [_bytes_of_type(comp.params[p]) for p in comp.param_order]
+
+
+def _donated_leaf_bytes(case: SmokeCase) -> List[int]:
+    leaves = []
+    for i in case.donate_argnums:
+        for leaf in jax.tree_util.tree_leaves(case.args[i]):
+            leaves.append(int(leaf.size) * leaf.dtype.itemsize)
+    return leaves
+
+
+def check_donation(case: SmokeCase, c: Contract, hlo: str) -> List[Violation]:
+    if not c.donates or not case.donate_argnums:
+        return []
+    aliased = parse_input_output_alias(hlo)
+    if not aliased:
+        return [
+            Violation(
+                "donation",
+                c.name,
+                f"contract donates {c.donates} but compiled module has no "
+                "input_output_alias — every donated buffer is double-buffered",
+            )
+        ]
+    sizes = _entry_param_bytes(hlo)
+    aliased_bytes = sum(sizes[p] for p in aliased if p < len(sizes))
+    biggest = max(_donated_leaf_bytes(case), default=0)
+    if aliased_bytes < biggest:
+        return [
+            Violation(
+                "donation",
+                c.name,
+                f"aliased only {aliased_bytes} B of donated inputs; largest "
+                f"donated leaf is {biggest} B — the arena payload did not "
+                "elide",
+            )
+        ]
+    return []
+
+
+def check_f64_hlo(case: SmokeCase, c: Contract, hlo: str) -> List[Violation]:
+    if not c.no_f64:
+        return []
+    comps, _ = parse_computations(hlo)
+    out = []
+    for comp in comps.values():
+        for instr in comp.instrs:
+            if "f64[" in instr.result_type or "c128[" in instr.result_type:
+                out.append(
+                    Violation(
+                        "f64",
+                        c.name,
+                        f"HLO '{instr.op}' in {comp.name} produces "
+                        f"{instr.result_type}",
+                    )
+                )
+    return out
+
+
+def check_host_calls(case: SmokeCase, c: Contract, hlo: str) -> List[Violation]:
+    if not c.no_host_transfer:
+        return []
+    out = [
+        Violation("host-transfer", c.name, f"HLO host custom-call '{m.group(1)}'")
+        for m in _HOST_CALL_RE.finditer(hlo)
+    ]
+    for op in ("infeed(", "outfeed("):
+        if op in hlo:
+            out.append(
+                Violation("host-transfer", c.name, f"HLO {op.rstrip('(')} op")
+            )
+    return out
+
+
+def check_case_hlo(case: SmokeCase, c: Contract) -> List[Violation]:
+    """All HLO-level checks for one entry (one compile, with the contract's
+    donation applied so the aliasing decision is the one production sees)."""
+    try:
+        hlo = compiled_text(case, donate=bool(case.donate_argnums))
+    except Exception as e:
+        return [Violation("lower-error", c.name, f"{type(e).__name__}: {e}")]
+    out: List[Violation] = []
+    out += check_donation(case, c, hlo)
+    out += check_f64_hlo(case, c, hlo)
+    out += check_host_calls(case, c, hlo)
+    return out

@@ -1,0 +1,158 @@
+"""CLI / CI gate: ``python -m repro.analysis.run [--json] [--strict]``.
+
+Runs the three passes over every registered jit entry point and the source
+tree, diffs the findings against the known-issue baseline
+(``analysis/baseline.json``), and exits non-zero on anything new:
+
+* exit 0 — clean (every finding is baselined)
+* exit 1 — NEW violations (not in the baseline)
+* exit 2 — ``--strict`` only: STALE baseline entries (listed but no longer
+  firing — the fix landed, delete the line so it cannot mask a regression)
+
+``--json`` prints the full machine-readable report on stdout; the human
+format prints one line per finding.  ``--skip-hlo`` skips the compile-based
+pass (a few seconds per entry) for fast local iteration; CI always runs
+everything.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Sequence
+
+from repro.analysis import ast_lint, hlo_checks, jaxpr_checks
+from repro.analysis.contracts import Violation, registry
+
+_DEFAULT_BASELINE = Path(__file__).with_name("baseline.json")
+
+
+def load_baseline(path: Path) -> List[Dict[str, str]]:
+    if not path.exists():
+        return []
+    return json.loads(path.read_text()).get("known_issues", [])
+
+
+def analyze(
+    root: Path,
+    passes: Sequence[str] = ("jaxpr", "hlo", "ast"),
+) -> Dict[str, Any]:
+    """Run the requested passes; returns the raw (un-baselined) report."""
+    from repro.analysis import smoke  # imports all covered modules
+
+    reg = registry()
+    cases = smoke.build_cases()
+    violations: List[Violation] = []
+
+    for name in sorted(set(reg) - set(cases)):
+        violations.append(
+            Violation(
+                "no-smoke", name,
+                "registered entry point has no smoke case — the analyzer "
+                "cannot trace it (add one in analysis/smoke.py)",
+            )
+        )
+    for name in sorted(set(reg) & set(cases)):
+        _, c = reg[name]
+        case = cases[name]
+        if "jaxpr" in passes:
+            violations.extend(jaxpr_checks.check_case(case, c))
+        if "hlo" in passes:
+            violations.extend(hlo_checks.check_case_hlo(case, c))
+
+    n_files = 0
+    if "ast" in passes:
+        ast_violations, n_files = ast_lint.lint_tree(root, set(reg))
+        violations.extend(ast_violations)
+
+    return {
+        "entries": sorted(reg),
+        "passes": list(passes),
+        "ast_files": n_files,
+        "violations": violations,
+    }
+
+
+def apply_baseline(
+    report: Dict[str, Any], baseline: List[Dict[str, str]]
+) -> Dict[str, Any]:
+    known = {(b["check"], b["entry"]): b for b in baseline}
+    new, suppressed, fired = [], [], set()
+    for v in report["violations"]:
+        k = (v.check, v.entry)
+        if k in known:
+            fired.add(k)
+            suppressed.append(v)
+        else:
+            new.append(v)
+    stale = [known[k] for k in sorted(set(known) - fired)]
+    return {
+        "entries": report["entries"],
+        "passes": report["passes"],
+        "ast_files": report["ast_files"],
+        "new": [v.to_dict() for v in new],
+        "baselined": [
+            dict(v.to_dict(), rationale=known[(v.check, v.entry)]["rationale"])
+            for v in suppressed
+        ],
+        "stale_baseline": stale,
+        "ok": not new,
+    }
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.run", description=__doc__
+    )
+    p.add_argument("--json", action="store_true", help="machine-readable report")
+    p.add_argument(
+        "--strict", action="store_true",
+        help="also fail (exit 2) on stale baseline entries",
+    )
+    p.add_argument("--baseline", type=Path, default=_DEFAULT_BASELINE)
+    p.add_argument(
+        "--root", type=Path, default=Path.cwd(),
+        help="repo root (for the AST pass over src/)",
+    )
+    p.add_argument(
+        "--skip-hlo", action="store_true",
+        help="skip the compile-based HLO pass (faster local runs)",
+    )
+    args = p.parse_args(argv)
+
+    passes = ("jaxpr", "ast") if args.skip_hlo else ("jaxpr", "hlo", "ast")
+    report = apply_baseline(
+        analyze(args.root, passes), load_baseline(args.baseline)
+    )
+
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        print(
+            f"analyzed {len(report['entries'])} jit entry points, "
+            f"{report['ast_files']} source files ({', '.join(report['passes'])})"
+        )
+        for v in report["new"]:
+            print(f"  NEW   {v['check']:26s} {v['entry']}: {v['detail']}")
+        for v in report["baselined"]:
+            print(f"  known {v['check']:26s} {v['entry']} ({v['rationale']})")
+        for b in report["stale_baseline"]:
+            print(
+                f"  STALE baseline entry {b['check']}::{b['entry']} no longer "
+                "fires — delete it from baseline.json"
+            )
+        verdict = "OK" if report["ok"] else "FAIL"
+        print(f"{verdict}: {len(report['new'])} new, "
+              f"{len(report['baselined'])} baselined, "
+              f"{len(report['stale_baseline'])} stale")
+
+    if not report["ok"]:
+        return 1
+    if args.strict and report["stale_baseline"]:
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

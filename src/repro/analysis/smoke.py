@@ -1,0 +1,353 @@
+"""Canonical smoke shapes: one tiny, trace-only case per registered entry.
+
+Importing this module imports every covered subsystem (populating the
+contract registry) and builds a :class:`SmokeCase` for each entry point.
+Everything stays CHEAP and trace-compatible:
+
+* fixture states are built by the real ``init`` paths at toy geometry
+  (vocab ~256, dim 8, batch 32) — a few KB of device zeros;
+* plan/step *outputs* needed as inputs downstream are materialized as zeros
+  from ``jax.eval_shape`` structures, never by executing an entry body;
+* the analyzer itself only ever calls ``jax.make_jaxpr`` / ``jit().lower()``
+  on ``case.fn`` — no entry point is executed.
+
+``advance`` encodes one abstract state-threading step for the
+stable-signature check: ``jax.eval_shape(advance, *args)`` must reproduce the
+argument avals exactly (shape, dtype AND weak_type), otherwise the entry
+would retrace at step t+1 — the silent pipeline killer.
+
+The geometry constants below are the reference point for every
+``max_sort_size`` quoted in a ``@contract`` — change them together.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.contracts import registry
+from repro.core import cache as cache_lib
+from repro.core import refresh as refresh_lib
+from repro.core.collection import EmbeddingCollection, FeatureBatch, TableConfig
+from repro.core.sharded import ShardedEmbeddingCollection
+from repro.kernels.embedding_bag import ops as eb_ops
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.fm_interaction import ops as fm_ops
+from repro.models.dlrm import DLRM, DLRMConfig
+
+__all__ = ["SmokeCase", "build_cases", "GEOMETRY"]
+
+# -- canonical geometry (quoted by @contract max_sort_size bounds) ----------
+GEOMETRY = dict(
+    vocab=256, capacity=128, dim=8, ids=16, buffer_rows=64,
+    batch=32, tables=(192, 96), shards=2, swap_k=8,
+)
+
+
+@dataclasses.dataclass
+class SmokeCase:
+    """One traceable entry point: ``fn(*args)`` with statics already bound.
+
+    ``donate_argnums`` are positions in ``args`` realizing the contract's
+    ``donates`` declaration (the HLO pass lowers with them).  ``advance`` is
+    the abstract step-t -> step-t+1 argument map (None = signature check
+    degenerates to re-abstractifying ``args``, still catching weak types).
+    """
+
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    advance: Optional[Callable] = None
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _zeros_like_shape(tree: Any) -> Any:
+    """Materialize a ``jax.eval_shape`` output structure as device zeros."""
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), tree
+    )
+
+
+# -- cache ------------------------------------------------------------------
+
+
+def _cache_cases() -> Dict[str, SmokeCase]:
+    g = GEOMETRY
+    cfg = cache_lib.CacheConfig(
+        vocab=g["vocab"], capacity=g["capacity"], ids_per_step=g["ids"],
+        buffer_rows=g["buffer_rows"],
+    )
+    row_ex = {"weight": jnp.zeros((g["dim"],), jnp.float32)}
+    state = cache_lib.init_cache(cfg, row_ex)
+    full = {"weight": jnp.zeros((g["vocab"], g["dim"]), jnp.float32)}
+    rows = jnp.arange(g["ids"], dtype=jnp.int32)
+
+    plan_fn = functools.partial(cache_lib.plan_prepare, cfg)
+    plan0 = _zeros_like_shape(jax.eval_shape(plan_fn, state, rows))
+
+    def plan_advance(s, r):
+        p = plan_fn(s, r)
+        _, s2 = cache_lib.apply_plan(cfg, full, s, p)
+        return (s2, r)
+
+    def apply_advance(f, s, p):
+        f2, s2 = cache_lib.apply_plan(cfg, f, s, p)
+        return (f2, s2, plan_fn(s2, rows))
+
+    def flush_advance(f, s):
+        return cache_lib.flush(cfg, f, s)
+
+    def warmup_advance(f, s):
+        return cache_lib.warmup(cfg, f, s)
+
+    m = cache_lib.plan_prepare.__module__
+    return {
+        f"{m}.plan_prepare": SmokeCase(
+            f"{m}.plan_prepare", plan_fn, (state, rows), plan_advance
+        ),
+        f"{m}.apply_plan": SmokeCase(
+            f"{m}.apply_plan",
+            functools.partial(cache_lib.apply_plan, cfg),
+            (full, state, plan0),
+            apply_advance,
+            donate_argnums=(0, 1),
+        ),
+        f"{m}.flush": SmokeCase(
+            f"{m}.flush",
+            functools.partial(cache_lib.flush, cfg),
+            (full, state),
+            flush_advance,
+            donate_argnums=(0,),
+        ),
+        f"{m}.warmup": SmokeCase(
+            f"{m}.warmup",
+            functools.partial(cache_lib.warmup, cfg),
+            (full, state),
+            warmup_advance,
+            donate_argnums=(1,),
+        ),
+    }
+
+
+# -- collection (unsharded + sharded) ---------------------------------------
+
+
+def _toy_tables() -> Tuple[TableConfig, ...]:
+    g = GEOMETRY
+    return tuple(
+        TableConfig(
+            name=f"f{i}", vocab=v, dim=g["dim"], ids_per_step=g["batch"],
+            cache_ratio=0.5, buffer_rows=g["buffer_rows"],
+        )
+        for i, v in enumerate(g["tables"])
+    )
+
+
+def _toy_fb() -> FeatureBatch:
+    g = GEOMETRY
+    names = tuple(f"f{i}" for i in range(len(g["tables"])))
+    return FeatureBatch.from_onehot(
+        names, jnp.zeros((g["batch"], len(names)), jnp.int32)
+    )
+
+
+def _collection_cases() -> Dict[str, SmokeCase]:
+    g = GEOMETRY
+    coll = EmbeddingCollection.create(
+        _toy_tables(), cache_ratio=0.5, buffer_rows=g["buffer_rows"]
+    )
+    state = coll.init(jax.random.PRNGKey(0))
+    fb = _toy_fb()
+    plan0 = _zeros_like_shape(jax.eval_shape(coll.plan_prepare, state, fb))
+    weights = coll.weights(state)
+    grads0 = _zeros_like_shape(jax.eval_shape(lambda w: w, weights))
+
+    def grads_advance(s, grd):
+        return (coll.apply_grads(s, grd, 0.05), grd)
+
+    m = "repro.core.collection.EmbeddingCollection"
+    return {
+        f"{m}.gather": SmokeCase(
+            f"{m}.gather", coll.gather, (weights, plan0.addresses, fb)
+        ),
+        f"{m}.apply_grads": SmokeCase(
+            f"{m}.apply_grads",
+            lambda s, grd: coll.apply_grads(s, grd, 0.05),
+            (state, grads0),
+            grads_advance,
+            donate_argnums=(0,),
+        ),
+    }
+
+
+def _sharded_cases() -> Dict[str, SmokeCase]:
+    g = GEOMETRY
+    scoll = ShardedEmbeddingCollection.create(
+        _toy_tables(), num_shards=g["shards"], cache_ratio=0.5,
+        buffer_rows=g["buffer_rows"],
+    )
+    state = scoll.init(jax.random.PRNGKey(1))
+    fb = _toy_fb()
+    plan0 = _zeros_like_shape(jax.eval_shape(scoll.plan_prepare, state, fb))
+    weights = scoll.weights(state)
+
+    def plan_advance(s, f):
+        p = scoll.plan_prepare(s, f)
+        return (scoll.apply_plan(s, p), f)
+
+    def apply_advance(s, p):
+        s2 = scoll.apply_plan(s, p)
+        return (s2, scoll.plan_prepare(s2, fb))
+
+    m = "repro.core.sharded.ShardedEmbeddingCollection"
+    return {
+        f"{m}.plan_prepare": SmokeCase(
+            f"{m}.plan_prepare", scoll.plan_prepare, (state, fb), plan_advance
+        ),
+        f"{m}.apply_plan": SmokeCase(
+            f"{m}.apply_plan", scoll.apply_plan, (state, plan0),
+            apply_advance, donate_argnums=(0,),
+        ),
+        f"{m}.gather": SmokeCase(
+            f"{m}.gather", scoll.gather, (weights, plan0.addresses, fb)
+        ),
+    }
+
+
+# -- trainer compute step ---------------------------------------------------
+
+
+def _compute_step_case() -> Dict[str, SmokeCase]:
+    g = GEOMETRY
+    model = DLRM(
+        DLRMConfig(
+            vocab_sizes=g["tables"], n_dense=4, embed_dim=g["dim"],
+            bottom_mlp=(16, g["dim"]), top_mlp=(16,), batch_size=g["batch"],
+            cache_ratio=0.5, buffer_rows=g["buffer_rows"],
+        )
+    )
+    state = model.init(jax.random.PRNGKey(2))
+    batch = {
+        "dense": jnp.zeros((g["batch"], 4), jnp.float32),
+        "sparse": jnp.zeros((g["batch"], len(g["tables"])), jnp.int32),
+        "label": jnp.zeros((g["batch"],), jnp.float32),
+    }
+    addr0 = _zeros_like_shape(
+        jax.eval_shape(model.plan_step, state, batch).addresses
+    )
+
+    def advance(s, b, a):
+        s2, _ = model.compute_step(s, b, a)
+        return (s2, b, a)
+
+    key = "repro.models.common.CollectionTrainStep.compute_step"
+    return {
+        key: SmokeCase(
+            key, model.compute_step, (state, batch, addr0), advance,
+            donate_argnums=(0,),
+        )
+    }
+
+
+# -- refresh slab surgery ---------------------------------------------------
+
+
+def _refresh_cases() -> Dict[str, SmokeCase]:
+    g = GEOMETRY
+    k = g["swap_k"]
+    cfg = cache_lib.CacheConfig(
+        vocab=g["vocab"], capacity=g["capacity"], ids_per_step=g["ids"],
+        buffer_rows=g["buffer_rows"],
+    )
+    row_ex = {"weight": jnp.zeros((g["dim"],), jnp.float32)}
+    cache0 = cache_lib.init_cache(cfg, row_ex)
+    full = {"weight": jnp.zeros((g["vocab"], g["dim"]), jnp.float32)}
+    idx_map = jnp.arange(g["vocab"], dtype=jnp.int32)
+    pairs = jnp.full((k,), -1, jnp.int32)
+    valid = jnp.zeros((k,), bool)
+
+    fn_1 = functools.partial(
+        refresh_lib._apply_swaps, buffer_rows=g["buffer_rows"], writeback=True
+    )
+
+    # sharded: leaves gain a leading shard dim; idx_map stays flat [vocab].
+    s = g["shards"]
+    vs = g["vocab"] // s
+    scfg = dataclasses.replace(cfg, vocab=vs, capacity=g["capacity"] // s)
+    cache_s = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * s), cache_lib.init_cache(scfg, row_ex)
+    )
+    full_s = {"weight": jnp.zeros((s, vs, g["dim"]), jnp.float32)}
+    rows_img = jnp.full((s, 2 * k), -1, jnp.int32)
+    per_shard = jnp.zeros((s,), jnp.int32)
+    fn_s = functools.partial(
+        refresh_lib._apply_swaps_sharded,
+        buffer_rows=g["buffer_rows"], writeback=True,
+    )
+
+    m = "repro.core.refresh"
+    return {
+        f"{m}._apply_swaps": SmokeCase(
+            f"{m}._apply_swaps",
+            fn_1,
+            (full, cache0, idx_map, pairs, pairs, valid),
+            lambda f, c, im, a, b, v: fn_1(f, c, im, a, b, v) + (a, b, v),
+        ),
+        f"{m}._apply_swaps_sharded": SmokeCase(
+            f"{m}._apply_swaps_sharded",
+            fn_s,
+            (full_s, cache_s, idx_map, rows_img, pairs, pairs, pairs, pairs,
+             valid, per_shard, per_shard),
+            lambda f, c, im, *rest: fn_s(f, c, im, *rest) + rest,
+        ),
+    }
+
+
+# -- Pallas kernel ops ------------------------------------------------------
+
+
+def _kernel_cases() -> Dict[str, SmokeCase]:
+    g = GEOMETRY
+    table = jnp.zeros((64, g["dim"]), jnp.float32)
+    flat_ids = jnp.zeros((g["batch"],), jnp.int32)
+    seg = jnp.zeros((g["batch"],), jnp.int32)
+    v = jnp.zeros((g["batch"] // 2, 4, g["dim"]), jnp.float32)
+    q = jnp.zeros((2, 16, 2, g["dim"]), jnp.float32)
+    return {
+        "repro.kernels.embedding_bag.ops.embedding_bag": SmokeCase(
+            "repro.kernels.embedding_bag.ops.embedding_bag",
+            lambda t, i, sg: eb_ops.embedding_bag(
+                t, i, sg, num_segments=8, combiner="sum", max_bag=4
+            ),
+            (table, flat_ids, seg),
+        ),
+        "repro.kernels.fm_interaction.ops.fm_interaction": SmokeCase(
+            "repro.kernels.fm_interaction.ops.fm_interaction",
+            fm_ops.fm_interaction, (v,),
+        ),
+        "repro.kernels.flash_attention.ops.flash_attention": SmokeCase(
+            "repro.kernels.flash_attention.ops.flash_attention",
+            fa_ops.flash_attention, (q, q, q),
+        ),
+    }
+
+
+def build_cases() -> Dict[str, SmokeCase]:
+    """All smoke cases, keyed by registry name.  ``run`` cross-checks this
+    against :func:`repro.analysis.contracts.registry` — a registered entry
+    with no smoke case is itself a violation (the analyzer must trace every
+    entry point)."""
+    cases: Dict[str, SmokeCase] = {}
+    for part in (
+        _cache_cases(), _collection_cases(), _sharded_cases(),
+        _compute_step_case(), _refresh_cases(), _kernel_cases(),
+    ):
+        cases.update(part)
+    return cases
+
+
+def registered_without_smoke() -> Tuple[str, ...]:
+    return tuple(sorted(set(registry()) - set(build_cases())))

@@ -39,6 +39,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import INT_COUNTERS, contract
 from repro.core import freq as freq_lib
 from repro.core import transmitter
 from repro.core.policies import Policy, eviction_key
@@ -184,6 +185,11 @@ class CachePlan:
     slots: jnp.ndarray
 
 
+# max_sort_size quotes the analysis.smoke geometry (ids_per_step=16): planning
+# declares bounded-top-K, so only O(unique)-sized sorts are admissible.  The
+# full-capacity eviction argsort below trips this today — known-issue baseline
+# entry until ROADMAP item 3 (Pallas O(K) victim selection) lands.
+@contract(max_sort_size=64, int_counters=INT_COUNTERS)
 def plan_prepare(
     cfg: CacheConfig,
     state: CacheState,
@@ -395,6 +401,7 @@ def plan_prepare(
     )
 
 
+@contract(donates=("full_rows", "state"), int_counters=INT_COUNTERS, max_sort_size=0)
 def apply_plan(
     cfg: CacheConfig, full_rows: Any, state: CacheState, plan: CachePlan
 ) -> Tuple[Any, CacheState]:
@@ -470,6 +477,7 @@ def lookup_slots(state: CacheState, slots: jnp.ndarray, leaf: str | int = 0) -> 
     return jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
 
 
+@contract(donates=("full_rows",), int_counters=INT_COUNTERS, max_sort_size=0)
 def flush(cfg: CacheConfig, full_rows: Any, state: CacheState) -> Tuple[Any, CacheState]:
     """Write every resident row back to the full table (checkpoint barrier).
 
@@ -488,6 +496,7 @@ def flush(cfg: CacheConfig, full_rows: Any, state: CacheState) -> Tuple[Any, Cac
     return full_rows, state
 
 
+@contract(donates=("state",), int_counters=INT_COUNTERS, max_sort_size=0)
 def warmup(
     cfg: CacheConfig, full_rows: Any, state: CacheState
 ) -> Tuple[Any, CacheState]:

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import INT_COUNTERS, contract
 from repro.core import cache as cache_lib
 from repro.core import freq as freq_lib
 from repro.core import refresh as refresh_lib
@@ -316,12 +317,12 @@ class PlacementPlanner:
         self,
         budget_bytes: int,
         group_below_rows: int = 0,
-        arena: ArenaConfig = ArenaConfig(),
+        arena: Optional[ArenaConfig] = None,
         host_precision: Optional[str] = None,
     ):
         self.budget_bytes = int(budget_bytes)
         self.group_below_rows = int(group_below_rows)
-        self.arena = arena
+        self.arena = arena if arena is not None else ArenaConfig()
         self.host_precision = host_precision
 
     @staticmethod
@@ -1026,6 +1027,7 @@ class EmbeddingCollection:
             out[sname] = state.slabs[sname].cache.cached_rows["weight"]
         return out
 
+    @contract(max_sort_size=0)
     def gather(
         self,
         weights: Mapping[str, jnp.ndarray],
@@ -1106,6 +1108,7 @@ class EmbeddingCollection:
 
     # ----- updates ----------------------------------------------------------
 
+    @contract(donates=("state",), int_counters=INT_COUNTERS, max_sort_size=0)
     def apply_grads(
         self,
         state: CollectionState,

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import INT_COUNTERS, contract
 from repro.core import freq as freq_lib
 from repro.core import transmitter
 from repro.store import HostStore
@@ -164,6 +165,7 @@ def _permute_store(full: Any, to: jnp.ndarray, frm: jnp.ndarray) -> Any:
 # ---------------------------------------------------------------------------
 
 
+@contract(int_counters=INT_COUNTERS)
 @functools.partial(jax.jit, static_argnames=("buffer_rows", "writeback"))
 def _apply_swaps(
     full: Any,
@@ -281,6 +283,7 @@ def refresh_cached_slab(
 # ---------------------------------------------------------------------------
 
 
+@contract(int_counters=INT_COUNTERS)
 @functools.partial(jax.jit, static_argnames=("buffer_rows", "writeback"))
 def _apply_swaps_sharded(
     full: Any,

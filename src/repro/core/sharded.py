@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import INT_COUNTERS, contract
 from repro.core import cache as cache_lib
 from repro.core import freq as freq_lib
 from repro.core import refresh as refresh_lib
@@ -366,6 +367,10 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
 
     # ----- the non-diff bookkeeping pass ------------------------------------
 
+    # bounded-top-K declaration mirrors ``cache.plan_prepare`` (the vmapped
+    # per-shard plan inherits its full-capacity eviction argsort — same
+    # known-issue baseline entry until ROADMAP item 3).
+    @contract(max_sort_size=64, int_counters=INT_COUNTERS)
     def plan_prepare(
         self,
         state: CollectionState,
@@ -458,6 +463,7 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             writeback=writeback,
         )
 
+    @contract(donates=("state",), int_counters=INT_COUNTERS, max_sort_size=0)
     def apply_plan(
         self, state: CollectionState, plan: ShardedCollectionPlan
     ) -> CollectionState:
@@ -482,6 +488,9 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
 
     # ----- differentiable read path -----------------------------------------
 
+    # the exchange path: on a mesh this flatten + parent gather lowers to the
+    # row all-to-all, so its contract covers the cross-shard wire too.
+    @contract(max_sort_size=0)
     def gather(
         self,
         weights: Mapping[str, jnp.ndarray],

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
 
 INTERPRET = True  # flip to False on real TPU
@@ -75,6 +76,7 @@ def _bwd(num_segments, combiner, max_bag, res, g):
 _embedding_bag.defvjp(_fwd, _bwd)
 
 
+@contract(max_sort_size=0)
 @functools.partial(jax.jit, static_argnames=("num_segments", "combiner", "max_bag"))
 def embedding_bag(
     table: jnp.ndarray,

@@ -9,6 +9,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import contract
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -33,6 +34,7 @@ def _attn_bwd(causal, window, res, g):
 _attn.defvjp(_attn_fwd, _attn_bwd)
 
 
+@contract(max_sort_size=0)
 def flash_attention(
     q: jnp.ndarray,  # [B, S, Hq, hd] (model layout)
     k: jnp.ndarray,  # [B, S, Hkv, hd]

@@ -4,11 +4,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import contract
 from repro.kernels.fm_interaction.kernel import fm_interaction_pallas
 
 INTERPRET = True  # flip to False on real TPU
 
 
+@contract(max_sort_size=0)
 @jax.jit
 def fm_interaction(v: jnp.ndarray) -> jnp.ndarray:
     b = v.shape[0]

@@ -332,7 +332,7 @@ class Analyzer:
         # result charge.  A param consumed ONLY by such ops (XLA lowers a
         # donated scatter to a rolled while loop whose body slices one row and
         # dynamic-update-slices it back) must not be charged its full size.
-        for idx, pname in enumerate(fcomp.param_order):
+        for pname in fcomp.param_order:
             ptype = fcomp.params[pname]
             uses = usage.get(pname, [])
             reads = [

@@ -159,15 +159,21 @@ def main():
         if not hasattr(model, "plan_step"):
             raise SystemExit(f"--pipeline-depth needs a collection-backed arch; "
                              f"{args.arch} has no split plan/compute step")
+        # compute/apply consume the state they are passed, so donating arg 0
+        # lets XLA update the cache arena in place instead of double-buffering
+        # it.  plan_fn must NOT donate: planning reads the same state the
+        # overlapped compute is still using.
         trainer = PipelinedTrainer(
             tc,
             plan_fn=jax.jit(model.plan_step),
-            compute_fn=jax.jit(model.compute_step),
-            apply_fn=jax.jit(model.apply_step),
+            compute_fn=jax.jit(model.compute_step, donate_argnums=(0,)),
+            apply_fn=jax.jit(model.apply_step, donate_argnums=(0,)),
             **kw,
         )
     else:
-        trainer = Trainer(tc, step_fn=jax.jit(model.train_step), **kw)
+        trainer = Trainer(
+            tc, step_fn=jax.jit(model.train_step, donate_argnums=(0,)), **kw
+        )
     trainer.run()
     h = trainer.history
     print(f"\narch={args.arch} steps={len(h)} loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")

@@ -16,6 +16,7 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import INT_COUNTERS, contract
 from repro.core import cached_embedding as ce
 from repro.core.collection import EmbeddingCollection, FeatureBatch
 from repro.optim.optimizers import Optimizer
@@ -149,6 +150,9 @@ class CollectionTrainStep:
         weights — run it after the previous step's row update)."""
         return dict(state, emb=self.collection.apply_plan(state["emb"], plan))
 
+    # max_sort_size admits the batch-sized ``auc_proxy`` argsort at the
+    # analysis.smoke batch of 32, nothing capacity-sized.
+    @contract(donates=("state",), int_counters=INT_COUNTERS, max_sort_size=64)
     def compute_step(
         self,
         state: Dict[str, Any],

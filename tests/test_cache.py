@@ -37,7 +37,7 @@ def test_exactness_vs_oracle_stream(state_and_cfg):
     cfg, st = state_and_cfg
     step = jax.jit(lambda s, i: ce.embed_onehot(cfg, s, i))
     key = jax.random.PRNGKey(1)
-    for i in range(25):
+    for _ in range(25):
         key, k = jax.random.split(key)
         ids = jax.random.randint(k, (6, 2), 0, jnp.array([50, 30])).astype(jnp.int32)
         st, slots, emb = step(st, ids)
@@ -96,7 +96,7 @@ def test_hit_rate_improves_with_skew(state_and_cfg):
     st = ce.init_state(jax.random.PRNGKey(0), cfg, counts=zipf_counts(cfg.vocab))
     rng = np.random.default_rng(0)
     step = jax.jit(lambda s, i: ce.embed_onehot(cfg, s, i))
-    for i in range(30):
+    for _ in range(30):
         # zipf-distributed raw ids favour hot (low-rank) rows
         ids = (rng.zipf(1.7, size=(6, 2)) % np.array([50, 30])).astype(np.int32)
         st, _, _ = step(st, jnp.asarray(ids))

@@ -141,14 +141,14 @@ def test_pallas_bag_grad_respects_max_bag_truncation():
     flat = jnp.asarray([0, 1, 2, 3, 4, 5], jnp.int32)  # one bag of 6 lanes
     seg = jnp.zeros(6, jnp.int32)
     for combiner in ("sum", "mean"):
-        def loss(w):
+        def loss(w, combiner=combiner):
             return jnp.sum(
                 eb_ops.embedding_bag(w, flat, seg, 1, combiner=combiner, max_bag=4) ** 2
             )
         g = jax.grad(loss)(table)
         assert bool((np.asarray(g)[4:6] == 0).all()), combiner  # dropped lanes
         # numeric check against a jnp oracle over the kept lanes only
-        def ref(w):
+        def ref(w, combiner=combiner):
             rows = jnp.take(w, flat[:4], axis=0)
             out = rows.sum(0) / (4.0 if combiner == "mean" else 1.0)
             return jnp.sum(out**2)
@@ -240,8 +240,9 @@ def test_pool_pallas_fused_matches_reference_and_grads():
         fused = coll.pool({}, fb, combiner, weights=w, addresses=addr, use_pallas=True)["t"]
         np.testing.assert_allclose(np.asarray(ref), np.asarray(fused), rtol=1e-6)
 
-        g_ref = jax.grad(lambda w: jnp.sum(coll.pool(coll.gather(w, addr, fb), fb, combiner)["t"] ** 2))(w)
-        g_fus = jax.grad(lambda w: jnp.sum(
+        g_ref = jax.grad(lambda w, combiner=combiner: jnp.sum(
+            coll.pool(coll.gather(w, addr, fb), fb, combiner)["t"] ** 2))(w)
+        g_fus = jax.grad(lambda w, combiner=combiner: jnp.sum(
             coll.pool({}, fb, combiner, weights=w, addresses=addr, use_pallas=True)["t"] ** 2))(w)
         for k in g_ref:
             np.testing.assert_allclose(np.asarray(g_ref[k]), np.asarray(g_fus[k]), rtol=1e-5)

@@ -1,0 +1,99 @@
+"""Recompile guard: each trainer entry point compiles exactly ONCE.
+
+A silent retrace (weak-type drift, shape wobble, static-arg churn) costs a
+full XLA compile per step and — worse — serializes the pipelined trainer's
+overlap while losses stay correct.  These tests run the production wiring
+(including the ``donate_argnums`` launch/train.py uses) under a
+trace-counting harness: the wrapped Python body executes once per jit
+compilation, so its call count IS the compile count.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.data import synth
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.train.trainer import PipelinedTrainer, Trainer, TrainerConfig
+
+CFG = DLRMConfig(
+    vocab_sizes=(512, 128), n_dense=13, embed_dim=8, batch_size=16,
+    cache_ratio=0.25, lr=0.1, bottom_mlp=(16, 8), top_mlp=(16,),
+)
+
+
+def _make_batch_fn(cfg):
+    spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=cfg.n_dense)
+
+    def make_batch(step):
+        return {
+            k: jnp.asarray(v)
+            for k, v in synth.sparse_batch(spec, cfg.batch_size, 0, step).items()
+        }
+
+    return make_batch
+
+
+def _counting(fn):
+    """Trace-counting wrapper: the body runs once per jit COMPILATION (cached
+    executions never re-enter Python)."""
+    counts = {"n": 0}
+
+    def wrapper(*args, **kwargs):
+        counts["n"] += 1
+        return fn(*args, **kwargs)
+
+    return wrapper, counts
+
+
+def test_serial_trainer_compiles_once_over_six_steps():
+    model = DLRM(CFG)
+    step, n = _counting(model.train_step)
+    trainer = Trainer(
+        TrainerConfig(max_steps=6),
+        init_fn=lambda: model.init(jax.random.PRNGKey(0)),
+        step_fn=jax.jit(step, donate_argnums=(0,)),
+        make_batch=_make_batch_fn(CFG),
+    )
+    trainer.run()
+    assert len(trainer.history) == 6
+    assert n["n"] == 1, f"train_step traced {n['n']}x over 6 steps (retrace!)"
+
+
+def test_pipelined_trainer_depth3_each_stage_compiles_once():
+    model = DLRM(CFG)
+    plan, n_plan = _counting(model.plan_step)
+    compute, n_compute = _counting(model.compute_step)
+    apply_, n_apply = _counting(model.apply_step)
+    trainer = PipelinedTrainer(
+        TrainerConfig(max_steps=6, pipeline_depth=3),
+        init_fn=lambda: model.init(jax.random.PRNGKey(0)),
+        plan_fn=jax.jit(plan),
+        compute_fn=jax.jit(compute, donate_argnums=(0,)),
+        apply_fn=jax.jit(apply_, donate_argnums=(0,)),
+        make_batch=_make_batch_fn(CFG),
+    )
+    trainer.run()
+    assert len(trainer.history) == 6
+    for name, n in (("plan", n_plan), ("compute", n_compute), ("apply", n_apply)):
+        assert n["n"] == 1, (
+            f"{name}_step traced {n['n']}x over 6 steps / 2 groups (retrace!)"
+        )
+
+
+def test_donated_state_stays_trainable_and_matches_undonated():
+    """Donation is an aliasing hint, not a semantics change: the loss
+    trajectory with donate_argnums must equal the undonated one."""
+    mk = _make_batch_fn(CFG)
+
+    def run(donate):
+        model = DLRM(CFG)
+        kw = dict(donate_argnums=(0,)) if donate else {}
+        t = Trainer(
+            TrainerConfig(max_steps=4),
+            init_fn=lambda: model.init(jax.random.PRNGKey(0)),
+            step_fn=jax.jit(model.train_step, **kw),
+            make_batch=mk,
+        )
+        t.run()
+        return [h["loss"] for h in t.history]
+
+    assert run(donate=True) == run(donate=False)

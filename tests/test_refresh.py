@@ -55,7 +55,7 @@ def test_tracker_matches_numpy_decay_oracle():
     oracle = np.zeros((32,))
     prep = jax.jit(lambda s, f: coll.prepare(s, f))
     rng = np.random.default_rng(0)
-    for i in range(10):
+    for _ in range(10):
         ids = rng.integers(-1, 32, 6).astype(np.int32)
         state, _ = prep(state, col.FeatureBatch(ids={"t": jnp.asarray(ids)}))
         oracle *= d  # whole-vocab decay, one step
@@ -190,7 +190,7 @@ def test_refresh_noop_when_ranking_already_right():
     coll = col.EmbeddingCollection.create(tables, cache_ratio=0.25)
     state = coll.init(jax.random.PRNGKey(0))  # identity idx_map
     prep = jax.jit(lambda s, f: coll.prepare(s, f))
-    for i in range(6):  # traffic on the already-hot head ranks
+    for _ in range(6):  # traffic on the already-hot head ranks
         ids = jnp.asarray([0, 1, 2, 3, -1, -1, 0, 1], jnp.int32)
         state, _ = prep(state, col.FeatureBatch(ids={"t": ids}))
     state2, rep = coll.refresh(state)

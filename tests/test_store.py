@@ -95,7 +95,7 @@ def test_fp32_store_bit_identical_to_raw_tree():
     st_a = cache_lib.init_cache(cfg, {"weight": jnp.zeros((8,), jnp.float32)})
     st_b = jax.tree_util.tree_map(lambda x: x, st_a)
     rng = np.random.default_rng(0)
-    for i in range(12):
+    for _ in range(12):
         ids = jnp.asarray(rng.integers(0, 60, 8).astype(np.int32))
         raw, st_a, slots_a = cache_lib.prepare(cfg, raw, st_a, ids)
         store, st_b, slots_b = cache_lib.prepare(cfg, store, st_b, ids)
@@ -171,7 +171,7 @@ def test_quantized_store_matches_oracle_after_updates(codec):
     )
     st = ce.init_state(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    for i in range(6):
+    for _ in range(6):
         ids = jnp.asarray(rng.integers(0, (50, 30), size=(6, 2)).astype(np.int32))
         st, slots, emb = ce.embed_onehot(cfg, st, ids)
         st = ce.apply_row_grads(cfg, st, jnp.ones_like(st.cache.cached_rows["weight"]), lr=0.01)
