@@ -32,7 +32,7 @@ from repro.analysis.contracts import registry
 from repro.core import cache as cache_lib
 from repro.core import refresh as refresh_lib
 from repro.core.collection import EmbeddingCollection, FeatureBatch, TableConfig
-from repro.core.sharded import ShardedEmbeddingCollection
+from repro.core.sharded import RepArena, ShardedEmbeddingCollection
 from repro.kernels.embedding_bag import ops as eb_ops
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.fm_interaction import ops as fm_ops
@@ -43,7 +43,7 @@ __all__ = ["SmokeCase", "build_cases", "GEOMETRY"]
 # -- canonical geometry (quoted by @contract max_sort_size bounds) ----------
 GEOMETRY = dict(
     vocab=256, capacity=128, dim=8, ids=16, buffer_rows=64,
-    batch=32, tables=(192, 96), shards=2, swap_k=8,
+    batch=32, tables=(192, 96), shards=2, swap_k=8, rep_k=16, routed_w=48,
 )
 
 
@@ -185,14 +185,20 @@ def _collection_cases() -> Dict[str, SmokeCase]:
 
 def _sharded_cases() -> Dict[str, SmokeCase]:
     g = GEOMETRY
+    # replication + exchange codec + bounded plan width ON so the traces
+    # cover the arena lanes, the tracker mirror, the encoded row-leg, the
+    # ::rep SGD branch, and the compact-image scatter (routed_w < the 64-lane
+    # dedup width, so plan_prepare takes the compaction path).
     scoll = ShardedEmbeddingCollection.create(
         _toy_tables(), num_shards=g["shards"], cache_ratio=0.5,
-        buffer_rows=g["buffer_rows"],
+        buffer_rows=g["buffer_rows"], replicate_top_k=g["rep_k"],
+        exchange_codec="fp16", max_routed_per_shard=g["routed_w"],
     )
     state = scoll.init(jax.random.PRNGKey(1))
     fb = _toy_fb()
     plan0 = _zeros_like_shape(jax.eval_shape(scoll.plan_prepare, state, fb))
     weights = scoll.weights(state)
+    grads0 = _zeros_like_shape(jax.eval_shape(lambda w: w, weights))
 
     def plan_advance(s, f):
         p = scoll.plan_prepare(s, f)
@@ -201,6 +207,9 @@ def _sharded_cases() -> Dict[str, SmokeCase]:
     def apply_advance(s, p):
         s2 = scoll.apply_plan(s, p)
         return (s2, scoll.plan_prepare(s2, fb))
+
+    def grads_advance(s, grd):
+        return (scoll.apply_grads(s, grd, 0.05), grd)
 
     m = "repro.core.sharded.ShardedEmbeddingCollection"
     return {
@@ -213,6 +222,13 @@ def _sharded_cases() -> Dict[str, SmokeCase]:
         ),
         f"{m}.gather": SmokeCase(
             f"{m}.gather", scoll.gather, (weights, plan0.addresses, fb)
+        ),
+        f"{m}.apply_grads": SmokeCase(
+            f"{m}.apply_grads",
+            lambda s, grd: scoll.apply_grads(s, grd, 0.05),
+            (state, grads0),
+            grads_advance,
+            donate_argnums=(0,),
         ),
     }
 
@@ -283,8 +299,19 @@ def _refresh_cases() -> Dict[str, SmokeCase]:
     full_s = {"weight": jnp.zeros((s, vs, g["dim"]), jnp.float32)}
     rows_img = jnp.full((s, 2 * k), -1, jnp.int32)
     per_shard = jnp.zeros((s,), jnp.int32)
+    rep = RepArena(
+        rows=jnp.zeros((g["rep_k"], g["dim"]), jnp.float32),
+        score=jnp.zeros((g["rep_k"],), jnp.float32),
+        last_touch=jnp.zeros((g["rep_k"],), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+    )
     fn_s = functools.partial(
         refresh_lib._apply_swaps_sharded,
+        buffer_rows=g["buffer_rows"], writeback=True,
+    )
+    src_perm = jnp.arange(s * vs, dtype=jnp.int32)
+    fn_rb = functools.partial(
+        refresh_lib._apply_rebalance,
         buffer_rows=g["buffer_rows"], writeback=True,
     )
 
@@ -299,9 +326,15 @@ def _refresh_cases() -> Dict[str, SmokeCase]:
         f"{m}._apply_swaps_sharded": SmokeCase(
             f"{m}._apply_swaps_sharded",
             fn_s,
-            (full_s, cache_s, idx_map, rows_img, pairs, pairs, pairs, pairs,
-             valid, per_shard, per_shard),
-            lambda f, c, im, *rest: fn_s(f, c, im, *rest) + rest,
+            (full_s, cache_s, idx_map, rep, rows_img, pairs, pairs, pairs,
+             pairs, valid, per_shard, per_shard),
+            lambda f, c, im, r, *rest: fn_s(f, c, im, r, *rest) + rest,
+        ),
+        f"{m}._apply_rebalance": SmokeCase(
+            f"{m}._apply_rebalance",
+            fn_rb,
+            (full_s, cache_s, src_perm),
+            lambda f, c, sp: fn_rb(f, c, sp) + (sp,),
         ),
     }
 

@@ -276,7 +276,14 @@ class ShardAssignment:
     owner: np.ndarray  # int32 [vocab] freq rank -> owning shard
     local: np.ndarray  # int32 [vocab] freq rank -> row index on the owner
     shard_rows: np.ndarray  # int64 [S] real rows per shard (pads excluded)
-    shard_load: np.ndarray  # float64 [S] expected traffic (count mass) per shard
+    shard_load: np.ndarray  # float64 [S] expected ROUTED traffic per shard
+    # hot-row replication head: ranks < replicate_top_k live in a small arena
+    # replicated on every shard, so their lookups never enter the id/row
+    # exchange.  They still get (owner, local) slow-tier homes — appended
+    # AFTER the routed ranks, so they land at each shard's coldest local
+    # positions and never occupy warm cache slots — and carry zero routed
+    # load (``shard_load``/``imbalance`` meter only what actually routes).
+    replicate_top_k: int = 0
 
     @property
     def rows_per_shard(self) -> int:
@@ -285,7 +292,7 @@ class ShardAssignment:
         return -(-int(self.owner.shape[0]) // self.num_shards)
 
     def imbalance(self) -> float:
-        """max/mean expected traffic across shards (1.0 = perfectly even)."""
+        """max/mean expected routed traffic across shards (1.0 = even)."""
         mean = float(np.mean(self.shard_load))
         return float(np.max(self.shard_load)) / mean if mean > 0 else 1.0
 
@@ -431,55 +438,88 @@ class PlacementPlanner:
         vocab: int,
         num_shards: int,
         counts_ranked: Optional[np.ndarray] = None,
+        replicate_top_k: int = 0,
     ) -> ShardAssignment:
         """Device-assignment pass: spread a slab's frequency-ranked rows over
         ``num_shards`` model-axis shards, balancing expected hot-row traffic.
 
         ``counts_ranked`` is the slab's access counts in frequency-rank order
-        (descending — ``FreqStats.counts[inv_map]``, the same statistics that
-        drive ``host_precision="auto"``).  Greedy longest-processing-time:
-        ranks are taken hottest first and each goes to the least-loaded shard
-        that still has room (every shard holds at most ``ceil(vocab/S)`` rows
-        so the stacked state stays uniform).  Without counts the pass
+        (descending at init time — ``FreqStats.counts[inv_map]``; the live
+        re-balance pass feeds ``FreqTracker`` decayed scores, which need not
+        be monotone in rank).  Greedy longest-processing-time: routed ranks
+        are taken hottest first and each goes to the least-loaded shard that
+        still has room (every shard holds at most ``ceil(vocab/S)`` rows so
+        the stacked state stays uniform).  Without counts the pass
         degenerates to round-robin over ranks — under a Zipfian ordering that
         is already near-optimal traffic balance.  Deterministic: ties break
         by (rows held, shard index), so every host derives the identical
         assignment (a requirement, like ``build_freq_stats`` stability).
+
+        ``replicate_top_k`` marks ranks ``< K`` as replicated: they carry no
+        routed load (their lookups are served from the per-shard replicated
+        arena, never the exchange) and their slow-tier homes are appended
+        *after* all routed ranks, onto the least-filled shards — i.e. at each
+        shard's coldest local positions, outside the warm cache prefix.  With
+        ``replicate_top_k=0`` the pass is bit-identical to the historical
+        assignment.
         """
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         S = int(num_shards)
+        vocab = int(vocab)
+        K = min(max(int(replicate_top_k), 0), vocab)
         cap = -(-vocab // S)
-        ranks = np.arange(vocab, dtype=np.int64)
-        if counts_ranked is None or S == 1:
-            owner = (ranks % S).astype(np.int32)
-            local = (ranks // S).astype(np.int32)
-            load = np.zeros((S,), np.float64)
-            if counts_ranked is not None:
-                np.add.at(load, owner, np.asarray(counts_ranked, np.float64))
-            else:
-                np.add.at(load, owner, 1.0)
-        else:
-            import heapq
-
+        routed = np.arange(K, vocab, dtype=np.int64)
+        c = None
+        if counts_ranked is not None:
             c = np.asarray(counts_ranked, np.float64)
             if c.shape[0] != vocab:
                 raise ValueError(f"counts_ranked has {c.shape[0]} entries, want {vocab}")
-            owner = np.empty((vocab,), np.int32)
-            local = np.empty((vocab,), np.int32)
+        owner = np.empty((vocab,), np.int32)
+        local = np.empty((vocab,), np.int32)
+        if c is None or S == 1:
+            # round-robin over routed ranks, replicated homes appended last
+            # (K=0 reduces to owner=rank%S, local=rank//S exactly).
+            seq = np.concatenate([routed, np.arange(K, dtype=np.int64)])
+            pos = np.arange(vocab, dtype=np.int64)
+            owner[seq] = (pos % S).astype(np.int32)
+            local[seq] = (pos // S).astype(np.int32)
+        else:
+            import heapq
+
+            # LPT wants hottest-first; live re-balance scores are unsorted,
+            # so order routed ranks by descending mass (stable -> identity
+            # for the already-descending init-time counts).
+            hot_first = routed[np.argsort(-c[routed], kind="stable")]
+            sizes = np.zeros((S,), np.int64)
             heap = [(0.0, 0, s) for s in range(S)]  # (load, rows held, shard)
-            for r in range(vocab):
+            for r in hot_first:
                 ld, size, s = heapq.heappop(heap)
                 owner[r] = s
                 local[r] = size
+                sizes[s] = size + 1
                 if size + 1 < cap:  # full shards leave the heap for good
                     heapq.heappush(heap, (ld + c[r], size + 1, s))
-            load = np.zeros((S,), np.float64)
-            np.add.at(load, owner, c)
+            # replicated head: zero routed load, so placement only levels row
+            # counts — append to the least-filled shards with room.
+            rep_heap = [(int(sizes[s]), s) for s in range(S)]
+            heapq.heapify(rep_heap)
+            for r in range(K):
+                size, s = heapq.heappop(rep_heap)
+                owner[r] = s
+                local[r] = size
+                if size + 1 < cap:
+                    heapq.heappush(rep_heap, (size + 1, s))
+        load = np.zeros((S,), np.float64)
+        if routed.size:
+            if c is not None:
+                np.add.at(load, owner[routed], c[routed])
+            else:
+                np.add.at(load, owner[routed], 1.0)
         shard_rows = np.bincount(owner, minlength=S).astype(np.int64)
         return ShardAssignment(
             num_shards=S, owner=owner, local=local, shard_rows=shard_rows,
-            shard_load=load,
+            shard_load=load, replicate_top_k=K,
         )
 
 

@@ -43,6 +43,7 @@ __all__ = [
     "tracker_touch",
     "tracker_observe",
     "decayed_scores",
+    "decay_to",
 ]
 
 
@@ -280,6 +281,18 @@ def tracker_observe(
         win_hits=tracker.win_hits * d + hits.astype(jnp.float32),
         win_misses=tracker.win_misses * d + misses.astype(jnp.float32),
     )
+
+
+def decay_to(
+    score: jnp.ndarray, last_touch: jnp.ndarray, step: jnp.ndarray, half_life: int
+) -> jnp.ndarray:
+    """In-jit float32 twin of :func:`decayed_scores`: normalize lazy-decayed
+    masses to a common ``step``.  Broadcasts, so one call handles both the
+    flat replicated-arena tracker and the stacked per-shard tracker (pass
+    ``step[:, None]`` there).  Used by the live ``shard_imbalance`` metric
+    and the replicated-arena bookkeeping in ``core.sharded``."""
+    dt = jnp.maximum(step - last_touch, 0).astype(jnp.float32)
+    return score * jnp.exp2(-dt / half_life)
 
 
 def decayed_scores(

@@ -73,6 +73,11 @@ class RefreshConfig:
     exchange_budget: Optional[int] = None  # sharded: max slow-tier rows moved
     # ACROSS shards per refresh (2 per cross-shard pair); None = unbounded,
     # 0 = same-shard swaps only.  Unsharded slabs ignore it.
+    rebalance_threshold: Optional[float] = None  # sharded: when the LIVE
+    # routed-traffic imbalance (max/mean of per-shard decayed tracker mass)
+    # exceeds this after the swap pass, re-run ``assign_devices`` on the live
+    # scores and re-home every rank (``_apply_rebalance``).  None = homes
+    # stay where init placed them (the historical behavior).
 
 
 @dataclasses.dataclass
@@ -83,12 +88,16 @@ class RefreshReport:
     rows_moved: Dict[str, int] = dataclasses.field(default_factory=dict)
     cross_shard_rows: Dict[str, int] = dataclasses.field(default_factory=dict)
     deferred_swaps: Dict[str, int] = dataclasses.field(default_factory=dict)
+    rebalance_moves: Dict[str, int] = dataclasses.field(default_factory=dict)
+    rebalance_imbalance: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def add(self, slab: str, stats: Dict[str, int]) -> None:
         self.swaps[slab] = stats["swaps"]
         self.rows_moved[slab] = stats["rows_moved"]
         self.cross_shard_rows[slab] = stats.get("cross_shard_rows", 0)
         self.deferred_swaps[slab] = stats.get("deferred_swaps", 0)
+        self.rebalance_moves[slab] = stats.get("rebalance_moves", 0)
+        self.rebalance_imbalance[slab] = stats.get("rebalance_imbalance", 1.0)
 
     @property
     def total_swaps(self) -> int:
@@ -283,12 +292,53 @@ def refresh_cached_slab(
 # ---------------------------------------------------------------------------
 
 
+def _flat_view(full: Any) -> Any:
+    """Shard-stacked slow tier ([S, vs, ...] leaves) as a flat [S*vs, ...]
+    tree/store, so flat home ``owner * vs + local`` addresses rows."""
+    def rs(v):
+        return v.reshape((-1,) + v.shape[2:])
+
+    if isinstance(full, HostStore):
+        return HostStore(
+            data={k: rs(v) for k, v in full.data.items()},
+            sideband={k: rs(v) for k, v in full.sideband.items()},
+            codec=full.codec,
+            out_dtype=full.out_dtype,
+        )
+    return jax.tree_util.tree_map(rs, full)
+
+
+def _restack_like(flat: Any, like: Any) -> Any:
+    """Inverse of :func:`_flat_view`: reshape a flat tree/store back to the
+    shard-stacked leaf shapes of ``like``."""
+    if isinstance(flat, HostStore):
+        return HostStore(
+            data={k: v.reshape(like.data[k].shape) for k, v in flat.data.items()},
+            sideband={
+                k: v.reshape(like.sideband[k].shape) for k, v in flat.sideband.items()
+            },
+            codec=flat.codec,
+            out_dtype=flat.out_dtype,
+        )
+    return jax.tree_util.tree_map(lambda v, l: v.reshape(l.shape), flat, like)
+
+
+def _read_flat_rows(full: Any, idx: jnp.ndarray) -> jnp.ndarray:
+    """Decoded ``weight`` rows at flat homes ``idx`` (-1 lanes -> zero rows)
+    of a stacked slow tier."""
+    flat = _flat_view(full)
+    if isinstance(flat, HostStore):
+        return transmitter._gather_store_rows(flat, idx)["weight"]
+    return transmitter.gather_rows(flat, idx)["weight"]
+
+
 @contract(int_counters=INT_COUNTERS)
 @functools.partial(jax.jit, static_argnames=("buffer_rows", "writeback"))
 def _apply_swaps_sharded(
     full: Any,
     cache: Any,
     idx_map: jnp.ndarray,
+    rep: Any,  # sharded.RepArena (or None): the slab's replicated hot head
     rows_img: jnp.ndarray,  # int32 [S, 2K] involved local rows (-1 off-shard)
     pa: jnp.ndarray,  # int32 [K] flat home of each demoted rank (-1 pad)
     pb: jnp.ndarray,  # int32 [K] flat home of each promoted rank (-1 pad)
@@ -303,9 +353,19 @@ def _apply_swaps_sharded(
 ):
     """Jitted sharded surgery (padded to static K; compiled once per slab):
     per-shard write-back + invalidate under ``vmap``, then the flat content
-    exchange between the swapped ranks' fixed homes."""
+    exchange between the swapped ranks' fixed homes.
+
+    Replicated boundary: a demoted rank ``a < K`` lives in the replicated
+    arena, whose row (SGD-updated every step) and tracker slice are the
+    authoritative copies — any per-shard cache copy of its home never
+    diverges from init.  Before the home exchange the arena row + tracker
+    slice are pushed into the rank's home (so the exchange carries them to
+    the promoted rank's cold home); after it, the arena pulls the promoted
+    content back from the now-swapped home.  The arena and per-shard plan
+    clocks tick together, so raw (score, last_touch) interchange is exact."""
     S, vs = cache.row_to_slot.shape
     cap = cache.slot_to_row.shape[1]
+    K = int(rep.rows.shape[0]) if rep is not None else 0
     vocab = idx_map.shape[0]
 
     def shard_surgery(full_s, cache_s, rows_s):
@@ -330,6 +390,37 @@ def _apply_swaps_sharded(
         )
 
     full, cache = jax.vmap(shard_surgery)(full, cache, rows_img)
+
+    def fput(leaf2d, idx, vals):
+        fl = leaf2d.reshape((-1,) + leaf2d.shape[2:])
+        return fl.at[idx].set(vals, mode="drop").reshape(leaf2d.shape)
+
+    if K:
+        # demoted replicated ranks: push the arena's authoritative row +
+        # tracker slice into the rank's home (overwrites any never-diverged
+        # cache writeback above) so the generic exchange carries them.
+        am = valid & (a >= 0) & (a < K)
+        src = jnp.where(am, a, K)
+        dst = jnp.where(am, pa, S * vs)
+        if writeback:
+            rows_push = jnp.take(rep.rows, src, axis=0, mode="fill", fill_value=0)
+            flatf = transmitter.write_rows(
+                {"weight": rows_push}, _flat_view(full), dst, am,
+                buffer_rows=buffer_rows,
+            )
+            full = _restack_like(flatf, full)
+        tr0 = cache.tracker
+        cache = dataclasses.replace(
+            cache,
+            tracker=dataclasses.replace(
+                tr0,
+                score=fput(tr0.score, dst,
+                           jnp.take(rep.score, src, mode="fill", fill_value=0)),
+                last_touch=fput(tr0.last_touch, dst,
+                                jnp.take(rep.last_touch, src, mode="fill",
+                                         fill_value=0)),
+            ),
+        )
 
     # swap slow-tier content between the two ranks' flat homes
     vv = jnp.concatenate([valid, valid])
@@ -360,6 +451,24 @@ def _apply_swaps_sharded(
     )
     cache = dataclasses.replace(cache, tracker=tr)
 
+    if K:
+        # pull the promoted content back into the arena: after the exchange,
+        # home of rank a holds the promoted raw id's row + tracker slice.
+        idxp = jnp.where(am, pa, -1)
+        rows_new = _read_flat_rows(full, idxp)
+        arena_dst = jnp.where(am, a, K)
+        flsc = tr.score.reshape(-1)
+        fllt = tr.last_touch.reshape(-1)
+        safe = jnp.where(am, pa, 0)
+        rep = dataclasses.replace(
+            rep,
+            rows=rep.rows.at[arena_dst].set(
+                rows_new.astype(rep.rows.dtype), mode="drop"
+            ),
+            score=rep.score.at[arena_dst].set(flsc[safe], mode="drop"),
+            last_touch=rep.last_touch.at[arena_dst].set(fllt[safe], mode="drop"),
+        )
+
     perm = jnp.arange(vocab, dtype=jnp.int32)
     perm = perm.at[jnp.where(valid, a, vocab)].set(
         b.astype(jnp.int32), mode="drop"
@@ -368,7 +477,7 @@ def _apply_swaps_sharded(
         a.astype(jnp.int32), mode="drop"
     )
     idx_map = perm[idx_map]
-    return full, cache, idx_map
+    return full, cache, idx_map, rep
 
 
 def refresh_sharded_slab(
@@ -386,6 +495,8 @@ def refresh_sharded_slab(
     quantity reduces to the unsharded pass bit-for-bit.
     """
     cache = slab.cache
+    rep = getattr(slab, "rep", None)
+    K = int(rep.rows.shape[0]) if rep is not None else 0
     S, vs = cache.row_to_slot.shape
     cap = int(cache.slot_to_row.shape[1])
     steps = np.asarray(jax.device_get(cache.step))  # [S]; equal across shards
@@ -398,7 +509,16 @@ def refresh_sharded_slab(
     local = np.asarray(jax.device_get(slab.rank_local), np.int64)
     vocab = owner.shape[0]
     scores = local_scores[owner, local]  # [vocab], rank order
-    hot = local < cap  # rank homes inside the per-shard warm boundary
+    if K:
+        # replicated ranks bypass the per-shard plans, so their signal lives
+        # in the arena tracker (same plan clock as the per-shard caches).
+        scores[:K] = freq_lib.decayed_scores(
+            jax.device_get(rep.score), jax.device_get(rep.last_touch),
+            float(jax.device_get(rep.step)), ccfg.freq_half_life,
+        )
+    # hot = inside the per-shard warm boundary OR in the replicated arena —
+    # the swap set crosses the replicated boundary like the capacity one.
+    hot = (local < cap) | (np.arange(vocab) < K)
     a, b = plan_swaps(scores, hot, cfg.max_swaps, cfg.min_gain)
     if a.size and cfg.exchange_budget is not None:
         cross = owner[a] != owner[b]
@@ -426,14 +546,15 @@ def refresh_sharded_slab(
     # by each changed home — both sum to the collection-wide totals.
     swaps_ps = np.bincount(owner[a], minlength=S).astype(np.int32)
     rows_ps = np.bincount(owner[involved], minlength=S).astype(np.int32)
-    full, new_cache, idx_map = _apply_swaps_sharded(
-        slab.full, cache, slab.idx_map, jnp.asarray(rows_img),
+    full, new_cache, idx_map, new_rep = _apply_swaps_sharded(
+        slab.full, cache, slab.idx_map, rep, jnp.asarray(rows_img),
         jnp.asarray(pa), jnp.asarray(pb), ap, bp, valid,
         jnp.asarray(swaps_ps), jnp.asarray(rows_ps),
         buffer_rows=ccfg.buffer_rows, writeback=writeback,
     )
+    kw = {"rep": new_rep} if rep is not None else {}
     new_slab = dataclasses.replace(
-        slab, full=full, cache=new_cache, idx_map=idx_map
+        slab, full=full, cache=new_cache, idx_map=idx_map, **kw
     )
     cross_rows = int(2 * np.sum(owner[a] != owner[b]))
     return new_slab, {
@@ -442,3 +563,69 @@ def refresh_sharded_slab(
         "cross_shard_rows": cross_rows,
         "deferred_swaps": deferred,
     }
+
+
+# ---------------------------------------------------------------------------
+# traffic-aware re-homing (sharded re-balance)
+# ---------------------------------------------------------------------------
+
+
+@contract(int_counters=INT_COUNTERS)
+@functools.partial(jax.jit, static_argnames=("buffer_rows", "writeback"))
+def _apply_rebalance(
+    full: Any,
+    cache: Any,
+    src_for_dest: jnp.ndarray,  # int32 [S*vs] new flat home -> old flat home
+    *,
+    buffer_rows: int,
+    writeback: bool,
+):
+    """Jitted re-home surgery for one sharded slab: write every resident row
+    back (the dirty cache copy is authoritative), drop all residency, then
+    permute the slow tier + tracker flat rows old-home -> new-home.
+
+    ``src_for_dest`` is a full [S*vs] gather map (identity on positions that
+    stay put or are padding).  Moving ENCODED payload + sideband keeps the
+    move itself bit-exact for every codec; rank identities (``idx_map``) are
+    untouched — this is re-homing, not re-ranking — so lookups through the
+    caller-installed new ``rank_owner``/``rank_local`` resolve to exactly the
+    pre-rebalance values (codec round trip for dirty rows, as everywhere).
+    The caller re-warms the emptied per-shard caches afterwards."""
+    cap = cache.slot_to_row.shape[1]
+
+    def shard_flush(full_s, cache_s):
+        slots = jnp.arange(cap, dtype=jnp.int32)
+        rows = cache_s.slot_to_row
+        act = rows >= 0
+        if writeback:
+            full_s = transmitter.move_rows(
+                cache_s.cached_rows, full_s, slots, rows, act,
+                buffer_rows=buffer_rows,
+            )
+        return full_s, dataclasses.replace(
+            cache_s,
+            slot_to_row=jnp.full_like(cache_s.slot_to_row, -1),
+            row_to_slot=jnp.full_like(cache_s.row_to_slot, -1),
+        )
+
+    full, cache = jax.vmap(shard_flush)(full, cache)
+
+    def flat_perm(leaf):
+        flatl = leaf.reshape((-1,) + leaf.shape[2:])
+        return flatl[src_for_dest].reshape(leaf.shape)
+
+    if isinstance(full, HostStore):
+        full = HostStore(
+            data={k: flat_perm(v) for k, v in full.data.items()},
+            sideband={k: flat_perm(v) for k, v in full.sideband.items()},
+            codec=full.codec,
+            out_dtype=full.out_dtype,
+        )
+    else:
+        full = jax.tree_util.tree_map(flat_perm, full)
+    tr = cache.tracker
+    tr = dataclasses.replace(
+        tr, score=flat_perm(tr.score), last_touch=flat_perm(tr.last_touch)
+    )
+    cache = dataclasses.replace(cache, tracker=tr)
+    return full, cache

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.store.host_store import HostStore
 
-__all__ = ["move_rows", "gather_rows", "scatter_rows", "num_rounds"]
+__all__ = ["move_rows", "write_rows", "gather_rows", "scatter_rows", "num_rounds"]
 
 
 def num_rounds(k: int, buffer_rows: int) -> int:
@@ -136,3 +136,21 @@ def move_rows(
     if rounds == 1:
         return body(0, dst_tree)
     return jax.lax.fori_loop(0, rounds, body, dst_tree)
+
+
+def write_rows(
+    rows: Any,
+    dst_tree: Any,
+    dst_idx: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    buffer_rows: int,
+) -> Any:
+    """Scatter an explicit block of ``rows`` (row i -> ``dst_idx[i]``) into
+    ``dst_tree`` through the same bounded staging buffer as :func:`move_rows`
+    — encode-on-writeback applies when the destination is a ``HostStore``.
+    Used by the sharded collection to push its replicated arena back to the
+    rows' slow-tier homes (flush, refresh demotions)."""
+    k = dst_idx.shape[0]
+    src_idx = jnp.arange(k, dtype=dst_idx.dtype)
+    return move_rows(rows, dst_tree, src_idx, dst_idx, active, buffer_rows=buffer_rows)

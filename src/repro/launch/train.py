@@ -25,10 +25,17 @@ def cache_policy(name):
 
 
 def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
-                   model_shards: int = 0, policy=None):
+                   model_shards: int = 0, policy=None,
+                   replicate_top_k: int = 0, exchange_codec: str = "fp32",
+                   max_routed_per_shard: int = 0):
     if model_shards and not arch.startswith("dlrm"):
         raise SystemExit(f"--model-shards is wired for dlrm archs; {arch} "
                          f"builds an unsharded collection")
+    if (replicate_top_k or exchange_codec != "fp32"
+            or max_routed_per_shard) and not model_shards:
+        raise SystemExit("--replicate-top-k / --exchange-codec / "
+                         "--max-routed-per-shard shape the sharded exchange; "
+                         "they need --model-shards >= 1")
     if arch.startswith("dlrm"):
         from repro.models.dlrm import DLRM, DLRMConfig
 
@@ -36,7 +43,10 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
                          batch_size=batch, cache_ratio=0.02, lr=0.3,
                          bottom_mlp=(64, 32), top_mlp=(64,),
                          host_precision=host_precision,
-                         model_shards=model_shards, policy=policy)
+                         model_shards=model_shards, policy=policy,
+                         replicate_top_k=replicate_top_k,
+                         exchange_codec=exchange_codec,
+                         max_routed_per_shard=max_routed_per_shard)
         model = DLRM(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes, n_dense=13)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
@@ -96,6 +106,22 @@ def main():
                          "and HostStore slice (dlrm archs; run under a mesh "
                          "whose model axis has N devices, or on one device "
                          "for functional testing)")
+    ap.add_argument("--replicate-top-k", type=int, default=0,
+                    help="hybrid parallel: K hottest ranks per cached slab "
+                         "live in a replicated arena on every shard — their "
+                         "lanes skip the all-to-all entirely (0 = off, "
+                         "bit-identical layout to pre-replication)")
+    ap.add_argument("--exchange-codec", default="fp32",
+                    choices=["fp32", "fp16", "int8"],
+                    help="hybrid parallel: codec for the routed row-leg of "
+                         "the shard exchange; fp32 = bit-exact, fp16/int8 "
+                         "shrink the cross-shard wire 2x/~4x")
+    ap.add_argument("--max-routed-per-shard", type=int, default=0,
+                    help="hybrid parallel: static per-shard plan-width bound "
+                         "(0 = full-width planning).  Bounds the per-shard "
+                         "cache-plan cost so planning stops scaling with the "
+                         "shard count; too tight a bound raises through the "
+                         "uniq_overflows guard instead of dropping lanes")
     ap.add_argument("--cache-policy", default=None,
                     choices=["freq_lfu", "lru", "runtime_lfu", "uvm_row"],
                     help="cache eviction policy (core.policies.Policy): "
@@ -134,7 +160,10 @@ def main():
     else:
         model, make, flush = _recsys_runner(args.arch, args.batch,
                                             args.host_precision, args.model_shards,
-                                            policy=cache_policy(args.cache_policy))
+                                            policy=cache_policy(args.cache_policy),
+                                            replicate_top_k=args.replicate_top_k,
+                                            exchange_codec=args.exchange_codec,
+                                            max_routed_per_shard=args.max_routed_per_shard)
 
     if args.cache_policy and not hasattr(model, "collection"):
         raise SystemExit(f"--cache-policy needs a collection-backed arch; "
@@ -192,8 +221,11 @@ def main():
         if args.model_shards:
             imb = h[-1].get("shard_imbalance", 1.0)
             print(f"hybrid parallel: {args.model_shards} shards, "
-                  f"exchange {h[-1].get('exchange_bytes', 0)/1e6:.1f} MB total, "
-                  f"routed-load imbalance {imb:.2f}x")
+                  f"exchange {h[-1].get('exchange_bytes', 0)/1e6:.1f} MB total "
+                  f"(ids {h[-1].get('exchange_id_bytes', 0)/1e6:.1f} MB + rows "
+                  f"{h[-1].get('exchange_row_bytes', 0)/1e6:.1f} MB "
+                  f"[{args.exchange_codec}], top-{args.replicate_top_k} "
+                  f"replicated), live imbalance {imb:.2f}x")
 
 
 if __name__ == "__main__":

@@ -55,6 +55,17 @@ class DLRMConfig:
     # shard over N model-axis shards (each with its own cache arena and
     # HostStore slice), dense params + DEVICE tables stay data-parallel.
     model_shards: int = 0
+    # hybrid parallel only: K hottest ranks per cached slab live in a
+    # replicated arena on every shard (0 = off, bit-identical to pre-
+    # replication layout).
+    replicate_top_k: int = 0
+    # hybrid parallel only: codec for the routed row-leg of the exchange —
+    # "fp32" (bit-exact, default) | "fp16" | "int8".
+    exchange_codec: str = "fp32"
+    # hybrid parallel only: static per-shard plan-width bound (0 = exact
+    # full-width planning).  Bound too tight -> uniq_overflows trips the
+    # trainer guard instead of silently dropping lanes.
+    max_routed_per_shard: int = 0
 
     @property
     def n_sparse(self) -> int:
@@ -100,7 +111,11 @@ class DLRM(common.CollectionModelMixin):
             from repro.core.sharded import ShardedEmbeddingCollection
 
             self.collection = ShardedEmbeddingCollection.create(
-                tables, num_shards=cfg.model_shards, **common_kw
+                tables, num_shards=cfg.model_shards,
+                replicate_top_k=cfg.replicate_top_k,
+                exchange_codec=cfg.exchange_codec,
+                max_routed_per_shard=cfg.max_routed_per_shard,
+                **common_kw,
             )
         else:
             self.collection = col.EmbeddingCollection.create(tables, **common_kw)

@@ -185,6 +185,13 @@ class Trainer:
         )
         if xchg is not None:
             rec["exchange_bytes"] = xchg
+            # id-leg vs row-leg split (row leg priced at the exchange codec's
+            # encoded width) — same exact-integer accounting as the total.
+            for leg, key in (("exchange_id_bytes", "exchange_id_lane_bytes"),
+                             ("exchange_row_bytes", "exchange_row_lane_bytes")):
+                v = exact_metric_bytes(metrics, "exchange_routed_lanes", key)
+                if v is not None:
+                    rec[leg] = v
         self.history.append(rec)
         last = step_i + 1 >= cfg.max_steps
         if self.checkpointer and ((step_i + 1) % cfg.ckpt_every == 0 or last):

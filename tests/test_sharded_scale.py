@@ -1,0 +1,483 @@
+"""Scaling fronts of the sharded collection (hot-row replication, dedup'd /
+compressed exchange, traffic-aware re-balancing).
+
+Exactness bar (ISSUE PR7): replication off + 1 shard stays bit-identical to
+the unsharded collection; fp32 sharded training stays bit-identical to
+single-device WITH replication on; the encoded exchange agrees to codec
+noise; re-homing is pure data movement (lookups bitwise unchanged).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collection as col
+from repro.core import refresh as refresh_lib
+from repro.core.sharded import ShardedEmbeddingCollection, flat_store
+
+
+def small_tables(dim=8, ids=16):
+    return [
+        col.TableConfig("big", vocab=512, dim=dim, ids_per_step=ids, cache_ratio=0.2),
+        col.TableConfig("small", vocab=96, dim=dim, ids_per_step=ids, cache_ratio=0.3),
+    ]
+
+
+def rand_fb(tables, n, seed):
+    rng = np.random.default_rng(seed)
+    return col.FeatureBatch(ids={
+        t.name: jnp.asarray(rng.integers(-1, t.vocab, n).astype(np.int32))
+        for t in tables
+    })
+
+
+# --------------------------------------------------------------------------
+# placement: replicate_top_k
+# --------------------------------------------------------------------------
+
+
+def test_assign_devices_replicate_top_k_homes():
+    counts = 1e6 / (np.arange(1000, dtype=np.float64) + 1) ** 0.8
+    a = col.PlacementPlanner.assign_devices(1000, 4, counts, replicate_top_k=32)
+    assert a.replicate_top_k == 32
+    # every rank (replicated ones included) still has exactly one home
+    assert a.shard_rows.sum() == 1000
+    for s in range(4):
+        got = np.sort(a.local[a.owner == s])
+        np.testing.assert_array_equal(got, np.arange(a.shard_rows[s]))
+    # replicated ranks carry zero routed load: the metered mass is exactly
+    # the non-head mass, and balancing it stays tight
+    np.testing.assert_allclose(a.shard_load.sum(), counts[32:].sum())
+    assert a.imbalance() < 1.05
+    # K = 0 reduces to the historical assignment bit-for-bit
+    b0 = col.PlacementPlanner.assign_devices(1000, 4, counts)
+    b1 = col.PlacementPlanner.assign_devices(1000, 4, counts, replicate_top_k=0)
+    np.testing.assert_array_equal(b0.owner, b1.owner)
+    np.testing.assert_array_equal(b0.local, b1.local)
+
+
+def test_assign_devices_replicate_without_counts_round_robin():
+    a = col.PlacementPlanner.assign_devices(10, 3, None, replicate_top_k=4)
+    # routed ranks 4..9 first, then the head 0..3 at the coldest positions
+    seq = np.concatenate([np.arange(4, 10), np.arange(4)])
+    np.testing.assert_array_equal(a.owner[seq], np.arange(10) % 3)
+    np.testing.assert_array_equal(a.local[seq], np.arange(10) // 3)
+
+
+# --------------------------------------------------------------------------
+# hot-row replication: exactness + the lanes it removes from the exchange
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_shards", [1, 3])
+def test_replicated_lookup_matches_dense_reference_bitwise(num_shards):
+    tables = small_tables()
+    coll = ShardedEmbeddingCollection.create(
+        tables, num_shards=num_shards, cache_ratio=0.2, replicate_top_k=16
+    )
+    rng = np.random.default_rng(1)
+    counts = {t.name: rng.integers(0, 50, t.vocab) for t in tables}
+    state = coll.init(jax.random.PRNGKey(0), counts=counts)
+    step = jax.jit(lambda s, fb: coll.lookup(s, fb))
+    for i in range(10):
+        fb = rand_fb(tables, 16, seed=100 + i)
+        state, addr, rows = step(state, fb)
+        ref = coll.dense_reference(coll.flush(state), fb)
+        for f in fb.features:
+            np.testing.assert_array_equal(np.asarray(rows[f]), np.asarray(ref[f]))
+
+
+def test_replicated_dlrm_loss_bit_identical_fp32():
+    """The tentpole exactness property: replication ON, fp32 — the sharded
+    loss trajectory equals single-device bit for bit (arena lanes read the
+    same values the cache would have served; the combined replicated-slice
+    gradient equals the unsharded row gradient)."""
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+
+    base = dict(vocab_sizes=(2048, 256, 64), embed_dim=8, batch_size=16,
+                cache_ratio=0.15, lr=0.2, bottom_mlp=(16, 8), top_mlp=(16,))
+    spec = synth.ZipfSparseSpec(vocab_sizes=base["vocab_sizes"], n_dense=13)
+
+    def make(s):
+        return {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 16, 0, s).items()}
+
+    def losses(shards, k):
+        model = DLRM(DLRMConfig(**base, model_shards=shards, replicate_top_k=k))
+        state = model.init(jax.random.PRNGKey(0))
+        step = jax.jit(model.train_step)
+        out = []
+        for i in range(8):
+            state, m = step(state, make(i))
+            out.append(float(m["loss"]))
+        return out
+
+    ref = losses(0, 0)
+    assert ref == losses(2, 8)
+    assert ref == losses(4, 64)
+
+
+def test_replicated_grads_match_unsharded_leaf_for_leaf():
+    """apply_grads through the replicated arena lands the same fp32 values
+    the unsharded table update would — checked row-for-row after flush."""
+    tables = small_tables()
+    rng = np.random.default_rng(5)
+    counts = {t.name: rng.integers(0, 50, t.vocab) for t in tables}
+    ref = col.EmbeddingCollection.create(tables, cache_ratio=0.2)
+    sc = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.2, replicate_top_k=12
+    )
+
+    def sgd_steps(coll, n=5):
+        state = coll.init(jax.random.PRNGKey(0), counts=counts)
+        for i in range(n):
+            fb = rand_fb(tables, 16, seed=500 + i)
+            state, addr = coll.prepare(state, fb)
+
+            def loss_fn(w):
+                rows = coll.gather(w, addr, fb)
+                return sum(jnp.sum(r * r) for r in rows.values())
+
+            grads = jax.grad(loss_fn)(coll.weights(state))
+            state = coll.apply_grads(state, grads, 0.1)
+        return coll.flush(state)
+
+    st_ref, st_sh = sgd_steps(ref), sgd_steps(sc)
+    for t in tables:
+        ids = jnp.arange(t.vocab, dtype=jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(ref.full_lookup(st_ref, t.name, ids)),
+            np.asarray(sc.full_lookup(st_sh, t.name, ids)),
+        )
+
+
+def test_fully_replicated_slab_routes_zero_lanes():
+    tables = [col.TableConfig("t", vocab=128, dim=8, ids_per_step=8, cache_ratio=0.3)]
+    sc = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.3, replicate_top_k=128
+    )
+    state = sc.init(jax.random.PRNGKey(0))
+    for i in range(4):
+        fb = rand_fb(tables, 8, seed=i)
+        state, addr, rows = sc.lookup(state, fb)
+        refr = sc.dense_reference(sc.flush(state), fb)
+        np.testing.assert_array_equal(np.asarray(rows["t"]), np.asarray(refr["t"]))
+    m = sc.metrics(state)
+    assert int(m["exchange_routed_lanes"][col.SHARED_ARENA]) == 0
+    assert float(m["exchange_bytes"]) == 0.0
+
+
+# --------------------------------------------------------------------------
+# dedup'd exchange
+# --------------------------------------------------------------------------
+
+
+def test_dedup_routes_each_unique_id_once():
+    tables = [col.TableConfig("t", vocab=128, dim=8, ids_per_step=8, cache_ratio=0.3)]
+    sc = ShardedEmbeddingCollection.create(tables, num_shards=2, cache_ratio=0.3)
+    state = sc.init(jax.random.PRNGKey(0))
+    fb = col.FeatureBatch(ids={"t": jnp.asarray([3, 3, 3, 7, -1, 7, 9, 3], jnp.int32)})
+    state, _, rows = sc.lookup(state, fb)
+    state, _, _ = sc.lookup(state, fb)
+    m = sc.metrics(state)
+    # 3 unique valid ids per step, cumulative over 2 steps — NOT 6 raw lanes
+    assert int(m["exchange_routed_lanes"][col.SHARED_ARENA]) == 2 * 3
+    ref = sc.dense_reference(sc.flush(state), fb)
+    np.testing.assert_array_equal(np.asarray(rows["t"]), np.asarray(ref["t"]))
+    # duplicate lanes are literally the same gathered row
+    r = np.asarray(rows["t"])
+    np.testing.assert_array_equal(r[0], r[1])
+    np.testing.assert_array_equal(r[0], r[7])
+
+
+def test_dedup_across_features_of_a_shared_arena():
+    tables = [
+        col.TableConfig("a", vocab=64, dim=8, ids_per_step=4, cache_ratio=0.4),
+        col.TableConfig("b", vocab=64, dim=8, ids_per_step=4, cache_ratio=0.4),
+    ]
+    sc = ShardedEmbeddingCollection.create(tables, num_shards=2, cache_ratio=0.4)
+    state = sc.init(jax.random.PRNGKey(0))
+    fb = col.FeatureBatch(ids={
+        "a": jnp.asarray([1, 1, 2, 2], jnp.int32),
+        "b": jnp.asarray([1, 2, 2, -1], jnp.int32),
+    })
+    state, _, rows = sc.lookup(state, fb)
+    m = sc.metrics(state)
+    # arena-rank dedup spans features: {a:1, a:2, b:1, b:2} -> 4 routed lanes
+    assert int(m["exchange_routed_lanes"][col.SHARED_ARENA]) == 4
+    ref = sc.dense_reference(sc.flush(state), fb)
+    for f in ("a", "b"):
+        np.testing.assert_array_equal(np.asarray(rows[f]), np.asarray(ref[f]))
+
+
+def test_dedup_duplicate_heavy_training_stays_bit_identical():
+    """Loss bit-identity under duplicate-heavy batches: the dedup'd routing
+    must produce the same gathers AND the same per-row gradient sums."""
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+
+    base = dict(vocab_sizes=(64, 16), embed_dim=8, batch_size=32,
+                cache_ratio=0.5, lr=0.2, bottom_mlp=(16, 8), top_mlp=(16,))
+    spec = synth.ZipfSparseSpec(vocab_sizes=base["vocab_sizes"], n_dense=13)
+
+    def make(s):  # tiny vocabs -> most lanes are duplicates
+        return {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, 32, 0, s).items()}
+
+    def losses(shards):
+        model = DLRM(DLRMConfig(**base, model_shards=shards))
+        state = model.init(jax.random.PRNGKey(0))
+        step = jax.jit(model.train_step)
+        out = []
+        for i in range(6):
+            state, m = step(state, make(i))
+            out.append(float(m["loss"]))
+        return out
+
+    assert losses(0) == losses(2)
+
+
+# --------------------------------------------------------------------------
+# compressed exchange (row-leg codec)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec,atol", [("fp16", 2e-3), ("int8", 5e-2)])
+def test_encoded_exchange_gathers_allclose(codec, atol):
+    tables = small_tables()
+    sc = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.2, exchange_codec=codec
+    )
+    state = sc.init(jax.random.PRNGKey(0))
+    for i in range(6):
+        fb = rand_fb(tables, 16, seed=700 + i)
+        state, _, rows = sc.lookup(state, fb)
+        ref = sc.dense_reference(sc.flush(state), fb)
+        for f in fb.features:
+            np.testing.assert_allclose(
+                np.asarray(rows[f]), np.asarray(ref[f]), atol=atol
+            )
+
+
+def test_exchange_codec_fp32_stays_bit_exact():
+    """exchange_codec='fp32' is the identity: normalized to the plain gather
+    path, bit-identical lookups."""
+    tables = small_tables()
+    a = ShardedEmbeddingCollection.create(tables, num_shards=2, cache_ratio=0.2)
+    b = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.2, exchange_codec="fp32"
+    )
+    assert b.exchange_codec is None
+    sa, sb = a.init(jax.random.PRNGKey(0)), b.init(jax.random.PRNGKey(0))
+    for i in range(4):
+        fb = rand_fb(tables, 16, seed=800 + i)
+        sa, _, ra = a.lookup(sa, fb)
+        sb, _, rb = b.lookup(sb, fb)
+        for f in fb.features:
+            np.testing.assert_array_equal(np.asarray(ra[f]), np.asarray(rb[f]))
+
+
+@pytest.mark.parametrize("codec", ["fp16", "int8"])
+def test_encoded_exchange_losses_allclose_to_unsharded(codec):
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+
+    base = dict(vocab_sizes=(1024, 128), embed_dim=8, batch_size=16,
+                cache_ratio=0.1, lr=0.2, bottom_mlp=(16, 8), top_mlp=(16,))
+    spec = synth.ZipfSparseSpec(vocab_sizes=base["vocab_sizes"], n_dense=13)
+
+    def losses(shards, **kw):
+        model = DLRM(DLRMConfig(**base, model_shards=shards, **kw))
+        state = model.init(jax.random.PRNGKey(0))
+        step = jax.jit(model.train_step)
+        out = []
+        for i in range(8):
+            batch = {k: jnp.asarray(v)
+                     for k, v in synth.sparse_batch(spec, 16, 0, i).items()}
+            state, m = step(state, batch)
+            out.append(float(m["loss"]))
+        return out
+
+    np.testing.assert_allclose(losses(0), losses(2, exchange_codec=codec),
+                               atol=5e-3)
+
+
+def test_exchange_metrics_split_id_and_row_legs():
+    tables = [col.TableConfig("t", vocab=128, dim=8, ids_per_step=8, cache_ratio=0.3)]
+    sc = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.3, exchange_codec="int8"
+    )
+    state = sc.init(jax.random.PRNGKey(0))
+    fb = col.FeatureBatch(ids={"t": jnp.asarray([1, 2, 3, -1, -1, 5, 6, -1], jnp.int32)})
+    state, _ = sc.prepare(state, fb)
+    state, _ = sc.prepare(state, fb)
+    m = sc.metrics(state)
+    lanes = int(m["exchange_routed_lanes"][col.SHARED_ARENA])
+    assert lanes == 2 * 5
+    id_b = int(m["exchange_id_lane_bytes"][col.SHARED_ARENA])
+    row_b = int(m["exchange_row_lane_bytes"][col.SHARED_ARENA])
+    assert id_b == 4
+    assert row_b < 8 * 4  # encoded row-leg beats the fp32 wire
+    assert int(m["exchange_lane_bytes"][col.SHARED_ARENA]) == id_b + row_b
+    assert float(m["exchange_bytes"]) == lanes * (id_b + row_b)
+    assert float(m["exchange_id_bytes"]) == lanes * id_b
+    assert float(m["exchange_row_bytes"]) == lanes * row_b
+    hist = np.asarray(m["exchange_per_shard_lanes"])
+    assert hist.shape == (2,) and hist.sum() == lanes
+
+
+# --------------------------------------------------------------------------
+# live imbalance metric + traffic-aware re-balance
+# --------------------------------------------------------------------------
+
+
+def _skew_collection():
+    tables = [col.TableConfig("t", vocab=128, dim=8, ids_per_step=16, cache_ratio=0.25)]
+    sc = ShardedEmbeddingCollection.create(tables, num_shards=2, cache_ratio=0.25)
+    state = sc.init(jax.random.PRNGKey(0))  # counts=None -> rank == id
+    # without counts the round-robin places even ranks on shard 0: feeding
+    # only even ids drives ALL routed traffic through shard 0
+    for i in range(8):
+        ids = (np.arange(16) * 2 + 2 * i) % 128
+        fb = col.FeatureBatch(ids={"t": jnp.asarray(ids.astype(np.int32))})
+        state, _ = sc.prepare(state, fb)
+    return sc, state
+
+
+def test_shard_imbalance_metric_is_live():
+    sc, state = _skew_collection()
+    m = sc.metrics(state)
+    # all decayed tracker mass sits on shard 0 -> live max/mean == S == 2
+    assert float(m["shard_imbalance"]) > 1.8
+    assert float(m["shard_imbalance_routed"]) > 1.8
+    hist = np.asarray(m["exchange_per_shard_lanes"])
+    assert hist[0] > 0 and hist[1] == 0
+
+
+def test_refresh_rebalance_rehomes_hot_rows_and_stays_exact():
+    sc, state = _skew_collection()
+    probe = col.FeatureBatch(ids={"t": jnp.asarray(np.arange(128, dtype=np.int32))})
+    before = sc.dense_reference(sc.flush(state), probe)
+    owner0 = np.asarray(state.slabs[col.SHARED_ARENA].rank_owner).copy()
+    imb0 = float(sc.metrics(state)["shard_imbalance"])
+
+    cfg = refresh_lib.RefreshConfig(max_swaps=0, rebalance_threshold=1.2)
+    state, report = sc.refresh(state, cfg)
+    assert report.rebalance_imbalance[col.SHARED_ARENA] > 1.2
+    assert report.rebalance_moves[col.SHARED_ARENA] > 0
+    owner1 = np.asarray(state.slabs[col.SHARED_ARENA].rank_owner)
+    assert (owner0 != owner1).any()
+
+    # pure data movement: every id reads the exact same row after re-homing
+    after = sc.dense_reference(sc.flush(state), probe)
+    np.testing.assert_array_equal(np.asarray(before["t"]), np.asarray(after["t"]))
+    # and the live imbalance the re-balance planned against actually fell
+    assert float(sc.metrics(state)["shard_imbalance"]) < imb0
+    # below threshold -> second pass is a no-op
+    state2, report2 = sc.refresh(state, cfg)
+    assert report2.rebalance_moves[col.SHARED_ARENA] == 0
+
+
+def test_refresh_rebalance_respects_threshold():
+    sc, state = _skew_collection()
+    cfg = refresh_lib.RefreshConfig(max_swaps=0, rebalance_threshold=10.0)
+    owner0 = np.asarray(state.slabs[col.SHARED_ARENA].rank_owner).copy()
+    state, report = sc.refresh(state, cfg)
+    assert report.rebalance_moves[col.SHARED_ARENA] == 0
+    np.testing.assert_array_equal(
+        owner0, np.asarray(state.slabs[col.SHARED_ARENA].rank_owner)
+    )
+
+
+# --------------------------------------------------------------------------
+# migration: pre-replication checkpoints fail loudly
+# --------------------------------------------------------------------------
+
+
+def test_checkpoint_from_pre_replication_layout_fails_loudly(tmp_path):
+    from repro.train import checkpoint as ckpt
+
+    tables = small_tables()
+    old = ShardedEmbeddingCollection.create(tables, num_shards=2, cache_ratio=0.2)
+    state = old.init(jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 3, {"emb": old.flush(state)})
+
+    new = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.2, replicate_top_k=16
+    )
+    like = jax.eval_shape(lambda: {"emb": new.init(jax.random.PRNGKey(0), warm=False)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), like)
+
+
+def test_replicated_checkpoint_roundtrip_exact(tmp_path):
+    from repro.train import checkpoint as ckpt
+
+    tables = small_tables()
+    sc = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.2, replicate_top_k=16
+    )
+    state = sc.init(jax.random.PRNGKey(0))
+    for i in range(3):
+        state, _ = sc.prepare(state, rand_fb(tables, 16, seed=900 + i))
+    state = sc.flush(state)
+    ckpt.save(str(tmp_path), 5, {"emb": state})
+    like = jax.eval_shape(lambda: {"emb": sc.init(jax.random.PRNGKey(0), warm=False)})
+    restored, step = ckpt.restore(str(tmp_path), like)
+    assert step == 5
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        {"emb": state}, restored,
+    )
+
+
+# --------------------------------------------------------------------------
+# bounded per-shard plan width: max_routed_per_shard
+# --------------------------------------------------------------------------
+
+
+def test_bounded_plan_width_stays_bit_identical():
+    """With an ample bound the compact [S, W] plan must reproduce the
+    full-width path bit for bit: same addresses, same lookup rows, same
+    telemetry, zero overflows."""
+    tables = small_tables()
+    mk = lambda w: ShardedEmbeddingCollection.create(
+        tables, num_shards=3, cache_ratio=0.2, replicate_top_k=8,
+        max_routed_per_shard=w,
+    )
+    rng = np.random.default_rng(5)
+    counts = {t.name: rng.integers(0, 50, t.vocab) for t in tables}
+    a, b = mk(0), mk(24)  # dedup width is 2*16=32 lanes; 24 < 32 compacts
+    sa = a.init(jax.random.PRNGKey(0), counts=counts)
+    sb = b.init(jax.random.PRNGKey(0), counts=counts)
+    step_a = jax.jit(lambda s, fb: a.lookup(s, fb))
+    step_b = jax.jit(lambda s, fb: b.lookup(s, fb))
+    for i in range(8):
+        fb = rand_fb(tables, 16, seed=700 + i)
+        sa, addr_a, rows_a = step_a(sa, fb)
+        sb, addr_b, rows_b = step_b(sb, fb)
+        for f in fb.features:
+            np.testing.assert_array_equal(np.asarray(addr_a[f]), np.asarray(addr_b[f]))
+            np.testing.assert_array_equal(np.asarray(rows_a[f]), np.asarray(rows_b[f]))
+    ma, mb = a.metrics(sa), b.metrics(sb)
+    assert int(mb["uniq_overflows"]) == 0
+    np.testing.assert_array_equal(
+        np.asarray(ma["exchange_per_shard_lanes"]),
+        np.asarray(mb["exchange_per_shard_lanes"]),
+    )
+
+
+def test_bounded_plan_width_overflow_is_loud():
+    """A bound tighter than one shard's routed demand must surface through
+    uniq_overflows (the trainer's exactness guard), never drop lanes
+    silently."""
+    tables = [col.TableConfig("t", vocab=128, dim=8, ids_per_step=16,
+                              cache_ratio=0.5)]
+    sc = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.5, max_routed_per_shard=3
+    )
+    state = sc.init(jax.random.PRNGKey(0))  # counts=None -> rank == id
+    # 8 distinct even ids: all route to shard 0 (round-robin homes), so a
+    # width-3 image must overflow by 5 lanes
+    fb = col.FeatureBatch(ids={"t": jnp.arange(0, 16, 2, dtype=jnp.int32)})
+    state, _ = sc.prepare(state, fb)
+    assert int(sc.metrics(state)["uniq_overflows"]) == 5
