@@ -243,5 +243,59 @@ def bench_host_store(t: Table):
         )
 
 
+def bench_obs_overhead(t: Table):
+    """Observability guardrail: the full obs stack — span tracing, the
+    per-step JSONL record, the exact-counter hub reconstruction, and the
+    step-time histogram — must cost < 2% of steady-state step time.  Both
+    arms run the REAL Trainer loop over precomputed batches (identical
+    schedule; only the obs wiring differs), so the delta isolates exactly
+    what `--obs-dir` adds per step."""
+    import tempfile
+
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    if SMOKE:
+        vocabs, batch, steps = (20_000, 5_000), 128, 8
+    else:
+        vocabs, batch, steps = (500_000, 200_000, 100_000, 50_000), 4096, 12
+    cfg = DLRMConfig(
+        vocab_sizes=vocabs, embed_dim=32, batch_size=batch, cache_ratio=0.05,
+        lr=0.1, bottom_mlp=(64, 32), top_mlp=(64,),
+    )
+    spec = synth.ZipfSparseSpec(vocab_sizes=vocabs, n_dense=13)
+    batches = [
+        {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
+        for s in range(steps)
+    ]
+
+    def steady(times):
+        times.sort()
+        return times[len(times) // 2]
+
+    def run(obs_dir):
+        model = DLRM(cfg)
+        tr = Trainer(
+            TrainerConfig(max_steps=steps, obs_dir=obs_dir),
+            init_fn=lambda: model.init(jax.random.PRNGKey(0)),
+            step_fn=jax.jit(model.train_step, donate_argnums=0),
+            # modulo: the Prefetcher reads ahead past the final step
+            make_batch=lambda s: batches[s % steps],
+        )
+        tr.run()
+        # steady-state median over post-compile steps, from the trainer's
+        # own per-step wall clock (the same dt both arms record)
+        return steady([r["time_s"] for r in tr.history[1:]])
+
+    sec_off = run(None)
+    with tempfile.TemporaryDirectory() as d:
+        sec_on = run(d)
+    overhead = sec_on / max(sec_off, 1e-12) - 1.0
+    t.add("cacheops/obs_off", sec_off * 1e6, f"batch={batch} steps={steps}")
+    t.add("cacheops/obs_on", sec_on * 1e6,
+          f"overhead={overhead * 100:+.2f}% (guardrail < 2%)")
+
+
 ALL = [bench_cache_overhead, bench_collection_placement, bench_pipeline,
-       bench_host_store]
+       bench_host_store, bench_obs_overhead]

@@ -24,6 +24,17 @@ like ``EmbeddingCollection.gather`` are linted as jit bodies too):
   pytree state must be rebuilt, not mutated; locals (``d = dict(state); ...``)
   are fine.
 
+One additional rule applies to the HOST-side metric-collection modules
+(``repro.train.trainer``, ``repro.serve.engine``, ``repro.obs.*``) rather
+than jit bodies:
+
+* ``ast-obs-host-sync`` — an explicit sync primitive (``jax.device_get`` /
+  ``.item()`` / ``.block_until_ready()``) outside the documented
+  once-per-step sync points.  The observability layer's overhead contract is
+  ONE deliberate block per step (the trainer's loss fetch in ``_post_step``;
+  the serve response fetch in ``score``); a stray sync anywhere else in
+  those modules silently serializes JAX's async dispatch pipeline.
+
 Parameters annotated as plain Python scalars (``int``/``bool``/``str``/
 ``float``), ``*Config`` types, or named ``self``/``cls``/``cfg``/``config``
 are treated as static and never count as traced.  A line containing
@@ -246,6 +257,51 @@ def _check_dataclass(cls: ast.ClassDef, ctx: _Ctx) -> None:
     )
 
 
+# -- obs host-sync discipline ------------------------------------------------
+#
+# Metric collection must not add device->host round trips: everything the
+# hub records per step rides the step's one deliberate blocking fetch.  In
+# these modules, sync primitives may only appear inside the named functions.
+_OBS_SYNC_MODULES = ("repro.train.trainer", "repro.serve.engine", "repro.obs")
+_OBS_SYNC_OK = {
+    "_post_step",       # trainer: the once-per-step blocking point
+    "_check_window",    # pipelined trainer: per-GROUP residency fail-fast
+    "summary",          # on-demand reporting, not per-step
+    "score",            # serve: the response IS the fetch
+    "observe",          # ExactCounter: cumulative-counter reconstruction
+    "observe_embedding_metrics",  # MetricsHub: the one batched family fetch
+    "_as_int_map",      # ExactCounter normalization helper
+}
+
+
+def _lint_obs_sync(tree: ast.AST, ctx: _Ctx) -> None:
+    def walk(node: ast.AST, fname: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                walk(child, child.name)
+                continue
+            if isinstance(child, ast.Call):
+                f = child.func
+                sync = None
+                if isinstance(f, ast.Attribute) and f.attr in (
+                    "item", "block_until_ready",
+                ):
+                    sync = f".{f.attr}()"
+                elif _unparse(f) in ("jax.device_get", "device_get"):
+                    sync = "jax.device_get()"
+                if sync is not None and fname not in _OBS_SYNC_OK:
+                    ctx.add(
+                        "ast-obs-host-sync", child,
+                        f"{sync} in '{fname}' — metric collection must not "
+                        "add device->host syncs outside the documented "
+                        "once-per-step points "
+                        f"({', '.join(sorted(_OBS_SYNC_OK))})",
+                    )
+            walk(child, fname)
+
+    walk(tree, "<module>")
+
+
 def _module_name(path: Path, root: Path) -> str:
     try:
         rel = path.resolve().relative_to(root.resolve())
@@ -275,6 +331,10 @@ def lint_source(
         out=[],
     )
     _walk_defs(tree, ctx, "", in_jit=False)
+    if any(
+        module == m or module.startswith(m + ".") for m in _OBS_SYNC_MODULES
+    ):
+        _lint_obs_sync(tree, ctx)
     return ctx.out
 
 

@@ -180,6 +180,9 @@ def _collection_cases() -> Dict[str, SmokeCase]:
             grads_advance,
             donate_argnums=(0,),
         ),
+        f"{m}.metrics": SmokeCase(
+            f"{m}.metrics", lambda s: coll.metrics(s), (state,)
+        ),
     }
 
 
@@ -229,6 +232,9 @@ def _sharded_cases() -> Dict[str, SmokeCase]:
             (state, grads0),
             grads_advance,
             donate_argnums=(0,),
+        ),
+        f"{m}.metrics": SmokeCase(
+            f"{m}.metrics", lambda s: scoll.metrics(s), (state,)
         ),
     }
 

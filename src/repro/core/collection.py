@@ -54,6 +54,7 @@ from repro.core import cache as cache_lib
 from repro.core import freq as freq_lib
 from repro.core import refresh as refresh_lib
 from repro.core.policies import Policy
+from repro.obs.hub import ExactCounter
 from repro.store import HostStore, PrecisionPolicy, SlabGeometry, get_codec
 
 __all__ = [
@@ -74,6 +75,20 @@ __all__ = [
 ]
 
 SHARED_ARENA = "__shared__"
+
+# The exact-counter contract of a ``metrics()`` dict: every per-slab
+# cumulative counter (and its static per-unit byte size) that
+# ``repro.obs.hub.MetricsHub.observe_embedding_metrics`` reconstructs
+# host-side must leave jit as int32/uint32 — a float cast anywhere in between
+# silently reintroduces the 2^24 resolution drift the pattern exists to kill.
+METRICS_INT_COUNTERS: Tuple[str, ...] = (
+    r"\['slab_(hits|misses|refresh_swaps|refresh_rows)'\]",
+    r"\['host_(moved_rows|row_bytes)'\]",
+    r"\['exchange_(routed_lanes|lane_bytes|id_lane_bytes|row_lane_bytes"
+    r"|per_shard_lanes)'\]",
+    r"\['(cache_misses|cache_evictions|uniq_overflows|refresh_swaps"
+    r"|refresh_rows_moved)'\]$",
+)
 
 
 class Placement(enum.Enum):
@@ -1276,6 +1291,10 @@ class EmbeddingCollection:
 
     # ----- telemetry / accounting -------------------------------------------
 
+    # jit-adjacent: traced inside every compute_step — the int-counter
+    # contract pins the per-slab counter families the obs hub reconstructs,
+    # and max_sort_size=0 asserts metric collection never adds a sort.
+    @contract(int_counters=METRICS_INT_COUNTERS, max_sort_size=0)
     def metrics(
         self, state: CollectionState, writeback: bool = True
     ) -> Dict[str, jnp.ndarray]:
@@ -1302,6 +1321,8 @@ class EmbeddingCollection:
         row_bytes_map: Dict[str, jnp.ndarray] = {}
         slab_hits: Dict[str, jnp.ndarray] = {}
         slab_misses: Dict[str, jnp.ndarray] = {}
+        slab_ref_swaps: Dict[str, jnp.ndarray] = {}
+        slab_ref_rows: Dict[str, jnp.ndarray] = {}
         for sname, spec in self.cached_slabs.items():
             c = state.slabs[sname].cache
             hits = hits + jnp.sum(c.hits)
@@ -1314,6 +1335,8 @@ class EmbeddingCollection:
             win_m = win_m + jnp.sum(c.tracker.win_misses)
             ref_swaps = ref_swaps + jnp.sum(c.tracker.refresh_swaps)
             ref_rows = ref_rows + jnp.sum(c.tracker.refresh_rows)
+            slab_ref_swaps[sname] = jnp.sum(c.tracker.refresh_swaps).astype(jnp.int32)
+            slab_ref_rows[sname] = jnp.sum(c.tracker.refresh_rows).astype(jnp.int32)
             full = state.slabs[sname].full
             row_bytes = (
                 full.row_wire_bytes(batch_dims=full.data["weight"].ndim - 1)
@@ -1344,10 +1367,12 @@ class EmbeddingCollection:
             "host_moved_rows": moved_rows,
             "host_row_bytes": row_bytes_map,
             # per-slab cumulative int32 counters: wrap-free exact totals are
-            # reconstructed host-side (``ExactCounterTotals``) — the int32
-            # scalars above wrap past 2^31 on long runs.
+            # reconstructed host-side (``repro.obs.hub``) — the int32 scalars
+            # above wrap past 2^31 on long runs.
             "slab_hits": slab_hits,
             "slab_misses": slab_misses,
+            "slab_refresh_swaps": slab_ref_swaps,
+            "slab_refresh_rows": slab_ref_rows,
         }
 
     def _slab_codec(self, sname: str) -> str:
@@ -1449,35 +1474,14 @@ def exact_metric_bytes(
     return sum(int(counts[k]) * int(unit[k]) for k in counts)
 
 
-class ExactCounterTotals:
-    """Wrap-free exact totals over cumulative int32 device counters.
+class ExactCounterTotals(ExactCounter):
+    """Back-compat spelling of :class:`repro.obs.hub.ExactCounter`.
 
-    The in-jit ``hits``/``misses`` accumulators are int32 (x64 is off) and
-    WRAP past 2^31 on long runs — the same class of silent drift the float32
-    ``host_wire_bytes`` scalar had (see :func:`exact_metric_bytes`).  The fix
-    mirrors that pattern host-side: feed each observation of the per-slab
-    cumulative counters (``metrics()['slab_hits']`` / ``['slab_misses']``)
-    to :meth:`update`; the per-interval DELTA is recovered modulo 2^32 —
-    exact whenever fewer than 2^31 events happen between observations, which
-    one step can never exceed — and summed in Python integers.  Totals count
-    from the first observation's raw value (exact for fresh states; a state
-    restored with an already-wrapped counter under-reports only the
-    pre-restore portion).  Idempotent under repeated observation of the same
-    values (delta 0), so summaries may call it freely.
-    """
-
-    def __init__(self):
-        self._prev: Dict[str, int] = {}
-        self._total: Dict[str, int] = {}
+    The wrap-safe modulo-2^32 delta accumulation this class introduced (PR5)
+    now lives in the observability hub — ONE implementation shared by the
+    trainer, the serve engine, and the benchmarks instead of a copy per call
+    site.  Kept as an alias so pre-hub callers (``update(per_slab)``)
+    keep working unchanged."""
 
     def update(self, per_slab: Mapping[str, Any]) -> int:
-        for k, v in per_slab.items():
-            cur = int(jax.device_get(v))
-            delta = (cur - self._prev.get(k, 0)) % (1 << 32)
-            self._prev[k] = cur
-            self._total[k] = self._total.get(k, 0) + delta
-        return self.total
-
-    @property
-    def total(self) -> int:
-        return sum(self._total.values())
+        return self.observe(per_slab)

@@ -73,6 +73,7 @@ from repro.core import freq as freq_lib
 from repro.core import refresh as refresh_lib
 from repro.core import transmitter
 from repro.core.collection import (
+    METRICS_INT_COUNTERS,
     ArenaConfig,
     CollectionState,
     DeviceSlab,
@@ -1154,6 +1155,10 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
 
     # ----- telemetry / accounting -------------------------------------------
 
+    # jit-adjacent: traced inside every sharded compute_step — the int-counter
+    # contract pins the exchange/refresh counter families the obs hub
+    # reconstructs, and max_sort_size=0 asserts telemetry never adds a sort.
+    @contract(int_counters=METRICS_INT_COUNTERS, max_sort_size=0)
     def metrics(
         self, state: CollectionState, writeback: bool = True
     ) -> Dict[str, jnp.ndarray]:

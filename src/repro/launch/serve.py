@@ -29,6 +29,12 @@ def main():
                          "re-rank the read-only cache from online decayed "
                          "counters every N scored batches (pure reindexing — "
                          "scores unchanged, hit rate adapts to traffic)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="observability output directory: streams per-batch "
+                         "JSONL (exact counters, the latency histogram, span "
+                         "aggregates) to <dir>/serve.jsonl and a Chrome "
+                         "trace to <dir>/serve.trace.json; render with "
+                         "`python -m repro.obs.report <dir>/serve.jsonl`")
     args = ap.parse_args()
     policy = cache_policy(args.cache_policy)
 
@@ -76,6 +82,7 @@ def main():
         refresh_fn=(lambda s: model.refresh(s, writeback=False))
         if args.refresh_interval else None,
         refresh_every=args.refresh_interval or None,
+        obs_dir=args.obs_dir,
     )
     n = 0
     step = 0
@@ -85,9 +92,14 @@ def main():
         n += args.batch
         step += 1
     summary = engine.summary()
+    engine.close()
     print("stats:", summary)
     print(f"cache hit rate: {summary['hit_rate']:.1%} | "
           f"host<->device traffic: {summary['host_wire_bytes']/1e6:.2f} MB")
+    if args.obs_dir:
+        print(f"observability: {engine.hub.jsonl_path} "
+              f"(render: python -m repro.obs.report {engine.hub.jsonl_path}) "
+              f"| chrome trace: {engine.trace_path}")
 
 
 if __name__ == "__main__":

@@ -135,6 +135,20 @@ def main():
                          "(pipelined runs refresh at group boundaries).  "
                          "Pure reindexing: fp32 losses are bit-identical "
                          "with or without it (recsys archs only)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="observability output directory: streams per-step "
+                         "JSONL (exact counters, loss, stage spans, the "
+                         "step-time histogram) to <dir>/train.jsonl and a "
+                         "Chrome trace to <dir>/train.trace.json; render "
+                         "with `python -m repro.obs.report <dir>/train.jsonl`")
+    ap.add_argument("--obs-annotate", action="store_true",
+                    help="also enter jax.profiler.TraceAnnotation per stage "
+                         "span so device-timeline captures carry the same "
+                         "stage names")
+    ap.add_argument("--history-limit", type=int, default=0,
+                    help="0 = keep full in-memory history (legacy); N = keep "
+                         "only the last N step records in memory (the full "
+                         "stream is on disk when --obs-dir is set)")
     args = ap.parse_args()
 
     if args.arch == "gatedgcn":
@@ -176,7 +190,9 @@ def main():
         refresh_fn = model.refresh
     tc = TrainerConfig(max_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=25,
                        pipeline_depth=args.pipeline_depth,
-                       refresh_interval=args.refresh_interval or None)
+                       refresh_interval=args.refresh_interval or None,
+                       obs_dir=args.obs_dir, obs_annotate=args.obs_annotate,
+                       history_limit=args.history_limit or None)
     kw = dict(
         init_fn=lambda: model.init(jax.random.PRNGKey(0)),
         make_batch=make,
@@ -205,7 +221,9 @@ def main():
         )
     trainer.run()
     h = trainer.history
-    print(f"\narch={args.arch} steps={len(h)} loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
+    # history may be trimmed to a tail (--history-limit): report real steps
+    print(f"\narch={args.arch} steps={h[-1]['step'] + 1} "
+          f"loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
     if "hit_rate" in h[-1]:
         print(f"cache hit rate: {h[-1]['hit_rate']:.1%}")
     if args.refresh_interval and "refresh_swaps" in h[-1]:
@@ -226,6 +244,10 @@ def main():
                   f"{h[-1].get('exchange_row_bytes', 0)/1e6:.1f} MB "
                   f"[{args.exchange_codec}], top-{args.replicate_top_k} "
                   f"replicated), live imbalance {imb:.2f}x")
+    if args.obs_dir:
+        print(f"observability: {trainer.hub.jsonl_path} "
+              f"(render: python -m repro.obs.report {trainer.hub.jsonl_path}) "
+              f"| chrome trace: {trainer.trace_path}")
 
 
 if __name__ == "__main__":

@@ -6,52 +6,54 @@ mixed-precision host store the faulted rows are dequantized on load — the
 cached working set serves at full precision while the host-resident long
 tail costs fp16/int8 bytes (and crosses the link encoded).  Requests are
 padded to the compiled batch size (recsys serve shapes are fixed) and
-latency/hit-rate stats are tracked per batch.
+latency/hit-rate stats are tracked per batch through the observability
+layer: deterministic fixed-bucket latency histograms (``repro.obs.hist``)
+and the same exact-int counter hub the trainer uses (``repro.obs.hub``).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import NULL_TRACER, FixedHistogram, MetricsHub, Tracer
 
 __all__ = ["ServeEngine", "ServeStats"]
 
 
 @dataclasses.dataclass
 class ServeStats:
-    """Latency telemetry with O(1) memory under sustained traffic.
+    """Latency telemetry with O(1) memory and DETERMINISTIC percentiles.
 
-    ``latencies`` is a fixed-size reservoir (Vitter's Algorithm R with a
-    seeded rng, so summaries are reproducible): every batch is counted in
-    ``batches``/``total_latency_s``, while the reservoir keeps a uniform
-    sample of per-batch latencies for the percentile estimates.
+    Every batch lands in a fixed log-bucket histogram
+    (:class:`repro.obs.hist.FixedHistogram`), which replaced the seeded
+    sampling reservoir: the reservoir's percentiles were a random function
+    of arrival ORDER (two identical latency populations could summarize
+    differently), while the histogram is order-independent and reports a
+    guaranteed upper BOUND per quantile with <=~26% relative bucket error —
+    the right direction to be wrong in for latency SLOs.  ``summary()``
+    keeps the original ``p50_ms``/``p99_ms`` keys and adds ``p95_ms``/
+    ``p999_ms``; the tail above the top bucket reports the exact max.
     """
 
     requests: int = 0
     batches: int = 0
     total_latency_s: float = 0.0
-    reservoir_size: int = 2048
-    latencies: List[float] = dataclasses.field(default_factory=list)
-    _rng: np.random.Generator = dataclasses.field(
-        default_factory=lambda: np.random.default_rng(0), repr=False
-    )
+    hist: FixedHistogram = dataclasses.field(default_factory=FixedHistogram.latency)
 
     def observe(self, dt: float) -> None:
         self.batches += 1
         self.total_latency_s += dt
-        if len(self.latencies) < self.reservoir_size:
-            self.latencies.append(dt)
-        else:  # replace with probability size/seen — uniform over all batches
-            j = int(self._rng.integers(0, self.batches))
-            if j < self.reservoir_size:
-                self.latencies[j] = dt
+        self.hist.observe(dt)
 
     def p(self, q: float) -> float:
-        return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
+        """Latency quantile bound in seconds (``q`` in percent, e.g. 99)."""
+        return self.hist.quantile(q / 100.0)
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -59,7 +61,9 @@ class ServeStats:
             "batches": self.batches,
             "mean_ms": 1e3 * self.total_latency_s / max(self.batches, 1),
             "p50_ms": 1e3 * self.p(50),
+            "p95_ms": 1e3 * self.p(95),
             "p99_ms": 1e3 * self.p(99),
+            "p999_ms": 1e3 * self.p(99.9),
         }
 
 
@@ -83,6 +87,13 @@ class ServeEngine:
         #   live state, re-ranking the cache toward the traffic it actually
         #   serves.  Scores are unchanged (pure reindexing); only hit rates
         #   move.  Runs between batches, never during a score call.
+        obs_dir: Optional[str] = None,
+        obs_run: str = "serve",
+        # ^ None keeps the hub sink-less (counters still exact, spans off).
+        #   With a directory, per-batch records + the latency histogram +
+        #   span aggregates stream to <obs_dir>/<obs_run>.jsonl and a Chrome
+        #   trace is exported by ``close()``.
+        obs_annotate: bool = False,
     ):
         self.score_fn = jax.jit(score_fn)
         self.state = state
@@ -93,20 +104,28 @@ class ServeEngine:
         self.refresh_every = refresh_every
         self._batches_since_refresh = 0
         self.stats = ServeStats()
-        # wrap-free exact hit/miss totals (see collection.ExactCounterTotals)
-        from repro.core.collection import ExactCounterTotals
-
-        self._exact_hits = ExactCounterTotals()
-        self._exact_misses = ExactCounterTotals()
+        self.obs_dir = obs_dir
+        self.obs_run = obs_run
+        # same hub the trainer uses: the ONE wrap-safe reconstruction point
+        # for the cumulative in-jit int32 counters (hits/misses, host rows
+        # and encoded wire bytes, exchange lanes) — exact Python ints even
+        # under sustained traffic that wraps the device accumulators.
+        self.hub = MetricsHub(run_dir=obs_dir, run=obs_run)
+        self.tracer = (
+            Tracer(annotate=obs_annotate)
+            if (obs_dir or obs_annotate)
+            else NULL_TRACER
+        )
+        self.trace_path: Optional[str] = None
 
     def summary(self) -> Dict[str, float]:
         """Latency stats plus (when wired) embedding-tier telemetry.
 
-        Byte counters with exact per-slab representations (see
-        ``collection.exact_metric_bytes``) are recomputed host-side as exact
-        Python ints — the in-jit float32 scalars drift past 2^24 bytes."""
-        from repro.core.collection import exact_metric_bytes
-
+        Every cumulative int32 counter family in the stats dict reconstructs
+        to exact wrap-free Python ints through the hub (the one family table
+        in ``repro.obs.hub``) — the in-jit float32 scalars drift past 2^24
+        and the int32 counters wrap past 2^31.  ``hit_rate`` is re-derived
+        from the exact totals when the per-slab hit families are present."""
         out = dict(self.stats.summary())
         if self.state_stats_fn is not None:
             stats = self.state_stats_fn(self.state)
@@ -114,24 +133,23 @@ class ServeEngine:
                 if isinstance(v, dict):  # per-slab counter dicts stay internal
                     continue
                 out[k] = float(jax.device_get(v))
-            wire = exact_metric_bytes(stats, "host_moved_rows", "host_row_bytes")
-            if wire is not None:
-                out["host_wire_bytes"] = wire
-            xchg = exact_metric_bytes(
-                stats, "exchange_routed_lanes", "exchange_lane_bytes"
-            )
-            if xchg is not None:
-                out["exchange_bytes"] = xchg
-            # exact hit/miss totals from the per-slab int32 counters — the
-            # in-jit accumulators wrap past 2^31 under sustained traffic, so
-            # the exact Python ints also rebuild an exact hit_rate.
-            if "slab_hits" in stats and "slab_misses" in stats:
-                h = self._exact_hits.update(stats["slab_hits"])
-                m = self._exact_misses.update(stats["slab_misses"])
-                out["cache_hits"] = h
-                out["cache_misses"] = m
-                out["hit_rate"] = h / max(h + m, 1)
+            exact = self.hub.observe_embedding_metrics(stats)
+            out.update(exact)
+            if "hit_rate_exact" in exact:
+                out["hit_rate"] = exact["hit_rate_exact"]
         return out
+
+    def close(self) -> None:
+        """Flush observability artifacts: the latency histogram, the span
+        aggregate, the counter summary, and the Chrome trace.  Safe to call
+        twice; a sink-less engine only drops its (empty) tracer state."""
+        self.hub.log_hist("serve_latency_s", self.stats.hist)
+        self.hub.log_spans(self.tracer)
+        if self.obs_dir:
+            self.trace_path = self.tracer.export_chrome_trace(
+                os.path.join(self.obs_dir, f"{self.obs_run}.trace.json")
+            )
+        self.hub.close()
 
     def _pad(self, batch: Dict[str, np.ndarray], n: int) -> Dict[str, jnp.ndarray]:
         out = {}
@@ -144,20 +162,33 @@ class ServeEngine:
         return out
 
     def score(self, batch: Dict[str, np.ndarray]) -> np.ndarray:
-        """Score up to ``batch_size`` requests; returns scores for real rows."""
+        """Score up to ``batch_size`` requests; returns scores for real rows.
+
+        The per-batch device->host fetch of the scores is serving's one
+        deliberate sync point — it IS the response — so the whole call is a
+        single ``score`` span and its latency lands in the deterministic
+        histogram."""
         n = len(next(iter(batch.values())))
         assert n <= self.batch_size, "split upstream"
         t0 = time.perf_counter()
-        scores, emb_state = self.score_fn(self.state, self._pad(batch, n))
-        scores = np.asarray(jax.device_get(scores))[:n]
+        with self.tracer.span("score"):
+            scores, emb_state = self.score_fn(self.state, self._pad(batch, n))
+            scores = np.asarray(jax.device_get(scores))[:n]
         if emb_state is not None:  # cache stays warm across requests
             self.state = dict(self.state, emb=emb_state)
         dt = time.perf_counter() - t0
         self.stats.requests += n
         self.stats.observe(dt)
+        self.hub.log(
+            "serve_batch",
+            {"batch": self.stats.batches, "rows": n,
+             "requests": self.stats.requests},
+            wall={"latency_s": dt},
+        )
         if self.refresh_fn is not None and self.refresh_every:
             self._batches_since_refresh += 1
             if self._batches_since_refresh >= self.refresh_every:
-                self.state = self.refresh_fn(self.state)
+                with self.tracer.span("refresh"):
+                    self.state = self.refresh_fn(self.state)
                 self._batches_since_refresh = 0
         return scores

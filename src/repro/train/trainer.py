@@ -26,14 +26,14 @@
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
-from repro.core.collection import ExactCounterTotals, exact_metric_bytes
 from repro.data.pipeline import Prefetcher
+from repro.obs import NULL_TRACER, MetricsHub, Tracer
 from repro.train import checkpoint as ckpt_lib
 
 __all__ = ["TrainerConfig", "Trainer", "PipelinedTrainer", "StragglerDetector"]
@@ -85,6 +85,21 @@ class TrainerConfig:
     # multiple of N (a merged plan's addresses must never straddle a refresh).
     # Refresh is pure reindexing, so fp32 losses are bit-identical either way.
     refresh_interval: Optional[int] = None
+    # -- observability -------------------------------------------------------
+    # None keeps the hub sink-less: exact counters still accumulate, nothing
+    # is written and span tracing is the zero-cost NULL_TRACER.  With a
+    # directory, per-step records, the span aggregate, and the step-time
+    # histogram stream to <obs_dir>/<obs_run>.jsonl and a Chrome trace is
+    # exported at exit (render with ``python -m repro.obs.report``).
+    obs_dir: Optional[str] = None
+    obs_run: str = "train"
+    # forward spans into jax.profiler.TraceAnnotation so the same stage names
+    # label the device timeline under a ``jax.profiler.trace`` capture
+    obs_annotate: bool = False
+    # None = unbounded in-memory history (legacy behavior).  N = keep only
+    # the last N records in memory; with obs_dir set the full stream is on
+    # disk anyway, so long runs stop accumulating O(steps) host memory.
+    history_limit: Optional[int] = None
 
 
 class Trainer:
@@ -114,11 +129,17 @@ class Trainer:
             ckpt_lib.Checkpointer(cfg.ckpt_dir, keep=cfg.ckpt_keep) if cfg.ckpt_dir else None
         )
         self.history: List[Dict[str, float]] = []
-        # exact Python-int hit/miss totals: the in-jit accumulators are int32
-        # and wrap past 2^31 on long runs (same drift class as the float32
-        # host_wire_bytes scalar) — host-side delta accumulation stays exact.
-        self._exact_hits = ExactCounterTotals()
-        self._exact_misses = ExactCounterTotals()
+        # ONE wrap-safe reconstruction point for every cumulative in-jit
+        # int32 counter (hits/misses, host rows/bytes, exchange lanes/bytes,
+        # refresh swaps): the hub accumulates exact Python-int totals even
+        # with no sink; with cfg.obs_dir it also streams the run's JSONL.
+        self.hub = MetricsHub(run_dir=cfg.obs_dir, run=cfg.obs_run)
+        self.tracer = (
+            Tracer(annotate=cfg.obs_annotate)
+            if (cfg.obs_dir or cfg.obs_annotate)
+            else NULL_TRACER
+        )
+        self.trace_path: Optional[str] = None
 
     # -- state bootstrap -----------------------------------------------------
     def _bootstrap(self):
@@ -140,8 +161,11 @@ class Trainer:
         overflow monitors and the checkpoint cadence; returns the (possibly
         flushed) state."""
         cfg = self.cfg
-        # block on one scalar so step time is real, rest stays async
-        loss = float(jax.device_get(metrics["loss"]))
+        # block on one scalar so step time is real, rest stays async; this
+        # fetch is the step's ONE deliberate device->host sync point (its own
+        # span so the wall-clock profile shows where the loop blocks)
+        with self.tracer.span("host-transfer"):
+            loss = float(jax.device_get(metrics["loss"]))
         dt = time.perf_counter() - t0
         if self.detector.observe(dt) and self.on_straggler:
             self.on_straggler(step_i, dt)
@@ -153,59 +177,68 @@ class Trainer:
                     f"max_unique_per_step (per-table TableConfig bound, or the "
                     f"arena bound for GROUPED tables — exactness violated otherwise)"
                 )
-        rec = {"step": step_i, "loss": loss, "time_s": dt}
-        for k in ("auc", "hit_rate", "cache_evictions", "grad_norm", "xent",
-                  "shard_imbalance", "window_hit_rate", "refresh_swaps",
-                  "refresh_rows_moved"):
-            if k in metrics:
-                rec[k] = float(jax.device_get(metrics[k]))
-        # exact cumulative hit/miss totals (wrap-free Python ints from the
-        # per-slab int32 counters; the in-jit hit_rate float is kept as-is)
-        if "slab_hits" in metrics and "slab_misses" in metrics:
-            h = self._exact_hits.update(metrics["slab_hits"])
-            m = self._exact_misses.update(metrics["slab_misses"])
-            rec["cache_hits"] = h
-            rec["cache_misses"] = m
-            rec["hit_rate_exact"] = h / max(h + m, 1)
-        # host_wire_bytes: cumulative host<->device embedding traffic at the
-        # slab's ENCODED row size — the mixed-precision host store's savings
-        # show up here.  Recorded as an exact Python int from the per-slab
-        # counters (a float32 accumulator loses integer resolution past 2^24
-        # and drifts within ~25 steps at benchmark rates); the in-jit float32
-        # scalar is only the fallback for legacy metrics dicts.
-        wire = exact_metric_bytes(metrics, "host_moved_rows", "host_row_bytes")
-        if wire is not None:
-            rec["host_wire_bytes"] = wire
-        elif "host_wire_bytes" in metrics:
+        rec: Dict[str, Any] = {"step": step_i, "loss": loss, "time_s": dt}
+        float_keys = [
+            k
+            for k in ("auc", "hit_rate", "cache_evictions", "grad_norm",
+                      "xent", "shard_imbalance", "window_hit_rate",
+                      "refresh_swaps", "refresh_rows_moved")
+            if k in metrics
+        ]
+        if float_keys:  # one fetch for all float telemetry, not one per key
+            fetched = jax.device_get({k: metrics[k] for k in float_keys})
+            rec.update({k: float(v) for k, v in fetched.items()})
+        # every cumulative int32 counter family in the metrics dict —
+        # hits/misses, host rows and ENCODED wire bytes, exchange lanes and
+        # id/row-leg bytes, refresh swaps — reconstructs to exact wrap-free
+        # Python ints through the hub (the one family table lives in
+        # repro.obs.hub; hit_rate_exact rides along when both hit families
+        # are present).  A float32 accumulator loses integer resolution past
+        # 2^24 and the in-jit int32 counters wrap past 2^31; neither survives
+        # a long run, which is why everything routes through the hub.
+        rec.update(self.hub.observe_embedding_metrics(metrics))
+        if "host_wire_bytes" not in rec and "host_wire_bytes" in metrics:
+            # legacy metrics dicts carry only the float32 scalar fallback
             rec["host_wire_bytes"] = float(jax.device_get(metrics["host_wire_bytes"]))
-        # exchange_bytes: cumulative id+row all-to-all payload of a sharded
-        # collection (present only when the model's collection is sharded).
-        xchg = exact_metric_bytes(
-            metrics, "exchange_routed_lanes", "exchange_lane_bytes"
+        self.hub.histogram("step_time_s").observe(dt)
+        self.hub.log(
+            "step",
+            {k: v for k, v in rec.items() if k != "time_s"},
+            wall={"time_s": dt},
         )
-        if xchg is not None:
-            rec["exchange_bytes"] = xchg
-            # id-leg vs row-leg split (row leg priced at the exchange codec's
-            # encoded width) — same exact-integer accounting as the total.
-            for leg, key in (("exchange_id_bytes", "exchange_id_lane_bytes"),
-                             ("exchange_row_bytes", "exchange_row_lane_bytes")):
-                v = exact_metric_bytes(metrics, "exchange_routed_lanes", key)
-                if v is not None:
-                    rec[leg] = v
         self.history.append(rec)
+        if cfg.history_limit is not None and len(self.history) > cfg.history_limit:
+            # tests index and slice history, so it stays a plain list; trim
+            # the head in place to bound host memory on long runs
+            del self.history[: len(self.history) - cfg.history_limit]
         last = step_i + 1 >= cfg.max_steps
         if self.checkpointer and ((step_i + 1) % cfg.ckpt_every == 0 or last):
-            to_save = state
-            if self.flush_fn is not None:
-                to_save = self.flush_fn(state)
-                state = to_save  # flushed state stays valid to train on
-            self.checkpointer.save_async(step_i + 1, to_save)
+            with self.tracer.span("checkpoint"):
+                to_save = state
+                if self.flush_fn is not None:
+                    to_save = self.flush_fn(state)
+                    state = to_save  # flushed state stays valid to train on
+                self.checkpointer.save_async(step_i + 1, to_save)
         return state
+
+    def _finish_obs(self) -> None:
+        """Flush the run's observability artifacts — the step-time histogram,
+        the span aggregate, the counter summary, and the Chrome trace.
+        Idempotent and called from the run loop's ``finally`` so a crashed
+        run still leaves a renderable JSONL."""
+        self.hub.log_hist("step_time_s")
+        self.hub.log_spans(self.tracer)
+        if self.cfg.obs_dir:
+            self.trace_path = self.tracer.export_chrome_trace(
+                os.path.join(self.cfg.obs_dir, f"{self.cfg.obs_run}.trace.json")
+            )
+        self.hub.close()
 
     def run(self) -> Any:
         cfg = self.cfg
         state, start = self._bootstrap()
         if start >= cfg.max_steps:
+            self._finish_obs()
             return state
         prefetch = Prefetcher(self.make_batch, start_step=start, depth=cfg.prefetch_depth)
         try:
@@ -213,7 +246,8 @@ class Trainer:
                 if step_i >= cfg.max_steps:
                     break
                 t0 = time.perf_counter()
-                state, metrics = self.step_fn(state, batch)
+                with self.tracer.span("step"):
+                    state, metrics = self.step_fn(state, batch)
                 state = self._post_step(step_i, state, metrics, t0)
                 if (
                     self.refresh_fn is not None
@@ -221,11 +255,13 @@ class Trainer:
                     and (step_i + 1) % cfg.refresh_interval == 0
                     and step_i + 1 < cfg.max_steps
                 ):
-                    state = self.refresh_fn(state)
+                    with self.tracer.span("refresh"):
+                        state = self.refresh_fn(state)
             if self.checkpointer:
                 self.checkpointer.wait()
         finally:
             prefetch.close()
+            self._finish_obs()
         return state
 
 
@@ -334,6 +370,7 @@ class PipelinedTrainer(Trainer):
         depth = max(1, cfg.pipeline_depth)
         state, start = self._bootstrap()
         if start >= cfg.max_steps:
+            self._finish_obs()
             return state
         prefetch = Prefetcher(
             self.make_batch, start_step=start, depth=max(cfg.prefetch_depth, depth)
@@ -343,9 +380,13 @@ class PipelinedTrainer(Trainer):
             if not group:  # stream ended before the first step
                 return state
             # prologue: the first group has no shadow to plan under
-            plan = self.plan_fn(state, group[0][1], tuple(b for _, b in group[1:]))
+            with self.tracer.span("plan"):
+                plan = self.plan_fn(
+                    state, group[0][1], tuple(b for _, b in group[1:])
+                )
             self._check_window(plan, group)
-            state = self.apply_fn(state, plan)
+            with self.tracer.span("apply"):
+                state = self.apply_fn(state, plan)
             addrs = (plan.addresses,) + tuple(plan.future_addresses)
             refresh_on = self.refresh_fn is not None and cfg.refresh_interval
             # align the cadence to ABSOLUTE step numbers so a checkpoint
@@ -383,17 +424,22 @@ class PipelinedTrainer(Trainer):
                         peek = prefetch.lookahead(n_next)
                         n_next = len(peek)
                         if peek:
-                            next_plan = self.plan_fn(
-                                state, peek[0][1], tuple(b for _, b in peek[1:])
-                            )
-                    state, metrics = self.compute_fn(state, batch, addrs[j])
+                            with self.tracer.span("plan"):
+                                next_plan = self.plan_fn(
+                                    state, peek[0][1],
+                                    tuple(b for _, b in peek[1:]),
+                                )
+                    with self.tracer.span("compute"):
+                        state, metrics = self.compute_fn(state, batch, addrs[j])
                     if j == len(group) - 1 and next_plan is not None:
                         # movement runs after the group's last row update:
                         # evictions write back the freshest values
-                        state = self.apply_fn(state, next_plan)
+                        with self.tracer.span("apply"):
+                            state = self.apply_fn(state, next_plan)
                     state = self._post_step(step_i, state, metrics, t0)
                 if refresh_now:
-                    state = self.refresh_fn(state)
+                    with self.tracer.span("refresh"):
+                        state = self.refresh_fn(state)
                     done = last_step + 1
                     next_refresh_at = (
                         done // cfg.refresh_interval + 1
@@ -401,10 +447,12 @@ class PipelinedTrainer(Trainer):
                     peek = prefetch.lookahead(n_next)
                     n_next = len(peek)
                     if peek:
-                        next_plan = self.plan_fn(
-                            state, peek[0][1], tuple(b for _, b in peek[1:])
-                        )
-                        state = self.apply_fn(state, next_plan)
+                        with self.tracer.span("plan"):
+                            next_plan = self.plan_fn(
+                                state, peek[0][1], tuple(b for _, b in peek[1:])
+                            )
+                        with self.tracer.span("apply"):
+                            state = self.apply_fn(state, next_plan)
                 if next_plan is None:
                     break
                 group = self._take(prefetch, n_next)
@@ -414,4 +462,5 @@ class PipelinedTrainer(Trainer):
                 self.checkpointer.wait()
         finally:
             prefetch.close()
+            self._finish_obs()
         return state

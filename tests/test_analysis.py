@@ -331,6 +331,40 @@ def test_ast_lint_suppression_comment():
     ) == []
 
 
+def test_ast_lint_obs_host_sync_outside_allowed_points():
+    # in the metric-collection modules, a stray device_get outside the
+    # documented once-per-step sync points is flagged...
+    src = (
+        "import jax\n"
+        "def record_metrics(self, metrics):\n"
+        "    return float(jax.device_get(metrics['loss']))\n"
+    )
+    vs = ast_lint.lint_source(src, path="t.py", module="repro.train.trainer")
+    assert [v.check for v in vs] == ["ast-obs-host-sync"]
+    # ...but the same source outside those modules is host code, not linted
+    assert ast_lint.lint_source(src, path="t.py", module="repro.data.synth") == []
+
+
+def test_ast_lint_obs_host_sync_allows_documented_points():
+    assert ast_lint.lint_source(
+        "import jax\n"
+        "class Trainer:\n"
+        "    def _post_step(self, metrics):\n"
+        "        loss = float(jax.device_get(metrics['loss']))\n"
+        "        n = metrics['overflow'].item()\n"
+        "        return loss + n\n",
+        path="t.py",
+        module="repro.train.trainer",
+    ) == []
+    assert ast_lint.lint_source(
+        "import jax\n"
+        "def observe(self, cumulative):\n"
+        "    return int(jax.device_get(cumulative))\n",
+        path="h.py",
+        module="repro.obs.hub",
+    ) == []
+
+
 # --------------------------------------------------------------------------
 # registry + runner integration
 # --------------------------------------------------------------------------

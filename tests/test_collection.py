@@ -288,16 +288,28 @@ def test_mixed_plan_trains_and_serves_end_to_end():
     assert eng.stats.summary()["requests"] == 7
 
 
-def test_serve_stats_reservoir_is_bounded():
+def test_serve_stats_histogram_is_bounded_and_order_independent():
+    """ServeStats latency telemetry is O(1) memory (fixed bucket counts, no
+    sample list) and, unlike the reservoir it replaced, deterministic: the
+    summary is a pure function of the latency POPULATION, not arrival order."""
     from repro.serve.engine import ServeStats
 
-    st = ServeStats(reservoir_size=64)
-    for i in range(10_000):
-        st.observe(1e-3 * (1 + (i % 7)))
-    assert len(st.latencies) == 64
+    lat = [1e-3 * (1 + (i % 7)) for i in range(10_000)]
+    st = ServeStats()
+    for v in lat:
+        st.observe(v)
     assert st.batches == 10_000
+    assert len(st.hist.counts) == len(st.hist.bounds) + 1  # fixed, not O(n)
     s = st.summary()
     assert s["p50_ms"] > 0 and s["p99_ms"] >= s["p50_ms"]
+    assert s["p999_ms"] >= s["p95_ms"] >= s["p50_ms"]
+    # quantile bounds never under-report: p99 covers the true 99th pct value
+    assert s["p99_ms"] >= 1e3 * sorted(lat)[int(0.99 * len(lat)) - 1]
+
+    st_rev = ServeStats()
+    for v in reversed(lat):
+        st_rev.observe(v)
+    assert st_rev.summary() == s
 
 
 def test_host_wire_bytes_exact_past_float32_resolution():
@@ -346,7 +358,10 @@ def test_serve_summary_reports_exact_wire_bytes():
                       state_stats_fn=lambda s: coll.metrics(s["emb"], writeback=False))
     out = eng.summary()
     assert isinstance(out["host_wire_bytes"], int)
-    assert "host_moved_rows" not in out  # per-slab dicts stay internal
+    # per-slab counter DICTS stay internal; the hub reconstructs each family
+    # to a single exact int instead of leaking the pytree
+    assert isinstance(out["host_moved_rows"], int)
+    assert "slab_hits" not in out and "slab_misses" not in out
 
 
 def test_single_arena_plan_is_paper_layout():
