@@ -243,6 +243,83 @@ def bench_host_store(t: Table):
         )
 
 
+def bench_arena_precision(t: Table):
+    """Mixed-precision device arena at EQUAL device-byte budget: the budget
+    that holds C fp32 rows holds ~1.7x (fp16 tail) / ~2.8x (int8 tail, dim
+    64) encoded rows, so at a fixed HBM spend the tiered arena keeps more of
+    the zipf tail resident — measured as hit rate + training loss on a cached
+    DLRM whose cache_ratio is re-solved per codec from the same byte budget.
+    """
+    from repro.data import synth
+    from repro.models.dlrm import DLRM, DLRMConfig
+    from repro.store import tiered_arena_bytes
+
+    if SMOKE:
+        vocabs, batch, steps, dim = (20_000,), 128, 6, 16
+    else:
+        vocabs, batch, steps, dim = (500_000,), 4096, 12, 64
+    head_ratio = 0.1
+    vocab = vocabs[0]
+    base_cap = int(0.02 * vocab)  # the fp32 arena the budget is sized for
+    budget = base_cap * dim * 4
+
+    def rows_for_budget(codec):
+        if codec == "fp32":
+            return base_cap
+
+        def bytes_at(c):
+            head = min(c, max(1, int(round(head_ratio * c))))
+            return tiered_arena_bytes(c, head, dim, jnp.float32, codec)
+
+        c = base_cap
+        while bytes_at(c + 1) <= budget and c < vocab:
+            c += 1
+        return c
+
+    spec = synth.ZipfSparseSpec(vocab_sizes=vocabs, n_dense=13)
+    batches = [
+        {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
+        for s in range(steps + 1)
+    ]
+
+    def steady(times):
+        times.sort()
+        return times[len(times) // 2]
+
+    base_hit = None
+    for codec in ("fp32", "fp16", "int8"):
+        cap = rows_for_budget(codec)
+        cfg = DLRMConfig(
+            vocab_sizes=vocabs, embed_dim=dim, batch_size=batch,
+            cache_ratio=cap / vocab, lr=0.1, bottom_mlp=(64, dim),
+            top_mlp=(64,), arena_precision=codec, arena_head_ratio=head_ratio,
+        )
+        model = DLRM(cfg)
+        state = model.init(jax.random.PRNGKey(0))
+        step_j = jax.jit(model.train_step, donate_argnums=0)
+        state, m = step_j(state, batches[0])  # compile + warm
+        float(jax.device_get(m["loss"]))
+        times = []
+        for s in range(1, steps + 1):
+            t0 = time.perf_counter()
+            state, m = step_j(state, batches[s])
+            float(jax.device_get(m["loss"]))
+            times.append(time.perf_counter() - t0)
+        mm = model.collection.metrics(state["emb"])
+        hit = float(jax.device_get(mm["hit_rate"]))
+        if codec == "fp32":
+            base_hit = hit
+        arena_mb = model.collection.device_bytes()
+        t.add(
+            f"cacheops/arena_precision_{codec}", steady(times) * 1e6,
+            f"resident_rows={cap} ({cap / base_cap:.2f}x) "
+            f"hit_rate={hit:.4f} (+{(hit - base_hit) * 100:.2f}pp) "
+            f"loss={float(jax.device_get(m['loss'])):.4f} "
+            f"arena_budget={budget / 1e6:.2f}MB "
+            f"arena_saved={arena_mb['arena_bytes_saved'] / 1e6:.2f}MB",
+        )
+
+
 def bench_obs_overhead(t: Table):
     """Observability guardrail: the full obs stack — span tracing, the
     per-step JSONL record, the exact-counter hub reconstruction, and the
@@ -298,4 +375,4 @@ def bench_obs_overhead(t: Table):
 
 
 ALL = [bench_cache_overhead, bench_collection_placement, bench_pipeline,
-       bench_host_store, bench_obs_overhead]
+       bench_host_store, bench_arena_precision, bench_obs_overhead]

@@ -29,7 +29,7 @@ __all__ = ["Contract", "Violation", "contract", "registry", "INT_COUNTERS"]
 INT_COUNTERS: Tuple[str, ...] = (
     r"\.(step|hits|misses|evictions|uniq_overflows|last_used|use_count"
     r"|slot_to_row|row_to_slot|last_touch|refresh_swaps|refresh_rows"
-    r"|routed_lanes)$",
+    r"|routed_lanes|tier_promotions|tier_demotions)$",
 )
 
 

@@ -76,9 +76,12 @@ def _zeros_like_shape(tree: Any) -> Any:
 
 def _cache_cases() -> Dict[str, SmokeCase]:
     g = GEOMETRY
+    # int8 tiered arena ON so the traces cover the ArenaStore lanes (fp32
+    # head + encoded tail scatter/gather, sideband, tier counters); the raw
+    # fp32 arena path stays traced via the compute_step case below.
     cfg = cache_lib.CacheConfig(
         vocab=g["vocab"], capacity=g["capacity"], ids_per_step=g["ids"],
-        buffer_rows=g["buffer_rows"],
+        buffer_rows=g["buffer_rows"], arena_precision="int8",
     )
     row_ex = {"weight": jnp.zeros((g["dim"],), jnp.float32)}
     state = cache_lib.init_cache(cfg, row_ex)
@@ -156,8 +159,11 @@ def _toy_fb() -> FeatureBatch:
 
 def _collection_cases() -> Dict[str, SmokeCase]:
     g = GEOMETRY
+    # fp16 tiered arena here (int8 is traced by the cache/sharded cases) so
+    # both tail codecs cross the analyzer.
     coll = EmbeddingCollection.create(
-        _toy_tables(), cache_ratio=0.5, buffer_rows=g["buffer_rows"]
+        _toy_tables(), cache_ratio=0.5, buffer_rows=g["buffer_rows"],
+        arena_precision="fp16",
     )
     state = coll.init(jax.random.PRNGKey(0))
     fb = _toy_fb()
@@ -188,14 +194,16 @@ def _collection_cases() -> Dict[str, SmokeCase]:
 
 def _sharded_cases() -> Dict[str, SmokeCase]:
     g = GEOMETRY
-    # replication + exchange codec + bounded plan width ON so the traces
-    # cover the arena lanes, the tracker mirror, the encoded row-leg, the
-    # ::rep SGD branch, and the compact-image scatter (routed_w < the 64-lane
-    # dedup width, so plan_prepare takes the compaction path).
+    # replication + exchange codec + bounded plan width + int8 tiered arena
+    # ON so the traces cover the arena lanes, the tracker mirror, the encoded
+    # row-leg, the ::rep SGD branch, the compact-image scatter (routed_w <
+    # the 64-lane dedup width, so plan_prepare takes the compaction path),
+    # and the vmapped ArenaStore encode/decode lanes.
     scoll = ShardedEmbeddingCollection.create(
         _toy_tables(), num_shards=g["shards"], cache_ratio=0.5,
         buffer_rows=g["buffer_rows"], replicate_top_k=g["rep_k"],
         exchange_codec="fp16", max_routed_per_shard=g["routed_w"],
+        arena_precision="int8",
     )
     state = scoll.init(jax.random.PRNGKey(1))
     fb = _toy_fb()
@@ -280,9 +288,11 @@ def _compute_step_case() -> Dict[str, SmokeCase]:
 def _refresh_cases() -> Dict[str, SmokeCase]:
     g = GEOMETRY
     k = g["swap_k"]
+    # int8 tiered arena so the slab-surgery traces cross the precision
+    # boundary (swap invalidation over ArenaStore head+tail leaves).
     cfg = cache_lib.CacheConfig(
         vocab=g["vocab"], capacity=g["capacity"], ids_per_step=g["ids"],
-        buffer_rows=g["buffer_rows"],
+        buffer_rows=g["buffer_rows"], arena_precision="int8",
     )
     row_ex = {"weight": jnp.zeros((g["dim"],), jnp.float32)}
     cache0 = cache_lib.init_cache(cfg, row_ex)

@@ -12,6 +12,7 @@ CONFIG = DIENConfig(
     n_items=10_000_000, n_cates=1_000_000, n_users=1_000_256,  # total % 512 == 0 (row-sharded tier)
     embed_dim=18, seq_len=100, gru_dim=108, mlp=(200, 80),
     batch_size=65536, cache_ratio=0.015, max_unique_per_step=1 << 22, lr=0.05,
+    arena_precision="fp32",  # device-arena tail codec; set fp16/int8 to tier the cache arena
 )
 
 def build_cell(shape, mesh_axes):

@@ -11,6 +11,7 @@ from repro.models.dlrm import DLRM, DLRMConfig
 CONFIG = DLRMConfig(
     vocab_sizes=S.AVAZU_VOCABS, n_dense=8, embed_dim=128,
     batch_size=65536, cache_ratio=0.015, lr=5e-2, max_unique_per_step=1 << 20,
+    arena_precision="fp32",  # device-arena tail codec; set fp16/int8 to tier the cache arena
 )
 
 PAPER_SHAPES = ("paper_64k",)

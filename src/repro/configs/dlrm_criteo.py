@@ -13,6 +13,7 @@ from repro.models.dlrm import DLRM, DLRMConfig
 CONFIG = DLRMConfig(
     vocab_sizes=S.CRITEO_VOCABS, n_dense=13, embed_dim=128,
     batch_size=16384, cache_ratio=0.015, lr=1.0, max_unique_per_step=1 << 19,
+    arena_precision="fp32",  # device-arena tail codec; set fp16/int8 to tier the cache arena
 )
 
 PAPER_SHAPES = ("paper_16k",)

@@ -13,6 +13,7 @@ from repro.models.recsys_models import FMConfig, FMModel
 CONFIG = FMConfig(
     vocab_sizes=S.FM_VOCABS, embed_dim=10, batch_size=65536,
     cache_ratio=0.015, max_unique_per_step=1 << 21, lr=0.05,
+    arena_precision="fp32",  # device-arena tail codec; set fp16/int8 to tier the cache arena
 )
 
 def _rules(mesh_axes):

@@ -13,6 +13,7 @@ CONFIG = MINDConfig(
     n_items=4_000_000, n_users=1_000_000, embed_dim=64, seq_len=100,
     n_interests=4, capsule_iters=3, batch_size=65536,
     cache_ratio=0.015, max_unique_per_step=1 << 22, lr=0.05,
+    arena_precision="fp32",  # device-arena tail codec; set fp16/int8 to tier the cache arena
 )
 
 def build_cell(shape, mesh_axes):

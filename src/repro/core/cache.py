@@ -43,6 +43,7 @@ from repro.analysis.contracts import INT_COUNTERS, contract
 from repro.core import freq as freq_lib
 from repro.core import transmitter
 from repro.core.policies import Policy, eviction_key
+from repro.store.arena import ArenaStore
 
 __all__ = [
     "CacheConfig",
@@ -79,6 +80,12 @@ class CacheConfig:
     # paper's strict buffer limit).  Overflow — more distinct rows in a batch
     # than the bound — is counted in ``state.uniq_overflows`` and must stay 0
     # for exactness (the trainer asserts this; tests property-check it).
+    arena_precision: str = "fp32"  # device-arena tail codec: "fp32" keeps the
+    # raw pre-tiering dict (bit-identical); "fp16"/"int8" store the arena as a
+    # frequency-tiered ``store.ArenaStore`` — fp32 head for the hottest slots,
+    # encoded tail for the colder residents.  ("auto" is resolved to one of
+    # these by the collection's PrecisionPolicy before a CacheConfig exists.)
+    arena_head_ratio: float = 0.25  # fraction of capacity kept fp32 when tiered
     freq_half_life: int = 1024  # PLAN CALLS for a row's decayed access
     # counter (and the rolling hit-rate window) to halve — the adaptive
     # frequency engine's memory length.  The tracker clock is ``state.step``,
@@ -97,6 +104,13 @@ class CacheConfig:
                 f"cache capacity {self.capacity} must hold one batch's unique rows "
                 f"(<= {self.unique_size})"
             )
+        if self.arena_precision not in ("fp32", "fp16", "int8"):
+            raise ValueError(
+                f"arena_precision must be fp32/fp16/int8 at the cache level "
+                f"(auto resolves above), got {self.arena_precision!r}"
+            )
+        if not (0.0 < self.arena_head_ratio <= 1.0):
+            raise ValueError(f"arena_head_ratio must be in (0, 1], got {self.arena_head_ratio}")
 
     @property
     def unique_size(self) -> int:
@@ -105,6 +119,13 @@ class CacheConfig:
         if self.max_unique_per_step:
             k = min(k, self.max_unique_per_step)
         return k
+
+    @property
+    def head_capacity(self) -> int:
+        """Slots kept fp32 when the arena is tiered (all of them for fp32)."""
+        if self.arena_precision == "fp32":
+            return self.capacity
+        return min(self.capacity, max(1, int(round(self.arena_head_ratio * self.capacity))))
 
 
 @jax.tree_util.register_dataclass
@@ -120,6 +141,9 @@ class CacheState:
     misses: jnp.ndarray  # int32 [] unique-row misses (= rows moved host->device)
     evictions: jnp.ndarray  # int32 [] rows written back device->host
     uniq_overflows: jnp.ndarray  # int32 [] steps whose distinct rows > unique_size
+    tier_promotions: jnp.ndarray  # int32 [] rows loaded INTO the fp32 head tier
+    tier_demotions: jnp.ndarray  # int32 [] resident rows displaced OUT of it
+    # (both always 0 for a raw fp32 arena — every slot is the head then)
     tracker: freq_lib.FreqTracker  # online decayed per-row counters (core.freq)
 
     def hit_rate(self) -> jnp.ndarray:
@@ -136,8 +160,14 @@ def init_cache(cfg: CacheConfig, row_tree_example: Any) -> CacheState:
     def z(leaf):
         return jnp.zeros((cfg.capacity,) + tuple(leaf.shape), leaf.dtype)
 
+    cached_rows = jax.tree_util.tree_map(z, row_tree_example)
+    if cfg.arena_precision != "fp32":
+        # frequency-tiered arena: fp32 head + encoded tail.  Zeros encode to
+        # zeros under both codecs, so the empty tiered arena decodes exactly
+        # like the empty raw arena.
+        cached_rows = ArenaStore.create(cached_rows, cfg.head_capacity, cfg.arena_precision)
     return CacheState(
-        cached_rows=jax.tree_util.tree_map(z, row_tree_example),
+        cached_rows=cached_rows,
         slot_to_row=jnp.full((cfg.capacity,), -1, jnp.int32),
         row_to_slot=jnp.full((cfg.vocab,), -1, jnp.int32),
         last_used=jnp.zeros((cfg.capacity,), jnp.int32),
@@ -147,6 +177,8 @@ def init_cache(cfg: CacheConfig, row_tree_example: Any) -> CacheState:
         misses=jnp.zeros((), jnp.int32),
         evictions=jnp.zeros((), jnp.int32),
         uniq_overflows=jnp.zeros((), jnp.int32),
+        tier_promotions=jnp.zeros((), jnp.int32),
+        tier_demotions=jnp.zeros((), jnp.int32),
         tracker=freq_lib.init_tracker(cfg.vocab),
     )
 
@@ -180,6 +212,8 @@ class CachePlan:
     misses: jnp.ndarray
     evictions: jnp.ndarray
     uniq_overflows: jnp.ndarray
+    tier_promotions: jnp.ndarray
+    tier_demotions: jnp.ndarray
     tracker: freq_lib.FreqTracker  # post-plan decayed-counter image
     # per-lane resident slot for the CURRENT batch (-1 padding)
     slots: jnp.ndarray
@@ -346,6 +380,22 @@ def plan_prepare(
 
     victim_rows = state.slot_to_row[victim_slots]
     evict_active = active & (victim_rows >= 0)
+
+    # --- precision-tier movement telemetry ---------------------------------
+    # For a tiered arena, slots below head_capacity are the fp32 head: a load
+    # landing there promotes the row to full precision; displacing a resident
+    # row from there demotes it (it re-faults into whichever tier its new
+    # rank's slot occupies).  The container type is static pytree metadata,
+    # so this branch specializes at trace time (vmap included); raw fp32
+    # arenas keep both counters pinned at zero.
+    if isinstance(state.cached_rows, ArenaStore):
+        head_cap = state.cached_rows.head_capacity
+        in_head = victim_slots < head_cap
+        n_promote = jnp.sum(active & in_head).astype(jnp.int32)
+        n_demote = jnp.sum(evict_active & in_head).astype(jnp.int32)
+    else:
+        n_promote = jnp.zeros((), jnp.int32)
+        n_demote = jnp.zeros((), jnp.int32)
     row_to_slot = state.row_to_slot.at[jnp.where(evict_active, victim_rows, vocab)].set(
         -1, mode="drop"
     )
@@ -396,6 +446,8 @@ def plan_prepare(
         misses=state.misses + n_miss.astype(jnp.int32),
         evictions=state.evictions + jnp.sum(evict_active).astype(jnp.int32),
         uniq_overflows=state.uniq_overflows + overflow,
+        tier_promotions=state.tier_promotions + n_promote,
+        tier_demotions=state.tier_demotions + n_demote,
         tracker=tracker,
         slots=slots,
     )
@@ -437,6 +489,8 @@ def apply_plan(
         misses=plan.misses,
         evictions=plan.evictions,
         uniq_overflows=plan.uniq_overflows,
+        tier_promotions=plan.tier_promotions,
+        tier_demotions=plan.tier_demotions,
         tracker=plan.tracker,
     )
     return full_rows, new_state
@@ -470,9 +524,17 @@ def prepare(
 
 
 def lookup_slots(state: CacheState, slots: jnp.ndarray, leaf: str | int = 0) -> jnp.ndarray:
-    """Gather cached rows by slot; -1 (padding) lanes return zero rows."""
-    leaves = jax.tree_util.tree_leaves(state.cached_rows)
-    w = leaves[leaf] if isinstance(leaf, int) else state.cached_rows[leaf]
+    """Gather cached rows by slot; -1 (padding) lanes return zero rows.
+
+    On a tiered arena the gather is decode-on-read: head lanes come back
+    bit-exact, tail lanes dequantized — same zero-fill convention."""
+    cached = state.cached_rows
+    if isinstance(cached, ArenaStore):
+        keys = sorted(set(cached.head) | set(cached.raw))
+        key = keys[leaf] if isinstance(leaf, int) else leaf
+        return cached.gather_slots(slots)[key]
+    leaves = jax.tree_util.tree_leaves(cached)
+    w = leaves[leaf] if isinstance(leaf, int) else cached[leaf]
     safe = jnp.where(slots >= 0, slots, w.shape[0])  # negatives would wrap
     return jnp.take(w, safe, axis=0, mode="fill", fill_value=0)
 

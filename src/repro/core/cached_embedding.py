@@ -303,6 +303,8 @@ def shard_specs(
             misses=P(),
             evictions=P(),
             uniq_overflows=P(),
+            tier_promotions=P(),
+            tier_demotions=P(),
             tracker=freq_lib.tracker_spec(P),
         ),
         idx_map=P(None),

@@ -55,7 +55,14 @@ from repro.core import freq as freq_lib
 from repro.core import refresh as refresh_lib
 from repro.core.policies import Policy
 from repro.obs.hub import ExactCounter
-from repro.store import HostStore, PrecisionPolicy, SlabGeometry, get_codec
+from repro.store import (
+    ArenaStore,
+    HostStore,
+    PrecisionPolicy,
+    SlabGeometry,
+    get_codec,
+    tiered_arena_bytes,
+)
 
 __all__ = [
     "Placement",
@@ -82,7 +89,8 @@ SHARED_ARENA = "__shared__"
 # host-side must leave jit as int32/uint32 — a float cast anywhere in between
 # silently reintroduces the 2^24 resolution drift the pattern exists to kill.
 METRICS_INT_COUNTERS: Tuple[str, ...] = (
-    r"\['slab_(hits|misses|refresh_swaps|refresh_rows)'\]",
+    r"\['slab_(hits|misses|refresh_swaps|refresh_rows"
+    r"|tier_promotions|tier_demotions)'\]",
     r"\['host_(moved_rows|row_bytes)'\]",
     r"\['exchange_(routed_lanes|lane_bytes|id_lane_bytes|row_lane_bytes"
     r"|per_shard_lanes)'\]",
@@ -127,6 +135,13 @@ class TableConfig:
     # to the planner / collection-wide setting.  DEVICE tables have no host
     # tier; GROUPED tables share the arena's codec.
     host_precision: Optional[str] = None
+    # device-arena tail codec for this table when CACHED: "fp32" (raw arena,
+    # bit-identical default), "fp16"/"int8" (frequency-tiered ArenaStore — an
+    # fp32 head over the hottest slots, encoded tail for colder residents), or
+    # "auto" (PrecisionPolicy.choose_arena picks from the head's share of
+    # resident traffic at init).  None defers to the planner / collection-wide
+    # setting.  DEVICE tables have no arena; GROUPED tables share the arena's.
+    arena_precision: Optional[str] = None
     # decay half-life (steps) of the online frequency tracker — how fast the
     # adaptive engine forgets old traffic; match it to the expected drift
     # timescale (a refresh can only promote a newly-hot row once its fresh
@@ -206,6 +221,8 @@ class TablePlacement:
     cache_ratio: Optional[float] = None
     # host-tier codec ("fp32"/"fp16"/"int8"/"auto"); None = table's own / fp32
     host_precision: Optional[str] = None
+    # device-arena tail codec ("fp32"/"fp16"/"int8"/"auto"); None = table's own
+    arena_precision: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +235,8 @@ class ArenaConfig:
     max_unique_per_step: int = 0
     protect_via_inverse: bool = True
     host_precision: str = "fp32"  # the arena's host-tier codec (shared table)
+    arena_precision: str = "fp32"  # the arena's device-tail codec (tiered arena)
+    arena_head_ratio: float = 0.25  # fp32 head fraction when the arena is tiered
     freq_half_life: int = 1024  # online-tracker decay (see TableConfig)
 
 
@@ -240,13 +259,18 @@ class PlacementPlan:
         max_unique_per_step: int = 0,
         protect_via_inverse: bool = True,
         host_precision: str = "fp32",
+        arena_precision: str = "fp32",
+        arena_head_ratio: float = 0.25,
         freq_half_life: int = 1024,
     ) -> "PlacementPlan":
         """The paper's layout: every table GROUPED into one shared cache."""
         return cls(
             placements={
                 t.name: TablePlacement(
-                    Placement.GROUPED, cache_ratio, host_precision=host_precision
+                    Placement.GROUPED,
+                    cache_ratio,
+                    host_precision=host_precision,
+                    arena_precision=arena_precision,
                 )
                 for t in tables
             },
@@ -257,6 +281,8 @@ class PlacementPlan:
                 max_unique_per_step=max_unique_per_step,
                 protect_via_inverse=protect_via_inverse,
                 host_precision=host_precision,
+                arena_precision=arena_precision,
+                arena_head_ratio=arena_head_ratio,
                 freq_half_life=freq_half_life,
             ),
             budget_bytes=None,
@@ -271,6 +297,9 @@ class PlacementPlan:
                 hp = p.host_precision or "fp32"
                 if hp != "fp32":
                     s += f":{hp}"  # host-tier codec (bytes saved vs fp32)
+                ap = p.arena_precision or "fp32"
+                if ap != "fp32":
+                    s += f"/arena:{ap}"  # device-arena tail codec (tiered)
             out[n] = s
         return out
 
@@ -341,30 +370,62 @@ class PlacementPlanner:
         group_below_rows: int = 0,
         arena: Optional[ArenaConfig] = None,
         host_precision: Optional[str] = None,
+        arena_precision: Optional[str] = None,
+        arena_head_ratio: float = 0.25,
     ):
         self.budget_bytes = int(budget_bytes)
         self.group_below_rows = int(group_below_rows)
         self.arena = arena if arena is not None else ArenaConfig()
         self.host_precision = host_precision
+        self.arena_precision = arena_precision
+        self.arena_head_ratio = float(arena_head_ratio)
 
     @staticmethod
-    def _fast_bytes(t: TableConfig, ratio: float) -> int:
+    def _tiered_weight_bytes(
+        capacity: int, dim: int, dtype, arena_precision: Optional[str], head_ratio: float
+    ) -> int:
+        """Weight-leaf footprint of one arena at ``arena_precision`` — fp32
+        head + encoded tail payload + tail sideband (the sideband bytes are
+        part of the budget: they are device-resident like the payload).
+        "auto" is budgeted at the policy's no-stats pick, matching what init
+        resolves when no counts arrive."""
+        ap = arena_precision or "fp32"
+        if ap == "auto":
+            ap = PrecisionPolicy().no_stats
+        if ap == "fp32":
+            head = capacity
+        else:
+            head = min(capacity, max(1, int(round(head_ratio * capacity))))
+        return tiered_arena_bytes(capacity, head, dim, dtype, ap)
+
+    def _table_arena_precision(self, t: TableConfig) -> Optional[str]:
+        return t.arena_precision or self.arena_precision
+
+    def _fast_bytes(self, t: TableConfig, ratio: float) -> int:
         """Device footprint of one CACHED table at ``ratio`` (weights + per-slot
         bookkeeping + the vocab-sized index arrays + the online frequency
         tracker's decayed counters)."""
         cap = min(max(int(ratio * t.vocab), t.unique_size()), t.vocab)
-        item = jnp.dtype(t.dtype).itemsize
+        w = self._tiered_weight_bytes(
+            cap, t.dim, t.dtype, self._table_arena_precision(t), self.arena_head_ratio
+        )
         # vocab-sized: row_to_slot + idx_map + tracker score + last_touch
-        return cap * t.dim * item + cap * 4 * 3 + t.vocab * 4 * 4
+        return w + cap * 4 * 3 + t.vocab * 4 * 4
 
     def _arena_bytes(self, grouped: Sequence[TableConfig]) -> int:
         if not grouped:
             return 0
         gvocab = sum(t.vocab for t in grouped)
         gids = sum(t.ids_per_step for t in grouped)
-        gitem = jnp.dtype(grouped[0].dtype).itemsize
         gcap = min(max(int(self.arena.cache_ratio * gvocab), min(gids, gvocab)), gvocab)
-        return gcap * grouped[0].dim * gitem + gcap * 4 * 3 + gvocab * 4 * 4
+        w = self._tiered_weight_bytes(
+            gcap,
+            grouped[0].dim,
+            grouped[0].dtype,
+            self.arena_precision or self.arena.arena_precision,
+            self.arena.arena_head_ratio,
+        )
+        return w + gcap * 4 * 3 + gvocab * 4 * 4
 
     def plan(
         self,
@@ -412,18 +473,21 @@ class PlacementPlanner:
         def host_prec(t: TableConfig) -> Optional[str]:
             return t.host_precision or self.host_precision
 
-        # the planner-wide default also governs the shared arena (the arena's
-        # own field keeps its fp32 default otherwise); the returned plan's
-        # ArenaConfig carries the resolved codec so the collection's arena
+        # the planner-wide defaults also govern the shared arena (the arena's
+        # own fields keep their fp32 defaults otherwise); the returned plan's
+        # ArenaConfig carries the resolved codecs so the collection's arena
         # slab agrees with the GROUPED placements.
         arena = dataclasses.replace(
-            self.arena, host_precision=self.host_precision or self.arena.host_precision
+            self.arena,
+            host_precision=self.host_precision or self.arena.host_precision,
+            arena_precision=self.arena_precision or self.arena.arena_precision,
         )
         for t in grouped:
             placements[t.name] = TablePlacement(
                 Placement.GROUPED,
                 arena.cache_ratio,
                 host_precision=arena.host_precision,
+                arena_precision=arena.arena_precision,
             )
 
         # fit solo cache ratios into what is left (index arrays included)
@@ -441,7 +505,10 @@ class PlacementPlanner:
             scale = max(0.0, (remaining - floor) / max(want - floor, 1))
         for t in solo:
             placements[t.name] = TablePlacement(
-                Placement.CACHED, t.cache_ratio * scale, host_precision=host_prec(t)
+                Placement.CACHED,
+                t.cache_ratio * scale,
+                host_precision=host_prec(t),
+                arena_precision=self._table_arena_precision(t),
             )
 
         return PlacementPlan(
@@ -680,6 +747,8 @@ class _CachedSlabSpec:
     max_unique_per_step: int
     protect_via_inverse: bool
     host_precision: str = "fp32"  # requested codec; "auto" resolves at init
+    arena_precision: str = "fp32"  # device-arena tail codec; "auto" -> init
+    arena_head_ratio: float = 0.25  # fp32 head fraction of a tiered arena
     freq_half_life: int = 1024  # online-tracker decay (adaptive engine)
 
     @property
@@ -713,6 +782,15 @@ class _CachedSlabSpec:
         cap = max(int(self.cache_ratio * self.vocab), self.unique_size())
         return min(cap, self.vocab)
 
+    @property
+    def head_capacity(self) -> int:
+        """fp32 slots of the (possibly tiered) arena — mirrors
+        ``CacheConfig.head_capacity`` so planner/policy math agrees with the
+        cache's own split."""
+        if self.arena_precision == "fp32":
+            return self.capacity
+        return min(self.capacity, max(1, int(round(self.arena_head_ratio * self.capacity))))
+
     def cache_config(self, ids_per_step: Optional[int] = None, writeback: bool = True):
         # NB: capacity is fixed at construction; a batch whose unique buffer
         # exceeds it fails CacheConfig's own guard with an actionable error
@@ -728,6 +806,15 @@ class _CachedSlabSpec:
             writeback=writeback,
             max_unique_per_step=self.max_unique_per_step,
             protect_via_inverse=self.protect_via_inverse,
+            # a still-unresolved "auto" budgets/structures like the policy's
+            # no-stats default; ``EmbeddingCollection.init`` replaces the spec
+            # with the counts-resolved codec before any state exists.
+            arena_precision=(
+                PrecisionPolicy().no_stats
+                if self.arena_precision == "auto"
+                else self.arena_precision
+            ),
+            arena_head_ratio=self.arena_head_ratio,
             freq_half_life=self.freq_half_life,
         )
 
@@ -770,6 +857,7 @@ class EmbeddingCollection:
                     max_unique_per_step=t.max_unique_per_step,
                     protect_via_inverse=t.protect_via_inverse,
                     host_precision=p.host_precision or t.host_precision or "fp32",
+                    arena_precision=p.arena_precision or t.arena_precision or "fp32",
                     freq_half_life=t.freq_half_life,
                 )
             else:
@@ -787,12 +875,19 @@ class EmbeddingCollection:
                 max_unique_per_step=a.max_unique_per_step,
                 protect_via_inverse=a.protect_via_inverse,
                 host_precision=a.host_precision,
+                arena_precision=a.arena_precision,
+                arena_head_ratio=a.arena_head_ratio,
                 freq_half_life=a.freq_half_life,
             )
         # resolved host codec per cached slab ("auto" is re-resolved by init,
         # which needs the frequency counts; shard_specs/device_bytes read this)
         self.host_precision: Dict[str, str] = {
             sname: spec.host_precision for sname, spec in self.cached_slabs.items()
+        }
+        # resolved device-arena tail codec per cached slab (same protocol:
+        # "auto" re-resolves at init, when frequency counts are available)
+        self.arena_precision: Dict[str, str] = {
+            sname: spec.arena_precision for sname, spec in self.cached_slabs.items()
         }
         self.precision_policy = PrecisionPolicy()
 
@@ -826,6 +921,8 @@ class EmbeddingCollection:
             budget_bytes,
             arena=ArenaConfig(**arena_kw),
             host_precision=arena_kw.get("host_precision"),
+            arena_precision=arena_kw.get("arena_precision"),
+            arena_head_ratio=arena_kw.get("arena_head_ratio", 0.25),
         )
         return cls(tables, planner.plan(tables, counts=counts))
 
@@ -847,13 +944,23 @@ class EmbeddingCollection:
         counts: Optional[Mapping[str, np.ndarray]] = None,
         warm: bool = True,
         host_precision: Optional[str] = None,
+        arena_precision: Optional[str] = None,
     ) -> CollectionState:
         """Build the collection state.  ``host_precision`` overrides every
         cached slab's host-tier codec for this state ("fp32"/"fp16"/"int8"/
         "auto"); "auto" asks ``PrecisionPolicy`` to pick per slab from the
         frequency counts (fp16 when no counts are given).  The resolved
         choice is recorded in ``self.host_precision`` so ``shard_specs`` and
-        ``device_bytes`` stay structurally consistent with the state."""
+        ``device_bytes`` stay structurally consistent with the state.
+
+        ``arena_precision`` does the same for the DEVICE arena's tail codec:
+        "fp32" keeps the raw pre-tiering arena dict (bit-identical), "fp16"/
+        "int8" build a frequency-tiered ``ArenaStore``, and "auto" asks
+        ``PrecisionPolicy.choose_arena`` whether the fp32 head absorbs enough
+        resident traffic to quantize the tail.  The resolved codec is written
+        back into ``self.cached_slabs``/``self.arena_precision`` so every
+        later ``cache_config()`` (prepare/refresh/flush/shard_specs) agrees
+        with the state's arena container."""
         slabs: Dict[str, Any] = {}
         keys = jax.random.split(rng, len(self.device_slabs) + len(self.cached_slabs))
         kit = iter(keys)
@@ -880,21 +987,33 @@ class EmbeddingCollection:
                 idx_map = jnp.asarray(freq_lib.build_freq_stats(slab_counts).idx_map)
             else:
                 idx_map = jnp.arange(spec.vocab, dtype=jnp.int32)
+            geom = SlabGeometry(
+                name=sname,
+                vocab=spec.vocab,
+                dim=spec.dim,
+                capacity=spec.capacity,
+                dtype_itemsize=jnp.dtype(spec.dtype).itemsize,
+            )
             codec = host_precision or spec.host_precision
             if codec == "auto":
-                codec = self.precision_policy.choose(
-                    SlabGeometry(
-                        name=sname,
-                        vocab=spec.vocab,
-                        dim=spec.dim,
-                        capacity=spec.capacity,
-                        dtype_itemsize=jnp.dtype(spec.dtype).itemsize,
-                    ),
-                    counts=slab_counts,
-                )
+                codec = self.precision_policy.choose(geom, counts=slab_counts)
             else:
                 get_codec(codec)  # fail fast on typos
             self.host_precision[sname] = codec
+            arena_codec = arena_precision or spec.arena_precision
+            if arena_codec == "auto":
+                arena_codec = self.precision_policy.choose_arena(
+                    geom, spec.head_capacity, counts=slab_counts
+                )
+            else:
+                get_codec(arena_codec)  # fail fast on typos
+            if arena_codec != spec.arena_precision:
+                # write the resolution back so every later cache_config()
+                # (prepare / refresh / flush / shard_specs) builds the same
+                # arena container this state carries.
+                spec = dataclasses.replace(spec, arena_precision=arena_codec)
+                self.cached_slabs[sname] = spec
+            self.arena_precision[sname] = arena_codec
             slab = CachedSlab(
                 full=HostStore.create({"weight": weight}, codec=codec),
                 cache=cache_lib.init_cache(
@@ -1074,12 +1193,22 @@ class EmbeddingCollection:
 
     def weights(self, state: CollectionState) -> Dict[str, jnp.ndarray]:
         """The trainable fast-tier weights, keyed by slab — differentiate the
-        loss w.r.t. this dict and feed the grads to ``apply_grads``."""
+        loss w.r.t. this dict and feed the grads to ``apply_grads``.
+
+        A tiered arena returns its full DECODED [capacity, dim] view: the
+        forward/backward run in fp32 against the dequantized rows, and
+        ``apply_grads`` re-encodes the updated tail — the straight-through
+        scheme of arXiv 2010.11305 (gradients flow as if the arena were
+        full-precision; storage noise enters only through the decode)."""
         out = {}
         for name in self.device_slabs:
             out[name] = state.slabs[name].weight
         for sname in self.cached_slabs:
-            out[sname] = state.slabs[sname].cache.cached_rows["weight"]
+            cached = state.slabs[sname].cache.cached_rows
+            if isinstance(cached, ArenaStore):
+                out[sname] = cached.decode_leaf("weight")
+            else:
+                out[sname] = cached["weight"]
         return out
 
     @contract(max_sort_size=0)
@@ -1180,10 +1309,21 @@ class EmbeddingCollection:
             )
         for sname in self.cached_slabs:
             slab = slabs[sname]
-            cached = dict(slab.cache.cached_rows)
-            cached["weight"] = (cached["weight"] - lr * grads[sname]).astype(
-                cached["weight"].dtype
-            )
+            cached = slab.cache.cached_rows
+            if isinstance(cached, ArenaStore):
+                # quantization-aware SGD: step on the decoded view, then store
+                # head rows raw and re-encode the tail with a fresh per-row
+                # master scale (the sideband).  Rows with zero gradient
+                # re-encode to the identical payload (stable projection), so
+                # untouched residents never drift.
+                w = cached.decode_leaf("weight")
+                w = (w - lr * grads[sname]).astype(w.dtype)
+                cached = cached.replace_leaf("weight", w)
+            else:
+                cached = dict(cached)
+                cached["weight"] = (cached["weight"] - lr * grads[sname]).astype(
+                    cached["weight"].dtype
+                )
             slabs[sname] = dataclasses.replace(
                 slab, cache=dataclasses.replace(slab.cache, cached_rows=cached)
             )
@@ -1323,6 +1463,8 @@ class EmbeddingCollection:
         slab_misses: Dict[str, jnp.ndarray] = {}
         slab_ref_swaps: Dict[str, jnp.ndarray] = {}
         slab_ref_rows: Dict[str, jnp.ndarray] = {}
+        slab_tier_promotions: Dict[str, jnp.ndarray] = {}
+        slab_tier_demotions: Dict[str, jnp.ndarray] = {}
         for sname, spec in self.cached_slabs.items():
             c = state.slabs[sname].cache
             hits = hits + jnp.sum(c.hits)
@@ -1337,6 +1479,10 @@ class EmbeddingCollection:
             ref_rows = ref_rows + jnp.sum(c.tracker.refresh_rows)
             slab_ref_swaps[sname] = jnp.sum(c.tracker.refresh_swaps).astype(jnp.int32)
             slab_ref_rows[sname] = jnp.sum(c.tracker.refresh_rows).astype(jnp.int32)
+            # precision-boundary crossings (jnp.sum folds the sharded [S]
+            # per-shard counters into one cumulative int32, like hits/misses)
+            slab_tier_promotions[sname] = jnp.sum(c.tier_promotions).astype(jnp.int32)
+            slab_tier_demotions[sname] = jnp.sum(c.tier_demotions).astype(jnp.int32)
             full = state.slabs[sname].full
             row_bytes = (
                 full.row_wire_bytes(batch_dims=full.data["weight"].ndim - 1)
@@ -1373,6 +1519,8 @@ class EmbeddingCollection:
             "slab_misses": slab_misses,
             "slab_refresh_swaps": slab_ref_swaps,
             "slab_refresh_rows": slab_ref_rows,
+            "slab_tier_promotions": slab_tier_promotions,
+            "slab_tier_demotions": slab_tier_demotions,
         }
 
     def _slab_codec(self, sname: str) -> str:
@@ -1381,22 +1529,37 @@ class EmbeddingCollection:
         name = self.host_precision[sname]
         return self.precision_policy.no_stats if name == "auto" else name
 
+    def _slab_arena_codec(self, sname: str) -> str:
+        """Resolved device-arena tail codec (same "auto" fallback protocol
+        as ``_slab_codec``)."""
+        name = self.arena_precision[sname]
+        return self.precision_policy.no_stats if name == "auto" else name
+
     def device_bytes(self) -> Dict[str, int]:
         """Device-resident vs host-tier footprint under the plan (per-slab
         breakdown included; the planner's budget bounds ``device_total``).
         The slow tier is accounted at its *encoded* size; ``host_bytes_saved``
-        is what the host-precision codecs shaved off the fp32 layout."""
+        is what the host-precision codecs shaved off the fp32 layout, and
+        ``arena_bytes_saved`` what the tiered arena shaved off the device
+        side (a tiered slab's weight bytes = fp32 head + encoded tail payload
+        + tail sideband, all device-resident)."""
         per_slab: Dict[str, int] = {}
         slow = slow_fp32 = 0
+        fast_fp32 = fast_actual = 0
         for name, t in self.device_slabs.items():
             per_slab[name] = t.full_bytes
         for sname, spec in self.cached_slabs.items():
             item = jnp.dtype(spec.dtype).itemsize
-            fast = spec.capacity * spec.dim * item
+            arena_codec = self._slab_arena_codec(sname)
+            head = spec.capacity if arena_codec == "fp32" else spec.head_capacity
+            w = tiered_arena_bytes(spec.capacity, head, spec.dim, spec.dtype, arena_codec)
+            fast = w
             fast += spec.capacity * 4 * 3  # slot_to_row, last_used, use_count
             # row_to_slot + idx_map + tracker (score + last_touch)
             fast += spec.vocab * 4 * 4
             per_slab[sname] = fast
+            fast_actual += w
+            fast_fp32 += spec.capacity * spec.dim * item
             codec = get_codec(self._slab_codec(sname))
             slow += spec.vocab * codec.row_bytes((spec.dim,), spec.dtype)
             slow_fp32 += spec.vocab * spec.dim * item
@@ -1404,6 +1567,7 @@ class EmbeddingCollection:
             "device_total": sum(per_slab.values()),
             "slow_tier_bytes": slow,
             "host_bytes_saved": slow_fp32 - slow,
+            "arena_bytes_saved": fast_fp32 - fast_actual,
             "per_slab": per_slab,
             "budget_bytes": self.plan.budget_bytes,
         }
@@ -1433,12 +1597,30 @@ class EmbeddingCollection:
             slabs[name] = DeviceSlab(weight=dev_w)
         for sname, spec in self.cached_slabs.items():
             like = {"weight": jax.ShapeDtypeStruct((spec.vocab, spec.dim), spec.dtype)}
+            arena_codec = self._slab_arena_codec(sname)
+            if arena_codec == "fp32":
+                cached_rows: Any = {"weight": cached_w}
+            else:
+                # tiered arena: head/tail carry the cached-weight spec; the
+                # [slots, 2] sideband rides with the CACHE (replicated in row
+                # mode, and its (scale, zp) axis can never split the model
+                # axis), hence P(None, None) rather than the host side_w.
+                cached_rows = ArenaStore.spec_like(
+                    {
+                        "weight": jax.ShapeDtypeStruct(
+                            (spec.capacity, spec.dim), spec.dtype
+                        )
+                    },
+                    cached_w,
+                    P(None, None),
+                    codec=arena_codec,
+                )
             slabs[sname] = CachedSlab(
                 full=HostStore.spec_like(
                     like, {"weight": full_w}, side_w, codec=self._slab_codec(sname)
                 ),
                 cache=cache_lib.CacheState(
-                    cached_rows={"weight": cached_w},
+                    cached_rows=cached_rows,
                     slot_to_row=P(None),
                     row_to_slot=P(None),
                     last_used=P(None),
@@ -1448,6 +1630,8 @@ class EmbeddingCollection:
                     misses=P(),
                     evictions=P(),
                     uniq_overflows=P(),
+                    tier_promotions=P(),
+                    tier_demotions=P(),
                     tracker=freq_lib.tracker_spec(P),
                 ),
                 idx_map=P(None),

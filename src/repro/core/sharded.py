@@ -87,7 +87,14 @@ from repro.core.collection import (
     _read_full_rows,
 )
 from repro.dist import partitioning as dist_part
-from repro.store import HostStore, SlabGeometry, get_codec
+from repro.store import (
+    ArenaStore,
+    HostStore,
+    PrecisionPolicy,
+    SlabGeometry,
+    get_codec,
+    tiered_arena_bytes,
+)
 
 __all__ = [
     "RepArena",
@@ -339,6 +346,8 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             budget_bytes,
             arena=ArenaConfig(**arena_kw),
             host_precision=arena_kw.get("host_precision"),
+            arena_precision=arena_kw.get("arena_precision"),
+            arena_head_ratio=arena_kw.get("arena_head_ratio", 0.25),
         )
         return cls(tables, planner.plan(tables, counts=counts), num_shards,
                    model_axis, replicate_top_k, exchange_codec,
@@ -390,6 +399,15 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             max_unique_per_step=spec.max_unique_per_step,
             protect_via_inverse=spec.protect_via_inverse,
             freq_half_life=spec.freq_half_life,
+            # each shard's arena tiers at the same head ratio; an unresolved
+            # "auto" (config built before ``init``) budgets at the policy's
+            # no-stats pick, exactly like the unsharded ``cache_config``.
+            arena_precision=(
+                PrecisionPolicy().no_stats
+                if spec.arena_precision == "auto"
+                else spec.arena_precision
+            ),
+            arena_head_ratio=spec.arena_head_ratio,
         )
 
     # ----- init -------------------------------------------------------------
@@ -400,6 +418,7 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
         counts: Optional[Mapping[str, np.ndarray]] = None,
         warm: bool = True,
         host_precision: Optional[str] = None,
+        arena_precision: Optional[str] = None,
     ) -> CollectionState:
         """Build the sharded state.  Weight draws mirror the unsharded
         ``init`` key-for-key, so the sharded collection starts from the exact
@@ -455,6 +474,33 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             else:
                 get_codec(codec)  # fail fast on typos
             self.host_precision[sname] = codec
+            # arena (fast-tier) precision mirrors the host resolution: "auto"
+            # picks from the GLOBAL resident geometry (S * shard capacity /
+            # head) — coverage is a property of the logical slab, not of one
+            # shard's slice.  The resolved codec is written back into the
+            # spec so every later ``shard_cache_config`` agrees with the
+            # state structure built below.
+            arena_codec = arena_precision or spec.arena_precision
+            if arena_codec == "auto":
+                cap_s = self.shard_capacity(spec)
+                head_s = min(cap_s, max(1, int(round(spec.arena_head_ratio * cap_s))))
+                arena_codec = self.precision_policy.choose_arena(
+                    SlabGeometry(
+                        name=sname,
+                        vocab=spec.vocab,
+                        dim=spec.dim,
+                        capacity=S * cap_s,
+                        dtype_itemsize=jnp.dtype(spec.dtype).itemsize,
+                    ),
+                    S * head_s,
+                    counts=slab_counts,
+                )
+            else:
+                get_codec(arena_codec)  # fail fast on typos
+            if arena_codec != spec.arena_precision:
+                spec = dataclasses.replace(spec, arena_precision=arena_codec)
+                self.cached_slabs[sname] = spec
+            self.arena_precision[sname] = arena_codec
             vs = self.rows_per_shard(spec)
             # scatter rank r's row to flat slot owner[r]*vs + local[r]; pad
             # rows (flat slots no rank maps to) stay zero and are never read.
@@ -1239,14 +1285,22 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
 
     def device_bytes(self) -> Dict[str, int]:
         """Footprint under the sharded layout.  ``device_total`` counts one
-        REPLICA of the replicated arrays (DEVICE tables, id routing maps)
-        plus the summed stacked arrays; ``device_per_shard`` is what one mesh
-        device actually holds — the budget-relevant number."""
+        REPLICA of the shared read-only arrays (DEVICE tables, id routing
+        maps) plus the summed stacked arrays plus S copies of every
+        replicated hot-row arena — each mesh device materializes its own
+        ``ShardedSlab.rep``, so charging it once under-counted real HBM by
+        ``(S-1) * rep_arena`` bytes.  ``device_per_shard`` is what one mesh
+        device actually holds — the budget-relevant number.  Tiered arenas
+        (``arena_precision`` != fp32) charge the encoded tail + sideband via
+        :func:`tiered_arena_bytes`; ``arena_bytes_saved`` is the fast-tier
+        HBM the tiering freed versus an all-fp32 arena."""
         S = self.num_shards
         per_slab: Dict[str, int] = {}
         replicated = 0
         stacked = 0
+        rep_arenas = 0
         slow = slow_fp32 = 0
+        fast_fp32 = fast_actual = 0
         for name, t in self.device_slabs.items():
             per_slab[name] = t.full_bytes
             replicated += t.full_bytes
@@ -1254,23 +1308,34 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             item = jnp.dtype(spec.dtype).itemsize
             vs = self.rows_per_shard(spec)
             cap = self.shard_capacity(spec)
-            # per shard: arena + slot bookkeeping + row_to_slot + tracker
-            stack = S * (cap * spec.dim * item + cap * 4 * 3 + vs * 4 * 3)
+            ccfg = self.shard_cache_config(spec)
+            w = tiered_arena_bytes(
+                cap, ccfg.head_capacity, spec.dim, spec.dtype,
+                ccfg.arena_precision,
+            )
+            fast_fp32 += S * cap * spec.dim * item
+            fast_actual += S * w
+            # per shard: arena (+ sideband) + slot bookkeeping + row_to_slot
+            # + tracker
+            stack = S * (w + cap * 4 * 3 + vs * 4 * 3)
             rep = spec.vocab * 4 * 3  # idx_map + rank_owner + rank_local
             K = min(self.replicate_top_k, spec.vocab)
             # replicated arena: rows + its tracker (score, last_touch) + step
-            rep += K * (spec.dim * item + 4 + 4) + 4
-            per_slab[sname] = stack + rep
+            # — PER DEVICE (every shard holds a full copy; fp32 by design)
+            rep_arena = K * (spec.dim * item + 4 + 4) + 4
+            per_slab[sname] = stack + rep + S * rep_arena
             stacked += stack
             replicated += rep
+            rep_arenas += rep_arena
             codec = get_codec(self._slab_codec(sname))
             slow += S * vs * codec.row_bytes((spec.dim,), spec.dtype)
             slow_fp32 += S * vs * spec.dim * item
         return {
-            "device_total": replicated + stacked,
-            "device_per_shard": replicated + stacked // max(S, 1),
+            "device_total": replicated + stacked + S * rep_arenas,
+            "device_per_shard": replicated + rep_arenas + stacked // max(S, 1),
             "slow_tier_bytes": slow,
             "host_bytes_saved": slow_fp32 - slow,
+            "arena_bytes_saved": fast_fp32 - fast_actual,
             "per_slab": per_slab,
             "budget_bytes": self.plan.budget_bytes,
         }
@@ -1292,6 +1357,20 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             slabs[name] = DeviceSlab(weight=P(None, None))
         for sname, spec in self.cached_slabs.items():
             like = {"weight": jax.ShapeDtypeStruct((spec.vocab, spec.dim), spec.dtype)}
+            arena_codec = self._slab_arena_codec(sname)
+            if arena_codec == "fp32":
+                cached_rows: Any = {"weight": P(axis, None, None)}
+            else:
+                # tiered arena: every tier's leaves carry the leading [S]
+                # shard dim, sideband included (it is per-shard cache state,
+                # unlike the host-store sideband which follows the row split)
+                cap = self.shard_capacity(spec)
+                cached_rows = ArenaStore.spec_like(
+                    {"weight": jax.ShapeDtypeStruct((cap, spec.dim), spec.dtype)},
+                    P(axis, None, None),
+                    P(axis, None, None),
+                    codec=arena_codec,
+                )
             slabs[sname] = ShardedSlab(
                 full=HostStore.spec_like(
                     like,
@@ -1300,7 +1379,7 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
                     codec=self._slab_codec(sname),
                 ),
                 cache=cache_lib.CacheState(
-                    cached_rows={"weight": P(axis, None, None)},
+                    cached_rows=cached_rows,
                     slot_to_row=P(axis, None),
                     row_to_slot=P(axis, None),
                     last_used=P(axis, None),
@@ -1310,6 +1389,8 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
                     misses=P(axis),
                     evictions=P(axis),
                     uniq_overflows=P(axis),
+                    tier_promotions=P(axis),
+                    tier_demotions=P(axis),
                     tracker=freq_lib.tracker_spec(P, axis=axis),
                 ),
                 idx_map=P(None),

@@ -24,14 +24,23 @@ that is what crosses the slow link, so an int8 store moves ~4x fewer bytes
 per round — and the decode (load) / encode (writeback) runs on the block at
 the device end of the link.  With the fp32 codec the store is raw arrays and
 the path is bit-identical to the plain-pytree one.
+
+The DEVICE side may likewise be a :class:`repro.store.ArenaStore` (the
+frequency-tiered arena): gathers decode-on-read (head slots bit-exact, tail
+slots dequantized) and scatters encode tail lanes on arrival.  When a host
+store loads into an arena of the SAME codec, the tail lanes take the host
+payload + sideband verbatim — the encoded block that crossed the link lands
+in the tail tier without a decode/re-encode round trip (the head lanes still
+decode, since the head stores fp32).
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.store.arena import ArenaStore
 from repro.store.host_store import HostStore
 
 __all__ = ["move_rows", "write_rows", "gather_rows", "scatter_rows", "num_rounds"]
@@ -108,7 +117,9 @@ def move_rows(
 
     Either side may be a ``HostStore``: loads gather the encoded staging
     block and decode it at the device end; writebacks encode the block
-    before it crosses, then scatter payload + sideband into the store.
+    before it crosses, then scatter payload + sideband into the store.  The
+    device side may be an ``ArenaStore`` (tiered arena) — see module
+    docstring for the encoded host->tail fast path.
     """
     k = src_idx.shape[0]
     buffer_rows = min(buffer_rows, k)
@@ -125,12 +136,34 @@ def move_rows(
         di = jax.lax.dynamic_slice_in_dim(dst_idx, s, buffer_rows)
         ac = jax.lax.dynamic_slice_in_dim(active, s, buffer_rows)
         si = jnp.where(ac, si, -1)
+        enc_payload: Optional[Any] = None
+        enc_side: Optional[Any] = None
         if isinstance(src_tree, HostStore):  # pack + decode-on-load
-            block = _gather_store_rows(src_tree, si)
+            # keep the encoded block around: if the destination is a tiered
+            # arena of the same codec, tail lanes take it verbatim below.
+            enc_payload = gather_rows(src_tree.data, si)
+            enc_side = gather_rows(src_tree.sideband, si)
+            block = src_tree.decode_block(enc_payload, enc_side)
+        elif isinstance(src_tree, ArenaStore):  # pack + decode-on-read
+            block = src_tree.gather_slots(si)
         else:
             block = gather_rows(src_tree, si)  # pack (staging buffer)
         if isinstance(dst, HostStore):  # encode-on-writeback + unpack
             return _scatter_store_rows(dst, di, block, ac)
+        if isinstance(dst, ArenaStore):  # tiered unpack (tail encodes)
+            payload_blk = side_blk = None
+            if isinstance(src_tree, HostStore) and src_tree.codec == dst.codec:
+                payload_blk = {
+                    k_: enc_payload[k_]
+                    for k_ in dst.tail
+                    if k_ in enc_payload and src_tree.is_encoded(k_)
+                }
+                side_blk = {
+                    k_: enc_side[k_] for k_ in dst.sideband if k_ in enc_side
+                }
+            return dst.scatter_slots(
+                di, block, ac, payload_block=payload_blk, side_block=side_blk
+            )
         return scatter_rows(dst, di, block, ac)  # move + unpack
 
     if rounds == 1:

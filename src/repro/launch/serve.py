@@ -20,6 +20,12 @@ def main():
     ap.add_argument("--arch", default="mind", choices=["mind", "din", "dlrm-criteo"])
     ap.add_argument("--requests", type=int, default=2000)
     ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--arena-precision", default="fp32",
+                    choices=["fp32", "fp16", "int8", "auto"],
+                    help="device-arena (fast-tier) codec: fp32 = raw bit-exact "
+                         "arena; fp16/int8 tier it (fp32 hot head + encoded "
+                         "resident tail) so the same HBM holds 2-4x more "
+                         "resident rows; auto = PrecisionPolicy pick")
     ap.add_argument("--cache-policy", default=None,
                     choices=["freq_lfu", "lru", "runtime_lfu", "uvm_row"],
                     help="cache eviction policy (core.policies.Policy); "
@@ -42,7 +48,8 @@ def main():
         from repro.models.recsys_models import MINDConfig, MINDModel
 
         cfg = MINDConfig(n_items=200_000, n_users=20_000, embed_dim=32, seq_len=50,
-                         batch_size=args.batch, cache_ratio=0.05, policy=policy)
+                         batch_size=args.batch, cache_ratio=0.05,
+                         arena_precision=args.arena_precision, policy=policy)
         model = MINDModel(cfg)
         pad = {"hist_items": np.zeros((cfg.seq_len,), np.int32),
                "hist_len": np.zeros((), np.int32), "user": np.zeros((), np.int32),
@@ -54,7 +61,7 @@ def main():
 
         cfg = DINConfig(n_items=200_000, n_cates=20_000, n_users=20_000, embed_dim=18,
                         seq_len=50, batch_size=args.batch, cache_ratio=0.05,
-                        policy=policy)
+                        arena_precision=args.arena_precision, policy=policy)
         model = DINModel(cfg)
         pad = {k: np.zeros(s, np.int32) for k, s in (
             ("hist_items", (cfg.seq_len,)), ("hist_cates", (cfg.seq_len,)),
@@ -67,7 +74,7 @@ def main():
 
         cfg = DLRMConfig(vocab_sizes=(100_000, 50_000), embed_dim=32, batch_size=args.batch,
                          cache_ratio=0.05, bottom_mlp=(64, 32), top_mlp=(64,),
-                         policy=policy)
+                         arena_precision=args.arena_precision, policy=policy)
         model = DLRM(cfg)
         pad = {"dense": np.zeros((13,), np.float32), "sparse": np.zeros((2,), np.int32),
                "label": np.zeros((), np.float32)}

@@ -27,7 +27,8 @@ def cache_policy(name):
 def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
                    model_shards: int = 0, policy=None,
                    replicate_top_k: int = 0, exchange_codec: str = "fp32",
-                   max_routed_per_shard: int = 0):
+                   max_routed_per_shard: int = 0,
+                   arena_precision: str = "fp32"):
     if model_shards and not arch.startswith("dlrm"):
         raise SystemExit(f"--model-shards is wired for dlrm archs; {arch} "
                          f"builds an unsharded collection")
@@ -43,6 +44,7 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
                          batch_size=batch, cache_ratio=0.02, lr=0.3,
                          bottom_mlp=(64, 32), top_mlp=(64,),
                          host_precision=host_precision,
+                         arena_precision=arena_precision,
                          model_shards=model_shards, policy=policy,
                          replicate_top_k=replicate_top_k,
                          exchange_codec=exchange_codec,
@@ -55,7 +57,7 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
 
         cfg = FMConfig(vocab_sizes=(100_000,) * 6, embed_dim=10, batch_size=batch,
                        cache_ratio=0.02, host_precision=host_precision,
-                       policy=policy)
+                       arena_precision=arena_precision, policy=policy)
         model = FMModel(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
@@ -66,14 +68,16 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
         if arch == "mind":
             cfg = MINDConfig(n_items=200_000, n_users=20_000, embed_dim=32,
                              seq_len=50, batch_size=batch, cache_ratio=0.05,
-                             host_precision=host_precision, policy=policy)
+                             host_precision=host_precision,
+                             arena_precision=arena_precision, policy=policy)
             model = MINDModel(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
                 cfg.n_items, cfg.n_users, cfg.seq_len, batch, 0, s).items()}
         else:
             kw = dict(n_items=200_000, n_cates=20_000, n_users=20_000, embed_dim=18,
                       seq_len=50, batch_size=batch, cache_ratio=0.05,
-                      host_precision=host_precision, policy=policy)
+                      host_precision=host_precision,
+                      arena_precision=arena_precision, policy=policy)
             cfg = DINConfig(**kw) if arch == "din" else DIENConfig(gru_dim=36, **kw)
             model = (DINModel if arch == "din" else DIENModel)(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
@@ -99,6 +103,14 @@ def main():
                          "pre-store behavior; fp16/int8 shrink host bytes and "
                          "host<->device traffic; auto = PrecisionPolicy from "
                          "frequency stats (recsys archs only)")
+    ap.add_argument("--arena-precision", default="fp32",
+                    choices=["fp32", "fp16", "int8", "auto"],
+                    help="device-arena (fast-tier) codec: fp32 = raw bit-exact "
+                         "arena (pre-tiering behavior); fp16/int8 tier the "
+                         "arena — the hot head stays fp32, the cold resident "
+                         "tail stores encoded, stretching the same HBM over "
+                         "2-4x more resident rows; auto = PrecisionPolicy "
+                         "from head coverage (recsys archs only)")
     ap.add_argument("--model-shards", type=int, default=0,
                     help="0 = single-device collection; N >= 1 = hybrid "
                          "parallel: cached embedding slabs shard over N "
@@ -177,7 +189,8 @@ def main():
                                             policy=cache_policy(args.cache_policy),
                                             replicate_top_k=args.replicate_top_k,
                                             exchange_codec=args.exchange_codec,
-                                            max_routed_per_shard=args.max_routed_per_shard)
+                                            max_routed_per_shard=args.max_routed_per_shard,
+                                            arena_precision=args.arena_precision)
 
     if args.cache_policy and not hasattr(model, "collection"):
         raise SystemExit(f"--cache-policy needs a collection-backed arch; "
@@ -234,6 +247,9 @@ def main():
         db = model.collection.device_bytes()
         print(f"host tier ({args.host_precision}): {db['slow_tier_bytes']/1e6:.1f} MB "
               f"(saved {db['host_bytes_saved']/1e6:.1f} MB vs fp32)")
+        if args.arena_precision != "fp32":
+            print(f"arena tier ({args.arena_precision}): saved "
+                  f"{db.get('arena_bytes_saved', 0)/1e6:.2f} MB HBM vs fp32")
         if "host_wire_bytes" in h[-1]:
             print(f"host<->device traffic: {h[-1]['host_wire_bytes']/1e6:.1f} MB total")
         if args.model_shards:

@@ -51,6 +51,11 @@ class DLRMConfig:
     # (row-wise scale/zero-point) | "auto" (PrecisionPolicy picks per slab
     # from the frequency counts passed to init)
     host_precision: str = "fp32"
+    # device-arena (fast-tier) codec: "fp32" keeps the raw bit-exact arena;
+    # "fp16"/"int8" tier it — hot head stays fp32, the cold resident tail
+    # stores encoded; "auto" lets PrecisionPolicy pick from head coverage.
+    arena_precision: str = "fp32"
+    arena_head_ratio: float = 0.25  # fp32 head share of a tiered arena
     # 0 = single-device collection; N >= 1 = hybrid parallel: cached slabs
     # shard over N model-axis shards (each with its own cache arena and
     # HostStore slice), dense params + DEVICE tables stay data-parallel.
@@ -106,6 +111,8 @@ class DLRM(common.CollectionModelMixin):
             buffer_rows=cfg.buffer_rows,
             max_unique_per_step=cfg.max_unique_per_step,
             host_precision=cfg.host_precision,
+            arena_precision=cfg.arena_precision,
+            arena_head_ratio=cfg.arena_head_ratio,
         )
         if cfg.model_shards > 0:
             from repro.core.sharded import ShardedEmbeddingCollection

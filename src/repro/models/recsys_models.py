@@ -61,6 +61,8 @@ class FMConfig:
     protect_via_inverse: bool = True
     buffer_rows: int = 65536
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
+    arena_precision: str = "fp32"  # device-arena tail codec (see repro.store)
+    arena_head_ratio: float = 0.25  # fp32 head share of a tiered arena
     policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
@@ -86,6 +88,8 @@ class FMModel(common.CollectionModelMixin):
             protect_via_inverse=cfg.protect_via_inverse,
             buffer_rows=cfg.buffer_rows,
             host_precision=cfg.host_precision,
+            arena_precision=cfg.arena_precision,
+            arena_head_ratio=cfg.arena_head_ratio,
             policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 
@@ -180,6 +184,8 @@ class DINConfig:
     lr: float = 0.05
     dtypes: Dtypes = F32
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
+    arena_precision: str = "fp32"  # device-arena tail codec (see repro.store)
+    arena_head_ratio: float = 0.25  # fp32 head share of a tiered arena
     policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
@@ -201,6 +207,8 @@ class DINModel(common.CollectionModelMixin):
             cache_ratio=cfg.cache_ratio,
             max_unique_per_step=cfg.max_unique_per_step,
             host_precision=cfg.host_precision,
+            arena_precision=cfg.arena_precision,
+            arena_head_ratio=cfg.arena_head_ratio,
             policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 
@@ -419,6 +427,8 @@ class MINDConfig:
     lr: float = 0.05
     dtypes: Dtypes = F32
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
+    arena_precision: str = "fp32"  # device-arena tail codec (see repro.store)
+    arena_head_ratio: float = 0.25  # fp32 head share of a tiered arena
     policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
@@ -438,6 +448,8 @@ class MINDModel(common.CollectionModelMixin):
             cache_ratio=cfg.cache_ratio,
             max_unique_per_step=cfg.max_unique_per_step,
             host_precision=cfg.host_precision,
+            arena_precision=cfg.arena_precision,
+            arena_head_ratio=cfg.arena_head_ratio,
             policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 

@@ -136,6 +136,8 @@ _CUMULATIVE_FAMILIES = (
     ("exchange_row_bytes", "exchange_routed_lanes", "exchange_row_lane_bytes"),
     ("refresh_swaps_exact", "slab_refresh_swaps", None),
     ("refresh_rows_moved_exact", "slab_refresh_rows", None),
+    ("slab_tier_promotions", "slab_tier_promotions", None),
+    ("slab_tier_demotions", "slab_tier_demotions", None),
 )
 
 

@@ -5,11 +5,13 @@
 per table from frequency statistics and a host-byte budget.  The transmitter
 is codec-aware, so staging blocks cross the host<->device link encoded.
 """
+from repro.store.arena import ArenaStore, tiered_arena_bytes
 from repro.store.codec import CODECS, Codec, Fp16Codec, Fp32Codec, Int8Codec, get_codec
 from repro.store.host_store import HostStore
 from repro.store.policy import PrecisionPolicy, SlabGeometry
 
 __all__ = [
+    "ArenaStore",
     "CODECS",
     "Codec",
     "Fp32Codec",
@@ -19,4 +21,5 @@ __all__ = [
     "HostStore",
     "PrecisionPolicy",
     "SlabGeometry",
+    "tiered_arena_bytes",
 ]

@@ -1,0 +1,348 @@
+"""``ArenaStore`` — the frequency-tiered device cache arena (fast tier).
+
+The device arena historically stored every resident row fp32.  The same HBM
+budget stretches 2-4x further when only the *hot head* of the arena keeps
+full precision and the colder resident tail stores encoded (fp16 or row-wise
+int8 with a sideband scale leaf) — "Mixed-Precision Embedding Using a Cache"
+(arXiv 2010.11305), applied on-device instead of host-side.  An
+``ArenaStore`` is that container:
+
+  * slots ``[0, head_capacity)`` — the fp32 head: raw leaves, bit-exact, the
+    tier SGD updates touch directly.
+  * slots ``[head_capacity, capacity)`` — the encoded tail: payload leaves in
+    the codec's storage dtype plus a per-row ``sideband`` leaf (int8's
+    [tail, 2] (scale, zero_point); empty for fp16).
+
+The slot partition is what ties precision to frequency WITHOUT any extra
+bookkeeping: ``warmup`` fills slot i with frequency rank i, FREQ_LFU's
+eviction key is the resident rank itself, and ``plan_prepare`` compacts miss
+rows in ascending-rank order — so hot rows gravitate to low slots (the head)
+and cold residents to high slots (the tail) by the same mechanics that
+already move rows across the capacity boundary.  ``core.refresh`` swaps
+cross the precision boundary for free: a swapped row is invalidated and
+re-faults into whichever tier its new rank's slot lives in.
+
+Layout convention: encoded leaves are per-row vectors ``[..., slots, dim]``
+(the cache's ``{"weight": [capacity, dim]}`` shape); leaves the codec does
+not transform (per-row scalars, integer leaves) stay raw at full capacity in
+``raw``.  All ops treat the slot axis as axis 0 of the unbatched view, so
+they compose with ``jax.vmap`` over a leading shard axis exactly like the
+raw-dict arena (the sharded collection's stacked ``[S, capacity, dim]``
+leaves).  Whole-leaf ``decode_leaf`` / ``replace_leaf`` accept stacked
+arrays directly — encode flattens the leading batch dims first, because the
+int8 codec's per-row reduction would otherwise collapse the shard axis into
+one scale.
+
+Like ``HostStore``, the codec name is static pytree metadata, so jit
+specializes per codec and checkpoint restore validates the layout (leaf
+shape/dtype mismatch = arena-precision mismatch, a loud failure).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.store.codec import Codec, get_codec
+
+__all__ = ["ArenaStore", "tiered_arena_bytes"]
+
+
+def tiered_arena_bytes(
+    capacity: int,
+    head_capacity: int,
+    dim: int,
+    dtype,
+    codec: str,
+) -> int:
+    """Static device footprint of one tiered weight leaf: fp32 head rows +
+    encoded tail payload + tail sideband.  ``codec="fp32"`` reproduces the
+    raw-arena accounting exactly (head == capacity, no tail)."""
+    item = jnp.dtype(dtype).itemsize
+    if codec == "fp32":
+        return capacity * dim * item
+    c = get_codec(codec)
+    head = min(max(int(head_capacity), 0), int(capacity))
+    tail = int(capacity) - head
+    return head * dim * item + tail * c.row_bytes((dim,), dtype)
+
+
+def _row_mask(mask: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a per-lane bool mask over a block's trailing row dims."""
+    return mask.reshape(mask.shape + (1,) * (rows.ndim - mask.ndim))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ArenaStore:
+    """Tiered fast-tier container (see module docstring).
+
+    ``head``/``tail``/``sideband``/``raw`` are flat ``Dict[str, array]``
+    pytrees; ``codec``/``out_dtype`` ride as static metadata (like
+    ``HostStore``), so ``isinstance`` dispatch in the transmitter stays a
+    trace-time decision, including under ``jax.vmap``."""
+
+    head: Dict[str, jnp.ndarray]  # [head_capacity, ...] raw (fp32) rows
+    tail: Dict[str, jnp.ndarray]  # [capacity - head_capacity, ...] payload
+    sideband: Dict[str, jnp.ndarray]  # per-row codec metadata for tail rows
+    raw: Dict[str, jnp.ndarray]  # untransformed leaves, full [capacity, ...]
+    codec: str = dataclasses.field(default="fp16", metadata=dict(static=True))
+    out_dtype: str = dataclasses.field(default="float32", metadata=dict(static=True))
+
+    # ----- construction -----------------------------------------------------
+
+    @staticmethod
+    def _tiers(codec: Codec, leaf) -> bool:
+        """Encoded leaves are per-row VECTORS exactly ([slots, dim]): wider
+        per-row shapes and scalars stay raw (sideband bookkeeping would cost
+        more than it saves — the ``HostStore.encodes`` trade, tightened to
+        the arena's known leaf layout)."""
+        return codec.encodes(leaf) and len(leaf.shape) == 2
+
+    @classmethod
+    def create(
+        cls,
+        full_tree: Dict[str, jnp.ndarray],
+        head_capacity: int,
+        codec: str,
+    ) -> "ArenaStore":
+        """Split a raw ``[capacity, ...]`` arena dict into head + encoded tail."""
+        c = get_codec(codec)
+        if codec == "fp32":
+            raise ValueError(
+                "ArenaStore is the tiered container; an fp32 arena stays a raw "
+                "dict (bit-identical pre-tiering layout)"
+            )
+        dts = {
+            str(jnp.dtype(v.dtype)) for v in full_tree.values() if cls._tiers(c, v)
+        }
+        if len(dts) > 1:
+            raise ValueError(
+                f"ArenaStore decodes all tail leaves to one dtype, got {sorted(dts)}"
+            )
+        if not dts:
+            raise ValueError("ArenaStore needs at least one per-row vector leaf")
+        out_dtype = dts.pop()
+        head: Dict[str, jnp.ndarray] = {}
+        tail: Dict[str, jnp.ndarray] = {}
+        sideband: Dict[str, jnp.ndarray] = {}
+        raw: Dict[str, jnp.ndarray] = {}
+        for k, leaf in full_tree.items():
+            if cls._tiers(c, leaf):
+                h = min(max(int(head_capacity), 0), int(leaf.shape[0]))
+                head[k] = leaf[:h]
+                payload, side = c.encode(leaf[h:])
+                tail[k] = payload
+                if side is not None:
+                    sideband[k] = side
+            else:
+                raw[k] = leaf
+        return cls(
+            head=head, tail=tail, sideband=sideband, raw=raw,
+            codec=codec, out_dtype=out_dtype,
+        )
+
+    @classmethod
+    def spec_like(
+        cls,
+        full_like: Dict[str, Any],
+        leaf_spec: Any,
+        side_spec: Any,
+        codec: str,
+    ) -> "ArenaStore":
+        """PartitionSpec mirror of ``create``: head/tail entries carry
+        ``leaf_spec``, sideband entries ``side_spec``, exactly where arrays
+        would sit — the shard-spec source of truth (``HostStore.spec_like``
+        pattern)."""
+        c = get_codec(codec)
+        head: Dict[str, Any] = {}
+        tail: Dict[str, Any] = {}
+        sideband: Dict[str, Any] = {}
+        raw: Dict[str, Any] = {}
+        dts = {
+            str(jnp.dtype(v.dtype)) for v in full_like.values() if cls._tiers(c, v)
+        }
+        out_dtype = dts.pop() if dts else "float32"
+        for k, leaf in full_like.items():
+            if cls._tiers(c, leaf):
+                head[k] = leaf_spec
+                tail[k] = leaf_spec
+                if c.sideband_row_shape() is not None:
+                    sideband[k] = side_spec
+            else:
+                raw[k] = leaf_spec
+        return cls(
+            head=head, tail=tail, sideband=sideband, raw=raw,
+            codec=codec, out_dtype=out_dtype,
+        )
+
+    # ----- geometry ---------------------------------------------------------
+
+    @property
+    def head_capacity(self) -> int:
+        """Slots below this index are fp32; derived from leaf shapes so it is
+        correct on the unbatched view inside ``vmap`` and on stacked leaves
+        alike (slot axis = second-to-last of a [..., slots, dim] leaf)."""
+        return int(next(iter(self.head.values())).shape[-2])
+
+    @property
+    def capacity(self) -> int:
+        return self.head_capacity + int(next(iter(self.tail.values())).shape[-2])
+
+    @property
+    def _codec(self) -> Codec:
+        return get_codec(self.codec)
+
+    @property
+    def _out(self):
+        return jnp.dtype(self.out_dtype)
+
+    # ----- slot ops (the transmitter's gather/scatter surface) --------------
+
+    def gather_slots(self, slots: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Decoded rows at ``slots`` (int32 [K]); negative/OOB lanes give zero
+        rows — the ``transmitter.gather_rows`` convention.  Head lanes are
+        bit-exact reads; tail lanes decode payload + sideband."""
+        c = self._codec
+        H = self.head_capacity
+        in_tail = slots >= H
+        out: Dict[str, jnp.ndarray] = {}
+        for k, hleaf in self.head.items():
+            safe_h = jnp.where((slots >= 0) & ~in_tail, slots, hleaf.shape[0])
+            head_rows = jnp.take(hleaf, safe_h, axis=0, mode="fill", fill_value=0)
+            tleaf = self.tail[k]
+            safe_t = jnp.where(in_tail, slots - H, tleaf.shape[0])
+            payload = jnp.take(tleaf, safe_t, axis=0, mode="fill", fill_value=0)
+            side = None
+            if k in self.sideband:
+                side = jnp.take(
+                    self.sideband[k], safe_t, axis=0, mode="fill", fill_value=0
+                )
+            tail_rows = c.decode(payload, side, self._out)
+            out[k] = jnp.where(_row_mask(in_tail, head_rows), tail_rows, head_rows)
+        for k, leaf in self.raw.items():
+            safe = jnp.where(slots >= 0, slots, leaf.shape[0])
+            out[k] = jnp.take(leaf, safe, axis=0, mode="fill", fill_value=0)
+        return out
+
+    def scatter_slots(
+        self,
+        slots: jnp.ndarray,
+        block: Dict[str, jnp.ndarray],
+        active: jnp.ndarray,
+        payload_block: Optional[Dict[str, jnp.ndarray]] = None,
+        side_block: Optional[Dict[str, jnp.ndarray]] = None,
+    ) -> "ArenaStore":
+        """Scatter a full-precision ``block`` into ``slots`` where ``active``:
+        head lanes land raw, tail lanes encode first.  When the source was a
+        host store of the SAME codec, ``payload_block``/``side_block`` carry
+        its already-encoded rows and tail lanes take them verbatim — the
+        host->device load lands encoded with no decode/re-encode round trip
+        (payload-stable: the device tail holds the host tier's exact bits)."""
+        c = self._codec
+        H = self.head_capacity
+        in_tail = slots >= H
+        head = dict(self.head)
+        tail = dict(self.tail)
+        sideband = dict(self.sideband)
+        raw = dict(self.raw)
+        for k, hleaf in self.head.items():
+            idx_h = jnp.where(active & ~in_tail, slots, hleaf.shape[0])
+            head[k] = hleaf.at[idx_h].set(
+                block[k].astype(hleaf.dtype), mode="drop"
+            )
+            if payload_block is not None and k in payload_block:
+                payload, side = payload_block[k], (
+                    side_block.get(k) if side_block else None
+                )
+            else:
+                payload, side = c.encode(block[k])
+            tleaf = self.tail[k]
+            idx_t = jnp.where(active & in_tail, slots - H, tleaf.shape[0])
+            tail[k] = tleaf.at[idx_t].set(payload.astype(tleaf.dtype), mode="drop")
+            if k in self.sideband:
+                sideband[k] = self.sideband[k].at[idx_t].set(
+                    side.astype(self.sideband[k].dtype), mode="drop"
+                )
+        n = self.capacity
+        for k, leaf in self.raw.items():
+            idx = jnp.where(active, slots, n)
+            raw[k] = leaf.at[idx].set(block[k], mode="drop")
+        return dataclasses.replace(
+            self, head=head, tail=tail, sideband=sideband, raw=raw
+        )
+
+    # ----- whole-leaf views (weights() / apply_grads surface) ---------------
+
+    def decode_leaf(self, key: str) -> jnp.ndarray:
+        """The full ``[..., capacity, dim]`` decoded view of one leaf — what
+        ``weights()`` hands the differentiable gather.  Works on stacked
+        shard leaves unchanged (the codec decode broadcasts leading dims)."""
+        if key in self.raw:
+            return self.raw[key]
+        tail = self._codec.decode(self.tail[key], self.sideband.get(key), self._out)
+        return jnp.concatenate(
+            [self.head[key].astype(self._out), tail], axis=-2
+        )
+
+    def _encode_rows(self, x: jnp.ndarray) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """Per-row encode of a possibly-stacked ``[..., rows, dim]`` array:
+        flatten the leading batch dims first — the int8 codec reduces over
+        every non-leading axis, so encoding ``[S, rows, dim]`` directly would
+        produce one scale per SHARD instead of per row."""
+        batch = x.shape[:-2]
+        flat = x.reshape((-1,) + x.shape[-1:]) if batch else x
+        payload, side = self._codec.encode(flat)
+        if batch:
+            payload = payload.reshape(x.shape)
+            if side is not None:
+                side = side.reshape(batch + x.shape[-2:-1] + side.shape[-1:])
+        return payload, side
+
+    def replace_leaf(self, key: str, full: jnp.ndarray) -> "ArenaStore":
+        """New store with leaf ``key`` set from a full decoded array: the
+        head slice lands raw (bit-exact SGD on hot rows), the tail slice
+        re-encodes with a fresh per-row master scale (the sideband).  Rows
+        the update left untouched re-encode to the identical payload (the
+        codec's stable-projection property), so a zero gradient is a no-op
+        in both tiers."""
+        if key in self.raw:
+            return dataclasses.replace(self, raw={**self.raw, key: full})
+        H = self.head_capacity
+        head_part = full[..., :H, :].astype(self.head[key].dtype)
+        payload, side = self._encode_rows(full[..., H:, :])
+        sideband = dict(self.sideband)
+        if side is not None and key in self.sideband:
+            sideband[key] = side.astype(self.sideband[key].dtype)
+        return dataclasses.replace(
+            self,
+            head={**self.head, key: head_part},
+            tail={**self.tail, key: payload.astype(self.tail[key].dtype)},
+            sideband=sideband,
+        )
+
+    # ----- accounting -------------------------------------------------------
+
+    def device_bytes(self) -> int:
+        """Actual device footprint of the container (all tiers + sideband)."""
+        n = 0
+        for leaf in (
+            list(self.head.values()) + list(self.tail.values())
+            + list(self.sideband.values()) + list(self.raw.values())
+        ):
+            n += int(np.prod(leaf.shape, dtype=np.int64)) * jnp.dtype(leaf.dtype).itemsize
+        return n
+
+    def fp32_equiv_bytes(self) -> int:
+        """The raw-arena footprint of the same resident set (head == capacity)."""
+        n = 0
+        for k in self.head:
+            row = int(np.prod(self.head[k].shape[-1:], dtype=np.int64))
+            batch = int(np.prod(self.head[k].shape[:-2], dtype=np.int64))
+            n += batch * self.capacity * row * self._out.itemsize
+        for leaf in self.raw.values():
+            n += int(np.prod(leaf.shape, dtype=np.int64)) * jnp.dtype(leaf.dtype).itemsize
+        return n

@@ -84,6 +84,33 @@ class PrecisionPolicy:
             return "fp16"
         return "fp32"
 
+    def choose_arena(
+        self,
+        geom: SlabGeometry,
+        head_capacity: int,
+        counts: Optional[np.ndarray] = None,
+    ) -> str:
+        """Pick the *device tail* codec for a tiered arena (``arena_precision
+        ="auto"``).  Same thresholds as ``choose``, but the statistic is the
+        head's share of the accesses that land in the arena at all: among the
+        ``capacity`` hottest ids, how much traffic do the ``head_capacity``
+        hottest absorb?  When the fp32 head soaks up most resident reads, the
+        encoded tail is effectively device-side cold storage and int8 is
+        safe; when resident traffic is flat, keep the tail at fp16/fp32."""
+        if counts is None:
+            return self.no_stats
+        counts = np.asarray(counts, dtype=np.float64)
+        resident = np.sort(counts)[::-1][: max(int(geom.capacity), 1)]
+        tot = resident.sum()
+        if tot <= 0:
+            return self.no_stats
+        cov = float(resident[: max(int(head_capacity), 1)].sum() / tot)
+        if cov >= self.int8_coverage:
+            return "int8"
+        if cov >= self.fp16_coverage:
+            return "fp16"
+        return "fp32"
+
     def assign(
         self,
         slabs: Sequence[SlabGeometry],

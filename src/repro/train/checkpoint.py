@@ -142,14 +142,30 @@ def restore(directory: str | os.PathLike, tree_like: Any, step: Optional[int] = 
         disk_shape, disk_dtype = tuple(e["shape"]), np.dtype(e["dtype"])
         if disk_shape != shape or (dtype is not None and disk_dtype != dtype):
             is_store = ".full." in key or ".sideband" in key
-            hint = (
-                "  The leaf belongs to a host store: the checkpoint was saved "
-                "under a different host-precision codec than the restore "
-                "template expects — restore with the codec it was saved with "
-                "(matching host_precision), then convert explicitly."
-                if is_store
-                else ""
+            # keystr renders ArenaStore fields as .cached_rows.head['w'] /
+            # .cached_rows.tail['w'] / .cached_rows.sideband['w']
+            is_arena = ".cached_rows." in key and (
+                ".head" in key or ".tail" in key or ".sideband" in key
             )
+            if is_arena:
+                hint = (
+                    "  The leaf belongs to a tiered device arena: the "
+                    "checkpoint was saved under a different arena_precision "
+                    "(or arena_head_ratio) than the restore template expects "
+                    "— restore with the setting it was saved with, then "
+                    "convert explicitly (pre-tiering checkpoints restore only "
+                    "under arena_precision='fp32')."
+                )
+            elif is_store:
+                hint = (
+                    "  The leaf belongs to a host store: the checkpoint was "
+                    "saved under a different host-precision codec than the "
+                    "restore template expects — restore with the codec it was "
+                    "saved with (matching host_precision), then convert "
+                    "explicitly."
+                )
+            else:
+                hint = ""
             raise ValueError(
                 f"checkpoint leaf {key!r} mismatch: on disk "
                 f"{disk_shape}/{disk_dtype}, template expects {shape}/{dtype}."

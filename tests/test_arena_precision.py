@@ -1,0 +1,401 @@
+"""Mixed-precision device arena: fp32-head/encoded-tail tiering exactness,
+precision-boundary crossings (churn + refresh), per-device byte accounting,
+planner sideband budgeting, checkpoint loudness, and counter plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cache_lib
+from repro.core import collection as col
+from repro.core.refresh import RefreshConfig
+from repro.core.sharded import ShardedEmbeddingCollection
+from repro.obs import MetricsHub
+from repro.store import ArenaStore, get_codec, tiered_arena_bytes
+from repro.train import checkpoint as ckpt
+
+
+def _tables(dim=8, ids=16):
+    return [
+        col.TableConfig("big", vocab=512, dim=dim, ids_per_step=ids, cache_ratio=0.1),
+        col.TableConfig("small", vocab=96, dim=dim, ids_per_step=ids, cache_ratio=0.3),
+    ]
+
+
+def _fb(tables, n, seed):
+    rng = np.random.default_rng(seed)
+    return col.FeatureBatch(ids={
+        t.name: jnp.asarray(rng.integers(-1, t.vocab, n).astype(np.int32))
+        for t in tables
+    })
+
+
+def _counts(tables, seed=1):
+    rng = np.random.default_rng(seed)
+    return {t.name: rng.integers(0, 50, t.vocab) for t in tables}
+
+
+def _warm_state(coll, tables, steps=10, seed0=100):
+    state = coll.init(jax.random.PRNGKey(0), counts=_counts(tables))
+    step = jax.jit(lambda s, f: coll.lookup(s, f))
+    for i in range(steps):
+        state, _, _ = step(state, _fb(tables, 16, seed0 + i))
+    return state
+
+
+# --------------------------------------------------------------------------
+# layout: fp32 keeps the raw arena, tiered builds an ArenaStore
+# --------------------------------------------------------------------------
+
+
+def test_fp32_default_is_bit_identical_to_explicit_fp32():
+    """arena_precision='fp32' (and omitting it) must keep the exact pre-
+    tiering state: same treedef (raw dict arena, no ArenaStore), bitwise
+    equal leaves along a lookup stream."""
+    tables = _tables()
+    a = col.EmbeddingCollection.create(tables, cache_ratio=0.1)
+    b = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                       arena_precision="fp32")
+    sa, sb = _warm_state(a, tables), _warm_state(b, tables)
+    assert isinstance(sa.slabs[col.SHARED_ARENA].cache.cached_rows, dict)
+    assert (jax.tree_util.tree_structure(sa)
+            == jax.tree_util.tree_structure(sb))
+    for la, lb in zip(jax.tree_util.tree_leaves(sa), jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.parametrize("precision", ["fp16", "int8"])
+def test_tiered_state_builds_arena_store(precision):
+    tables = _tables()
+    coll = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                          arena_precision=precision,
+                                          arena_head_ratio=0.25)
+    state = coll.init(jax.random.PRNGKey(0))
+    spec = coll.cached_slabs[col.SHARED_ARENA]
+    arena = state.slabs[col.SHARED_ARENA].cache.cached_rows
+    assert isinstance(arena, ArenaStore)
+    assert arena.head_capacity == spec.head_capacity
+    assert arena.head["weight"].shape[-2] == spec.head_capacity
+    assert arena.tail["weight"].shape[-2] == spec.capacity - spec.head_capacity
+    assert arena.head["weight"].dtype == jnp.float32
+    db = coll.device_bytes()
+    assert db["arena_bytes_saved"] > 0
+    assert db["device_total"] + db["arena_bytes_saved"] == (
+        col.EmbeddingCollection.create(tables, cache_ratio=0.1).device_bytes()
+        ["device_total"]
+    )
+
+
+# --------------------------------------------------------------------------
+# exactness: post-flush lookups == the dense oracle at every precision
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("precision", ["fp16", "int8"])
+def test_post_flush_lookup_matches_dense_reference(precision):
+    """The paper's consistency contract under tiering: flush makes the slow
+    tier authoritative, and the oracle then agrees with through-cache
+    lookups EXACTLY when both decode in the same execution mode.  (Under
+    ``jax.jit`` XLA may FMA-fuse the tail decode's multiply-add, shifting
+    fp32 results by 1 ulp vs the eager flush — bounded below, not exact.)"""
+    tables = _tables()
+    coll = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                          arena_precision=precision)
+    state = coll.init(jax.random.PRNGKey(0), counts=_counts(tables))
+    jstate = state
+    jstep = jax.jit(lambda s, f: coll.lookup(s, f))
+    for i in range(10):
+        fb = _fb(tables, 16, 500 + i)
+        state, _, rows = coll.lookup(state, fb)
+        ref = coll.dense_reference(coll.flush(state), fb)
+        jstate, _, jrows = jstep(jstate, fb)
+        for f in fb.features:
+            np.testing.assert_array_equal(np.asarray(rows[f]), np.asarray(ref[f]))
+            np.testing.assert_allclose(
+                np.asarray(jrows[f]), np.asarray(ref[f]), rtol=0, atol=1e-6
+            )
+
+
+# --------------------------------------------------------------------------
+# precision-boundary crossings
+# --------------------------------------------------------------------------
+
+
+def test_cache_churn_counts_promotions_and_demotions():
+    """Evicting a head slot demotes; loading into a head slot promotes —
+    full-arena churn (every slot evicted) must tick both counters.  LRU so
+    recency makes the head slots stale and evictable (FREQ_LFU's static
+    rank key would protect the rank-0/1 head rows forever)."""
+    from repro.core.policies import Policy
+
+    cfg = cache_lib.CacheConfig(
+        vocab=32, capacity=8, ids_per_step=4, buffer_rows=8,
+        arena_precision="int8", arena_head_ratio=0.25, policy=Policy.LRU,
+    )
+    assert cfg.head_capacity == 2
+    st = cache_lib.init_cache(cfg, {"weight": jnp.zeros((4,), jnp.float32)})
+    full = {"weight": jnp.arange(32 * 4, dtype=jnp.float32).reshape(32, 4)}
+    prep = jax.jit(lambda f, s, i: cache_lib.prepare(cfg, f, s, i))
+    for lo in (0, 4, 8, 12, 16, 20):  # 3 disjoint working sets -> full churn
+        ids = jnp.arange(lo, lo + 4, dtype=jnp.int32)
+        full, st, _ = prep(full, st, ids)
+    assert int(st.tier_promotions) > 0
+    assert int(st.tier_demotions) > 0
+    # the fp32 arena never crosses a boundary: counters stay zero
+    cfg32 = cache_lib.CacheConfig(vocab=32, capacity=8, ids_per_step=4,
+                                  buffer_rows=8)
+    st32 = cache_lib.init_cache(cfg32, {"weight": jnp.zeros((4,), jnp.float32)})
+    f32 = {"weight": jnp.zeros((32, 4), jnp.float32)}
+    for lo in (0, 4, 8, 12):
+        f32, st32, _ = cache_lib.prepare(cfg32, f32, st32, jnp.arange(lo, lo + 4, dtype=jnp.int32))
+    assert int(st32.tier_promotions) == 0 and int(st32.tier_demotions) == 0
+
+
+def test_demote_evict_promote_round_trip_values():
+    """A row's demote -> evict -> re-fault cycle stays consistent: gathers
+    always equal the flushed slow tier, and the int8 decode is a stable
+    projection (repeat round trips stop losing bits after the first)."""
+    from repro.core.policies import Policy
+
+    cfg = cache_lib.CacheConfig(
+        vocab=32, capacity=8, ids_per_step=4, buffer_rows=8,
+        arena_precision="int8", arena_head_ratio=0.25, policy=Policy.LRU,
+    )
+    st = cache_lib.init_cache(cfg, {"weight": jnp.zeros((4,), jnp.float32)})
+    rng = np.random.default_rng(7)
+    full = {"weight": jnp.asarray(rng.normal(size=(32, 4)).astype(np.float32))}
+    ids_a = jnp.arange(0, 4, dtype=jnp.int32)
+    ids_b = jnp.arange(8, 12, dtype=jnp.int32)
+    ids_c = jnp.arange(16, 20, dtype=jnp.int32)
+    orig0 = np.asarray(full["weight"][0]).copy()
+    # three disjoint working sets over capacity 8: every set is repeatedly
+    # evicted (head included, LRU) and re-faulted
+    for ids in (ids_a, ids_b, ids_c, ids_a, ids_b, ids_c, ids_a):
+        full, st, slots = cache_lib.prepare(cfg, full, st, ids)
+        got = cache_lib.lookup_slots(st, slots, "weight")
+        ff, _ = cache_lib.flush(cfg, full, st)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ff["weight"][np.asarray(ids)])
+        )
+    # quantization error is bounded (one int8 round trip of a unit normal)
+    assert float(np.abs(np.asarray(full["weight"][0]) - orig0).max()) < 0.05
+
+
+def test_arena_store_tail_scatter_gather_is_stable_projection():
+    """Re-scattering gathered (decoded) tail rows keeps the int8 PAYLOAD
+    bit-stable from the first cycle (the codec's tested projection property)
+    and the decoded values within codec tolerance."""
+    arena = ArenaStore.create({"weight": jnp.zeros((8, 4), jnp.float32)},
+                              head_capacity=2, codec="int8")
+    rng = np.random.default_rng(0)
+    block = {"weight": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))}
+    slots = jnp.asarray([2, 5, 7], jnp.int32)  # all tail slots
+    arena = arena.scatter_slots(slots, block, jnp.ones((3,), bool))
+    once = arena.gather_slots(slots)
+    arena2 = arena.scatter_slots(slots, once, jnp.ones((3,), bool))
+    twice = arena2.gather_slots(slots)
+    np.testing.assert_array_equal(np.asarray(arena.tail["weight"]),
+                                  np.asarray(arena2.tail["weight"]))
+    np.testing.assert_allclose(np.asarray(once["weight"]),
+                               np.asarray(twice["weight"]), atol=1e-6)
+    # negative slots gather zero rows (padding contract)
+    pad = arena.gather_slots(jnp.asarray([-1, -1], jnp.int32))
+    assert bool((np.asarray(pad["weight"]) == 0).all())
+
+
+def test_refresh_on_tiered_arena_swaps_and_stays_exact():
+    """Refresh crosses the precision boundary through its existing machinery
+    (invalidate + re-fault): on a flushed int8-arena state the oracle is
+    preserved to 1 fp32 ulp (the surgery's jitted tail decode may FMA-fuse
+    differently than the eager flush — no codec-step-sized drift), and
+    post-refresh lookups still match the oracle exactly."""
+    tables = _tables()
+    coll = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                          arena_precision="int8")
+    state = coll.flush(_warm_state(coll, tables))
+    probe = _fb(tables, 16, 999)
+    before = coll.dense_reference(state, probe)
+    state2, rep = coll.refresh(state, RefreshConfig(max_swaps=32))
+    assert rep.total_swaps > 0
+    after = coll.dense_reference(coll.flush(state2), probe)
+    for k in before:
+        np.testing.assert_allclose(np.asarray(before[k]), np.asarray(after[k]),
+                                   rtol=0, atol=1e-6)
+    state2, _, rows = coll.lookup(state2, probe)  # eager: same-mode decode
+    ref = coll.dense_reference(coll.flush(state2), probe)
+    for k in rows:
+        np.testing.assert_array_equal(np.asarray(rows[k]), np.asarray(ref[k]))
+    m = coll.metrics(state2)
+    assert int(m["slab_tier_promotions"][col.SHARED_ARENA]) >= 0
+    assert int(m["slab_tier_demotions"][col.SHARED_ARENA]) >= 0
+
+
+# --------------------------------------------------------------------------
+# sharded: tiered arenas under vmap + the replicated hot head
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rep_k", [0, 8])
+def test_sharded_tiered_post_flush_exact(rep_k):
+    tables = _tables()
+    coll = ShardedEmbeddingCollection.create(
+        tables, num_shards=2, cache_ratio=0.1, arena_precision="int8",
+        replicate_top_k=rep_k,
+    )
+    state = coll.init(jax.random.PRNGKey(0), counts=_counts(tables))
+    jstate = state
+    jstep = jax.jit(lambda s, f: coll.lookup(s, f))
+    for i in range(8):
+        fb = _fb(tables, 16, 700 + i)
+        state, _, rows = coll.lookup(state, fb)  # eager: same-mode decode
+        ref = coll.dense_reference(coll.flush(state), fb)
+        jstate, _, jrows = jstep(jstate, fb)
+        for f in fb.features:
+            np.testing.assert_array_equal(np.asarray(rows[f]), np.asarray(ref[f]))
+            np.testing.assert_allclose(
+                np.asarray(jrows[f]), np.asarray(ref[f]), rtol=0, atol=1e-6
+            )
+    m = coll.metrics(state)
+    for sname in coll.cached_slabs:
+        assert m["slab_tier_promotions"][sname].dtype == jnp.int32
+        assert m["slab_tier_demotions"][sname].dtype == jnp.int32
+
+
+def test_sharded_rep_arena_charged_per_device():
+    """Satellite regression: the replicated hot head lives on EVERY shard —
+    device_total must charge it S times, device_per_shard once."""
+    tables = _tables()
+    S, K, dim = 2, 16, 8
+    base = ShardedEmbeddingCollection.create(tables, num_shards=S, cache_ratio=0.1)
+    rep = ShardedEmbeddingCollection.create(tables, num_shards=S, cache_ratio=0.1,
+                                            replicate_top_k=K)
+    db0, db1 = base.device_bytes(), rep.device_bytes()
+    n_slabs = len(rep.cached_slabs)
+    # rows + score + last_touch per replicated rank (the step scalar exists
+    # at K=0 too, so it cancels in the K=16 - K=0 difference)
+    rep_rows = K * (dim * 4 + 4 + 4)
+    assert db1["device_total"] - db0["device_total"] == S * rep_rows * n_slabs
+    assert db1["device_per_shard"] - db0["device_per_shard"] == rep_rows * n_slabs
+
+
+def test_sharded_tiered_arena_shrinks_device_bytes():
+    tables = _tables()
+    f32 = ShardedEmbeddingCollection.create(tables, num_shards=2, cache_ratio=0.1)
+    i8 = ShardedEmbeddingCollection.create(tables, num_shards=2, cache_ratio=0.1,
+                                           arena_precision="int8")
+    a, b = f32.device_bytes(), i8.device_bytes()
+    assert b["arena_bytes_saved"] > 0
+    assert b["device_total"] == a["device_total"] - b["arena_bytes_saved"]
+
+
+# --------------------------------------------------------------------------
+# planner budget accounting (sideband bytes are device-resident)
+# --------------------------------------------------------------------------
+
+
+def test_planner_budget_charges_tail_sideband():
+    cap, dim, head_ratio = 128, 16, 0.25
+    head = int(round(head_ratio * cap))
+    got = col.PlacementPlanner._tiered_weight_bytes(
+        cap, dim, jnp.float32, "int8", head_ratio
+    )
+    row = get_codec("int8").row_bytes((dim,), jnp.float32)
+    assert row > dim  # int8 payload + per-row [scale, zero] fp32 sideband
+    assert got == head * dim * 4 + (cap - head) * row
+    assert got == tiered_arena_bytes(cap, head, dim, jnp.float32, "int8")
+    # fp32 is the untiered layout
+    assert col.PlacementPlanner._tiered_weight_bytes(
+        cap, dim, jnp.float32, "fp32", head_ratio
+    ) == cap * dim * 4
+
+
+def test_budgeted_plan_respects_budget_with_tiered_arena():
+    tables = _tables()
+    budget = 14_000  # holds "small" resident, forces "big" through the cache
+    coll = col.EmbeddingCollection.create(tables, budget_bytes=budget,
+                                          arena_precision="int8")
+    assert coll.cached_slabs, "want at least one cached slab under the budget"
+    db = coll.device_bytes()
+    assert db["device_total"] <= budget
+    assert db["arena_bytes_saved"] > 0
+
+
+# --------------------------------------------------------------------------
+# "auto" resolution
+# --------------------------------------------------------------------------
+
+
+def test_auto_resolution_is_written_back():
+    tables = _tables()
+    coll = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                          arena_precision="auto")
+    state = coll.init(jax.random.PRNGKey(0), counts=_counts(tables))
+    resolved = coll.arena_precision[col.SHARED_ARENA]
+    assert resolved in ("fp32", "fp16", "int8")
+    spec = coll.cached_slabs[col.SHARED_ARENA]
+    assert spec.arena_precision == resolved
+    assert spec.cache_config().arena_precision == resolved
+    # the state's container agrees with the resolution
+    arena = state.slabs[col.SHARED_ARENA].cache.cached_rows
+    assert isinstance(arena, ArenaStore) == (resolved != "fp32")
+
+
+# --------------------------------------------------------------------------
+# checkpoint: arena mismatches fail loudly
+# --------------------------------------------------------------------------
+
+
+def test_checkpoint_tiered_vs_fp32_template_fails_loudly(tmp_path):
+    tables = _tables()
+    tiered = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                            arena_precision="int8")
+    ckpt.save(tmp_path, 0, tiered.init(jax.random.PRNGKey(0)))
+    f32 = col.EmbeddingCollection.create(tables, cache_ratio=0.1)
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, f32.init(jax.random.PRNGKey(0)))
+
+
+def test_checkpoint_head_ratio_mismatch_names_the_arena(tmp_path):
+    tables = _tables()
+    a = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                       arena_precision="int8",
+                                       arena_head_ratio=0.25)
+    ckpt.save(tmp_path, 0, a.init(jax.random.PRNGKey(0)))
+    b = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                       arena_precision="int8",
+                                       arena_head_ratio=0.5)
+    with pytest.raises(ValueError, match="arena_precision"):
+        ckpt.restore(tmp_path, b.init(jax.random.PRNGKey(0)))
+
+
+def test_checkpoint_round_trip_same_precision(tmp_path):
+    tables = _tables()
+    coll = col.EmbeddingCollection.create(tables, cache_ratio=0.1,
+                                          arena_precision="int8")
+    state = coll.flush(_warm_state(coll, tables, steps=4))
+    ckpt.save(tmp_path, 0, state)
+    restored, step = ckpt.restore(tmp_path, state)
+    assert step == 0
+    for la, lb in zip(jax.tree_util.tree_leaves(state),
+                      jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# --------------------------------------------------------------------------
+# obs hub: the tier counter families reconstruct exactly past an int32 wrap
+# --------------------------------------------------------------------------
+
+
+def _wrapped(x: int) -> jnp.ndarray:
+    return jnp.asarray(np.int64(x).astype(np.int32))
+
+
+@pytest.mark.parametrize(
+    "family", ["slab_tier_promotions", "slab_tier_demotions"]
+)
+def test_tier_counter_family_wrap_safe_past_2_31(family):
+    hub = MetricsHub()
+    hub.observe_embedding_metrics({family: {"s": _wrapped(2**31 - 3)}})
+    out = hub.observe_embedding_metrics({family: {"s": _wrapped(2**31 + 3)}})
+    assert out[family] == 2**31 + 3
+    assert isinstance(out[family], int)

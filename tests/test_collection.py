@@ -55,7 +55,7 @@ def test_planner_prefers_hot_tables_with_counts():
     # room for one DEVICE table plus the other table's cache floor (which
     # includes the online frequency tracker's vocab-sized counters), but NOT
     # for both tables resident
-    budget = 256 * dim * 4 + col.PlacementPlanner._fast_bytes(tables[0], 0.0) + 64
+    budget = 256 * dim * 4 + col.PlacementPlanner(0)._fast_bytes(tables[0], 0.0) + 64
     counts = {"a": np.ones(256), "b": np.full(256, 1000)}
     plan = col.PlacementPlanner(budget).plan(tables, counts=counts)
     assert plan.placements["b"].placement is col.Placement.DEVICE
@@ -73,7 +73,7 @@ def test_floor_scaled_ratio_zero_is_honored():
     to the table's own ratio — the built slab has floor capacity and the
     device footprint stays within the budget the planner enforced."""
     t = col.TableConfig("big", vocab=100_000, dim=32, ids_per_step=256, cache_ratio=0.05)
-    floor_budget = col.PlacementPlanner._fast_bytes(t, 0.0)
+    floor_budget = col.PlacementPlanner(0)._fast_bytes(t, 0.0)
     plan = col.PlacementPlanner(floor_budget).plan([t])
     assert plan.placements["big"].cache_ratio == 0.0
     coll = col.EmbeddingCollection([t], plan)
