@@ -374,5 +374,103 @@ def bench_obs_overhead(t: Table):
           f"overhead={overhead * 100:+.2f}% (guardrail < 2%)")
 
 
+def bench_pallas_plan(t: Table):
+    """Pallas cache hot path vs the oracle route: per-stage (plan / apply /
+    gather) wall time on one cached table at the paper's serving batch.
+
+    Both arms run the SAME bit-identical bookkeeping (tested property) — the
+    fused arm only swaps the full-capacity ``argsort`` for the bounded top-K
+    reducer and the two-sort dedup for the fused plan image.  Arms are
+    interleaved per iteration so allocator/clock drift cancels; apply is
+    donated (an undonated apply measures output copies, not the plan)."""
+    from repro.core import cache as cache_lib
+    from repro.obs.tracing import Tracer
+
+    if SMOKE:
+        vocab, dim, n_ids, cap, buf = 50_000, 16, 1024, 4096, 2048
+    else:
+        vocab, dim, n_ids, cap, buf = 1_000_000, 64, 4096, 50_000, 8192
+    rng = np.random.default_rng(0)
+
+    arms = {}
+    for tag, plan_kw in (("oracle", {}), ("fused", {"use_pallas_plan": True})):
+        cfg = cache_lib.CacheConfig(vocab=vocab, capacity=cap,
+                                    ids_per_step=n_ids, buffer_rows=buf,
+                                    **plan_kw)
+        st = cache_lib.init_cache(cfg, {"w": jnp.zeros((dim,), jnp.float32)})
+        full = {"w": jnp.asarray(rng.normal(size=(vocab, dim)), jnp.float32)}
+        ids = jnp.asarray((rng.zipf(1.4, n_ids) % vocab).astype(np.int32))
+        plan_j = jax.jit(lambda s, i, c=cfg: cache_lib.plan_prepare(c, s, i))
+        apply_j = jax.jit(lambda f, s, p, c=cfg: cache_lib.apply_plan(c, f, s, p),
+                          donate_argnums=(0, 1))
+        # default fp32 cache: cached_rows is the raw slot-major dict
+        gather_j = jax.jit(lambda s, sl: {
+            k: jnp.take(v, sl, axis=0, mode="fill", fill_value=0)
+            for k, v in s.cached_rows.items()
+        })
+        p = jax.block_until_ready(plan_j(st, ids))  # compile + warm
+        full, st = jax.block_until_ready(apply_j(full, st, p))
+        jax.block_until_ready(gather_j(st, p.slots))
+        arms[tag] = [st, full, ids, plan_j, apply_j, gather_j, Tracer()]
+
+    iters = 3 if SMOKE else 9
+    for _ in range(iters):
+        for arm in arms.values():
+            st, full, ids, plan_j, apply_j, gather_j, tr = arm
+            with tr.span("plan"):
+                p = jax.block_until_ready(plan_j(st, ids))
+            with tr.span("apply"):
+                full, st = jax.block_until_ready(apply_j(full, st, p))
+            with tr.span("gather"):
+                jax.block_until_ready(gather_j(st, p.slots))
+            arm[0], arm[1] = st, full
+
+    total = {}
+    for tag, arm in arms.items():
+        stages = arm[6].stage_summary()
+        pl, ap, ga = (stages[n]["mean_ms"] for n in ("plan", "apply", "gather"))
+        total[tag] = pl + ap
+        t.add(f"cacheops/pallas_plan_{tag}", (pl + ap + ga) * 1e3,
+              f"plan={pl:.2f}ms apply={ap:.2f}ms gather={ga:.2f}ms "
+              f"batch={n_ids} capacity={cap}")
+    speedup = total["oracle"] / max(total["fused"], 1e-9)
+    t.add("cacheops/pallas_plan_speedup", speedup,
+          f"plan+apply oracle/fused at batch={n_ids} (target >= 1.5x)")
+
+
+def bench_arena_decode(t: Table):
+    """Guardrail: the fused gather+decode keeps the int8 tiered arena's read
+    path within 1.5x of the raw fp32 gather (it is usually FASTER — the int8
+    tail moves 4x fewer bytes, and the decode fuses into the same pass).
+    Asserted in the CI smoke set so a decode-path regression fails the build
+    rather than drifting."""
+    from repro.store.arena import ArenaStore
+
+    if SMOKE:
+        cap, dim, n_ids = 4096, 16, 1024
+    else:
+        cap, dim, n_ids = 50_000, 64, 4096
+    rng = np.random.default_rng(0)
+    full = {"w": jnp.asarray(rng.normal(size=(cap, dim)), jnp.float32)}
+    slots = jnp.asarray(rng.integers(0, cap, size=n_ids), jnp.int32)
+    head = max(1, cap // 4)
+
+    sec = {}
+    # fp32 arm: the pre-tiering layout is a raw dict (ArenaStore refuses
+    # fp32 by design) — time the plain slot gather it would run
+    g_raw = jax.jit(lambda w, sl: jnp.take(w, sl, axis=0, mode="fill",
+                                           fill_value=0))
+    sec["fp32"] = timeit(lambda: g_raw(full["w"], slots))
+    ar = ArenaStore.create(dict(full), head, "int8")
+    g = jax.jit(lambda a, sl: a.gather_slots(sl))
+    sec["int8"] = timeit(lambda: g(ar, slots))
+    ratio = sec["int8"] / max(sec["fp32"], 1e-12)
+    t.add("cacheops/arena_decode_int8_vs_fp32", sec["int8"] * 1e6,
+          f"fp32={sec['fp32']*1e6:.0f}us ratio={ratio:.2f}x (guardrail < 1.5x)")
+    if SMOKE:
+        assert ratio < 1.5, f"int8 arena gather ratio {ratio:.2f}x >= 1.5x"
+
+
 ALL = [bench_cache_overhead, bench_collection_placement, bench_pipeline,
-       bench_host_store, bench_arena_precision, bench_obs_overhead]
+       bench_host_store, bench_arena_precision, bench_obs_overhead,
+       bench_pallas_plan, bench_arena_decode]

@@ -33,6 +33,7 @@ from repro.core import cache as cache_lib
 from repro.core import refresh as refresh_lib
 from repro.core.collection import EmbeddingCollection, FeatureBatch, TableConfig
 from repro.core.sharded import RepArena, ShardedEmbeddingCollection
+from repro.kernels.cache_ops import ops as co_ops
 from repro.kernels.embedding_bag import ops as eb_ops
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.fm_interaction import ops as fm_ops
@@ -79,9 +80,14 @@ def _cache_cases() -> Dict[str, SmokeCase]:
     # int8 tiered arena ON so the traces cover the ArenaStore lanes (fp32
     # head + encoded tail scatter/gather, sideband, tier counters); the raw
     # fp32 arena path stays traced via the compute_step case below.
+    # use_pallas_plan ON: planning traces the bounded-top-K / fused-dedup
+    # route (kernels/cache_ops), which is what makes the max_sort_size=64
+    # declaration hold with an EMPTY baseline — the oracle route keeps the
+    # full-capacity argsort and is covered by bit-identity tests instead.
     cfg = cache_lib.CacheConfig(
         vocab=g["vocab"], capacity=g["capacity"], ids_per_step=g["ids"],
         buffer_rows=g["buffer_rows"], arena_precision="int8",
+        use_pallas_plan=True,
     )
     row_ex = {"weight": jnp.zeros((g["dim"],), jnp.float32)}
     state = cache_lib.init_cache(cfg, row_ex)
@@ -199,11 +205,14 @@ def _sharded_cases() -> Dict[str, SmokeCase]:
     # row-leg, the ::rep SGD branch, the compact-image scatter (routed_w <
     # the 64-lane dedup width, so plan_prepare takes the compaction path),
     # and the vmapped ArenaStore encode/decode lanes.
+    # use_pallas_plan ON for the same reason as _cache_cases: the router
+    # dedup and the vmapped per-shard plans trace the bounded-top-K route,
+    # holding max_sort_size=64 with no baseline entry.
     scoll = ShardedEmbeddingCollection.create(
         _toy_tables(), num_shards=g["shards"], cache_ratio=0.5,
         buffer_rows=g["buffer_rows"], replicate_top_k=g["rep_k"],
         exchange_codec="fp16", max_routed_per_shard=g["routed_w"],
-        arena_precision="int8",
+        arena_precision="int8", use_pallas_plan=True,
     )
     state = scoll.init(jax.random.PRNGKey(1))
     fb = _toy_fb()
@@ -380,6 +389,60 @@ def _kernel_cases() -> Dict[str, SmokeCase]:
         "repro.kernels.flash_attention.ops.flash_attention": SmokeCase(
             "repro.kernels.flash_attention.ops.flash_attention",
             fa_ops.flash_attention, (q, q, q),
+        ),
+        # cache hot-path ops: key sized to the cache capacity, lane counts to
+        # the unique buffer — the max_sort_size=64 contracts quote exactly
+        # these shapes (only the kv/u-sized epilogue sorts may appear).
+        "repro.kernels.cache_ops.ops.victim_topk": SmokeCase(
+            "repro.kernels.cache_ops.ops.victim_topk",
+            lambda k: co_ops.victim_topk(k, kv=g["ids"]),
+            (jnp.zeros((g["capacity"],), jnp.int32),),
+        ),
+        "repro.kernels.cache_ops.ops.plan_image": SmokeCase(
+            "repro.kernels.cache_ops.ops.plan_image",
+            lambda r, m: co_ops.plan_image(r, m, k=g["ids"]),
+            (
+                jnp.zeros((4 * g["ids"],), jnp.int32),
+                jnp.full((g["vocab"],), -1, jnp.int32),
+            ),
+        ),
+        "repro.kernels.cache_ops.ops.shard_bucketize": SmokeCase(
+            "repro.kernels.cache_ops.ops.shard_bucketize",
+            lambda r, ro, rl: co_ops.shard_bucketize(
+                r, ro, rl, rep_k=g["rep_k"], num_shards=g["shards"],
+                u=g["routed_w"],
+            ),
+            (
+                jnp.zeros((g["routed_w"],), jnp.int32),
+                jnp.zeros((g["tables"][0],), jnp.int32),
+                jnp.zeros((g["tables"][0],), jnp.int32),
+            ),
+        ),
+        "repro.kernels.cache_ops.ops.arena_gather": SmokeCase(
+            "repro.kernels.cache_ops.ops.arena_gather",
+            lambda h, t, sb, sl: co_ops.arena_gather(
+                h, t, sb, sl, codec="int8", out_dtype="float32"
+            ),
+            (
+                jnp.zeros((32, g["dim"]), jnp.float32),
+                jnp.zeros((96, g["dim"]), jnp.int8),
+                jnp.zeros((96, 2), jnp.float32),
+                jnp.zeros((g["ids"],), jnp.int32),
+            ),
+        ),
+        "repro.kernels.cache_ops.ops.chunked_move": SmokeCase(
+            "repro.kernels.cache_ops.ops.chunked_move",
+            lambda s, d, si, di, ac: co_ops.chunked_move(
+                s, d, si, di, ac, buffer_rows=g["buffer_rows"],
+                src_chunk_rows=8,
+            ),
+            (
+                {"weight": jnp.zeros((g["vocab"], g["dim"]), jnp.float32)},
+                {"weight": jnp.zeros((g["capacity"], g["dim"]), jnp.float32)},
+                jnp.zeros((g["ids"],), jnp.int32),
+                jnp.zeros((g["ids"],), jnp.int32),
+                jnp.zeros((g["ids"],), bool),
+            ),
         ),
     }
 

@@ -43,6 +43,7 @@ from repro.analysis.contracts import INT_COUNTERS, contract
 from repro.core import freq as freq_lib
 from repro.core import transmitter
 from repro.core.policies import Policy, eviction_key
+from repro.kernels.cache_ops import ops as cache_ops
 from repro.store.arena import ArenaStore
 
 __all__ = [
@@ -97,6 +98,15 @@ class CacheConfig:
     # sampling documented in ``plan_prepare``).  Tracking is always on (two
     # O(K) scatters per plan); the counters only influence behavior when a
     # ``core.refresh`` pass is invoked, so untouched runs stay bit-identical.
+    use_pallas_plan: bool = False  # route planning through the bounded-top-K
+    # + fused-dedup kernels (kernels/cache_ops): no capacity-sized sort
+    # anywhere in plan_prepare.  Bit-identical to the default route (property
+    # tested); False keeps the historical XLA route as the exactness oracle.
+    chunk_rows: int = 0  # slow-tier staging granularity: 0 moves scattered
+    # rows (historical path); > 0 groups each transmitter round's rows into
+    # contiguous ``chunk_rows``-row chunks so host<->device traffic issues as
+    # few large copies (the paper's chunk-based manager).  Bit-identical
+    # either way; values that do not divide the vocab fall back to rows.
 
     def __post_init__(self):
         if self.capacity < self.unique_size:
@@ -111,6 +121,8 @@ class CacheConfig:
             )
         if not (0.0 < self.arena_head_ratio <= 1.0):
             raise ValueError(f"arena_head_ratio must be in (0, 1], got {self.arena_head_ratio}")
+        if self.chunk_rows < 0:
+            raise ValueError(f"chunk_rows must be >= 0, got {self.chunk_rows}")
 
     @property
     def unique_size(self) -> int:
@@ -221,8 +233,10 @@ class CachePlan:
 
 # max_sort_size quotes the analysis.smoke geometry (ids_per_step=16): planning
 # declares bounded-top-K, so only O(unique)-sized sorts are admissible.  The
-# full-capacity eviction argsort below trips this today — known-issue baseline
-# entry until ROADMAP item 3 (Pallas O(K) victim selection) lands.
+# smoke config routes through ``use_pallas_plan`` (ROADMAP item 3: bounded
+# top-K victim selection + fused prepare, kernels/cache_ops), which holds the
+# bound; the ``use_pallas_plan=False`` oracle route keeps the full-capacity
+# eviction argsort and is covered by bit-identity property tests instead.
 @contract(max_sort_size=64, int_counters=INT_COUNTERS)
 def plan_prepare(
     cfg: CacheConfig,
@@ -268,22 +282,35 @@ def plan_prepare(
     # --- unique needed rows (fixed size k, padded with -1 at the end) ------
     # jnp.unique sorts ascending; map padding to +inf-like sentinel then back.
     big_rows = jnp.where(valid, rows, int_max)
-    uniq = jnp.unique(big_rows, size=k, fill_value=int_max)
-    uniq_valid = uniq != int_max
-    uniq_sorted = uniq  # ascending, sentinel-padded — reused for membership
-    uniq = jnp.where(uniq_valid, uniq, -1)
+    if cfg.use_pallas_plan:
+        # fused dedup -> residency probe -> miss compaction: ONE sort total
+        # (the overflow count shares the dedup's sorted buffer instead of
+        # paying a second full sort) — bit-identical to the route below.
+        img = cache_ops.plan_image_impl(big_rows, state.row_to_slot, k)
+        uniq_sorted = img.uniq_sorted
+        uniq_valid = img.uniq_valid
+        uniq = img.uniq
+        overflow = (img.n_distinct > k).astype(jnp.int32)
+        uniq_slots = img.uniq_slots
+        miss = img.miss
+        n_miss = img.n_miss
+    else:
+        uniq = jnp.unique(big_rows, size=k, fill_value=int_max)
+        uniq_valid = uniq != int_max
+        uniq_sorted = uniq  # ascending, sentinel-padded — reused for membership
+        uniq = jnp.where(uniq_valid, uniq, -1)
 
-    # overflow detection: did the batch contain more distinct rows than k?
-    # (jnp.unique(size=k) silently keeps the k smallest — count the truth.)
-    srt = jnp.sort(big_rows)
-    n_distinct_valid = jnp.sum(
-        (jnp.diff(srt) != 0) & (srt[1:] != int_max)
-    ) + (srt[0] != int_max).astype(jnp.int32)
-    overflow = (n_distinct_valid > k).astype(jnp.int32)
+        # overflow detection: did the batch contain more distinct rows than k?
+        # (jnp.unique(size=k) silently keeps the k smallest — count the truth.)
+        srt = jnp.sort(big_rows)
+        n_distinct_valid = jnp.sum(
+            (jnp.diff(srt) != 0) & (srt[1:] != int_max)
+        ) + (srt[0] != int_max).astype(jnp.int32)
+        overflow = (n_distinct_valid > k).astype(jnp.int32)
 
-    uniq_slots = state.row_to_slot.at[jnp.where(uniq_valid, uniq, 0)].get(mode="fill", fill_value=-1)
-    miss = (uniq_slots < 0) & uniq_valid
-    n_miss = jnp.sum(miss)
+        uniq_slots = state.row_to_slot.at[jnp.where(uniq_valid, uniq, 0)].get(mode="fill", fill_value=-1)
+        miss = (uniq_slots < 0) & uniq_valid
+        n_miss = jnp.sum(miss)
 
     # --- lookahead merge: unique FUTURE rows not already needed now --------
     if future_rows is not None and future_rows.shape[0] == 0:
@@ -292,7 +319,10 @@ def plan_prepare(
     if future_rows is not None:
         kf = min(int(future_rows.shape[0]), vocab)
         fbig = jnp.where(future_rows >= 0, future_rows, int_max)
-        fut_uniq = jnp.unique(fbig, size=kf, fill_value=int_max)
+        if cfg.use_pallas_plan:
+            fut_uniq, _ = cache_ops.dedup_impl(fbig, kf, int_max)
+        else:
+            fut_uniq = jnp.unique(fbig, size=kf, fill_value=int_max)
         # membership in the current batch's unique set via the sorted buffer
         pos = jnp.clip(jnp.searchsorted(uniq_sorted, fut_uniq), 0, k - 1)
         in_now = uniq_sorted[pos] == fut_uniq
@@ -347,10 +377,15 @@ def plan_prepare(
             ) & (state.slot_to_row >= 0)
         key = jnp.where(pinned, -(_BIG // 2), key)  # soon-needed: evict late
     key = jnp.where(protected, -_BIG, key)  # needed-now slots evict last
-    order = jnp.argsort(key, descending=True)
     # a step can never load more rows than there are slots
     kv = min(k + kf, capacity)
-    victim_slots = order[:kv].astype(jnp.int32)
+    if cfg.use_pallas_plan:
+        # bounded top-K: 32-round streaming threshold descent + kv-sized sort
+        # (bit-identical to the full argsort slice, including tie order)
+        victim_slots = cache_ops.victim_topk_impl(key, kv)
+    else:
+        order = jnp.argsort(key, descending=True)
+        victim_slots = order[:kv].astype(jnp.int32)
 
     lane = jnp.arange(kv)
     if kf:
@@ -359,24 +394,36 @@ def plan_prepare(
         n_prot = jnp.sum(protected) + jnp.sum(pinned & ~protected)
         n_fut_load = jnp.clip(capacity - n_prot - n_miss, 0, n_fut_miss)
         n_loads = n_miss + n_fut_load
-        perm_now = jnp.argsort(jnp.where(miss, 0, 1), stable=True)
-        perm_fut = jnp.argsort(jnp.where(fut_miss, 0, 1), stable=True)
-        cand_rows = jnp.concatenate([uniq[perm_now], fut_uniq[perm_fut]])
-        cand_pri = jnp.concatenate(
-            [
-                jnp.where(jnp.arange(k) < n_miss, 0, 2),
-                jnp.where(jnp.arange(kf) < n_fut_miss, 1, 2),
-            ]
-        )
-        perm = jnp.argsort(cand_pri, stable=True)
         active = lane < n_loads
-        miss_rows = jnp.where(active, cand_rows[perm][:kv], -1)
+        if cfg.use_pallas_plan:
+            # cumsum-compact both miss runs and lane-select the merge — the
+            # priority argsorts below, without sorting (lanes past the two
+            # runs are never active, so the -1 padding never surfaces).
+            now_c = img.miss_rows
+            fut_c = cache_ops.compact_front_impl(fut_miss, fut_uniq, kf)
+            cand = cache_ops.merge_candidates_impl(now_c, n_miss, fut_c, kv)
+            miss_rows = jnp.where(active, cand, -1)
+        else:
+            perm_now = jnp.argsort(jnp.where(miss, 0, 1), stable=True)
+            perm_fut = jnp.argsort(jnp.where(fut_miss, 0, 1), stable=True)
+            cand_rows = jnp.concatenate([uniq[perm_now], fut_uniq[perm_fut]])
+            cand_pri = jnp.concatenate(
+                [
+                    jnp.where(jnp.arange(k) < n_miss, 0, 2),
+                    jnp.where(jnp.arange(kf) < n_fut_miss, 1, 2),
+                ]
+            )
+            perm = jnp.argsort(cand_pri, stable=True)
+            miss_rows = jnp.where(active, cand_rows[perm][:kv], -1)
     else:
         n_loads = n_miss
         active = lane < n_loads  # one victim per actual miss
         # --- compact miss rows to the front ---------------------------------
-        perm = jnp.argsort(jnp.where(miss, 0, 1), stable=True)
-        miss_rows = jnp.where(active, uniq[perm][:kv], -1)
+        if cfg.use_pallas_plan:
+            miss_rows = jnp.where(active, img.miss_rows[:kv], -1)
+        else:
+            perm = jnp.argsort(jnp.where(miss, 0, 1), stable=True)
+            miss_rows = jnp.where(active, uniq[perm][:kv], -1)
 
     victim_rows = state.slot_to_row[victim_slots]
     evict_active = active & (victim_rows >= 0)
@@ -461,6 +508,9 @@ def apply_plan(
     install the index image.  The only half that touches weights — in the
     pipelined trainer it runs after the previous step's row update so evicted
     rows carry their freshest values."""
+    # chunk granularity applies to the SLOW-tier side only (the full table):
+    # writebacks scatter into it, loads gather from it.  The cache side stays
+    # row-granular — its slots are a permutation with no useful locality.
     if cfg.writeback:
         full_rows = transmitter.move_rows(
             state.cached_rows,
@@ -469,6 +519,7 @@ def apply_plan(
             plan.victim_rows,
             plan.evict_active,
             buffer_rows=cfg.buffer_rows,
+            dst_chunk_rows=cfg.chunk_rows,
         )
     cached_rows = transmitter.move_rows(
         full_rows,
@@ -477,6 +528,7 @@ def apply_plan(
         plan.victim_slots,
         plan.load_active,
         buffer_rows=cfg.buffer_rows,
+        src_chunk_rows=cfg.chunk_rows,
     )
     new_state = CacheState(
         cached_rows=cached_rows,
@@ -553,7 +605,13 @@ def flush(cfg: CacheConfig, full_rows: Any, state: CacheState) -> Tuple[Any, Cac
     rows = state.slot_to_row
     active = rows >= 0
     full_rows = transmitter.move_rows(
-        state.cached_rows, full_rows, slots, rows, active, buffer_rows=cfg.buffer_rows
+        state.cached_rows,
+        full_rows,
+        slots,
+        rows,
+        active,
+        buffer_rows=cfg.buffer_rows,
+        dst_chunk_rows=cfg.chunk_rows,
     )
     return full_rows, state
 
@@ -573,7 +631,13 @@ def warmup(
     rows = jnp.where(active, rows, -1)
     slots = jnp.arange(capacity, dtype=jnp.int32)
     cached_rows = transmitter.move_rows(
-        full_rows, state.cached_rows, rows, slots, active, buffer_rows=cfg.buffer_rows
+        full_rows,
+        state.cached_rows,
+        rows,
+        slots,
+        active,
+        buffer_rows=cfg.buffer_rows,
+        src_chunk_rows=cfg.chunk_rows,
     )
     slot_to_row = jnp.where(active, rows, -1).astype(jnp.int32)
     row_to_slot = state.row_to_slot.at[jnp.where(active, rows, vocab)].set(

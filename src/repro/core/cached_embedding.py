@@ -75,6 +75,8 @@ class CachedEmbeddingConfig:
     protect_via_inverse: bool = True  # see CacheConfig (paper isin = False)
     host_precision: str = "fp32"  # host-tier codec: fp32 (bit-exact) | fp16 | int8
     freq_half_life: int = 1024  # online frequency tracker decay (CacheConfig)
+    use_pallas_plan: bool = False  # bounded-top-K fused planning (CacheConfig)
+    chunk_rows: int = 0  # chunk-granularity host staging (CacheConfig)
 
     @property
     def vocab(self) -> int:
@@ -103,6 +105,8 @@ class CachedEmbeddingConfig:
             max_unique_per_step=self.max_unique_per_step,
             protect_via_inverse=self.protect_via_inverse,
             freq_half_life=self.freq_half_life,
+            use_pallas_plan=self.use_pallas_plan,
+            chunk_rows=self.chunk_rows,
         )
 
 

@@ -148,6 +148,11 @@ class TableConfig:
     # mass outweighs the old hot set's decayed mass).  GROUPED tables use
     # the arena's value.
     freq_half_life: int = 1024
+    # cache hot-path routing (see CacheConfig): bounded-top-K/fused planning
+    # kernels and chunk-granularity host staging.  GROUPED tables use the
+    # arena's values.
+    use_pallas_plan: bool = False
+    chunk_rows: int = 0
 
     @property
     def features(self) -> Tuple[str, ...]:
@@ -238,6 +243,8 @@ class ArenaConfig:
     arena_precision: str = "fp32"  # the arena's device-tail codec (tiered arena)
     arena_head_ratio: float = 0.25  # fp32 head fraction when the arena is tiered
     freq_half_life: int = 1024  # online-tracker decay (see TableConfig)
+    use_pallas_plan: bool = False  # bounded-top-K fused planning (CacheConfig)
+    chunk_rows: int = 0  # chunk-granularity host staging (CacheConfig)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,6 +269,8 @@ class PlacementPlan:
         arena_precision: str = "fp32",
         arena_head_ratio: float = 0.25,
         freq_half_life: int = 1024,
+        use_pallas_plan: bool = False,
+        chunk_rows: int = 0,
     ) -> "PlacementPlan":
         """The paper's layout: every table GROUPED into one shared cache."""
         return cls(
@@ -284,6 +293,8 @@ class PlacementPlan:
                 arena_precision=arena_precision,
                 arena_head_ratio=arena_head_ratio,
                 freq_half_life=freq_half_life,
+                use_pallas_plan=use_pallas_plan,
+                chunk_rows=chunk_rows,
             ),
             budget_bytes=None,
         )
@@ -750,6 +761,8 @@ class _CachedSlabSpec:
     arena_precision: str = "fp32"  # device-arena tail codec; "auto" -> init
     arena_head_ratio: float = 0.25  # fp32 head fraction of a tiered arena
     freq_half_life: int = 1024  # online-tracker decay (adaptive engine)
+    use_pallas_plan: bool = False  # bounded-top-K fused planning (CacheConfig)
+    chunk_rows: int = 0  # chunk-granularity host staging (CacheConfig)
 
     @property
     def vocab(self) -> int:
@@ -816,6 +829,8 @@ class _CachedSlabSpec:
             ),
             arena_head_ratio=self.arena_head_ratio,
             freq_half_life=self.freq_half_life,
+            use_pallas_plan=self.use_pallas_plan,
+            chunk_rows=self.chunk_rows,
         )
 
 
@@ -859,6 +874,8 @@ class EmbeddingCollection:
                     host_precision=p.host_precision or t.host_precision or "fp32",
                     arena_precision=p.arena_precision or t.arena_precision or "fp32",
                     freq_half_life=t.freq_half_life,
+                    use_pallas_plan=t.use_pallas_plan,
+                    chunk_rows=t.chunk_rows,
                 )
             else:
                 grouped.append(t)
@@ -878,6 +895,8 @@ class EmbeddingCollection:
                 arena_precision=a.arena_precision,
                 arena_head_ratio=a.arena_head_ratio,
                 freq_half_life=a.freq_half_life,
+                use_pallas_plan=a.use_pallas_plan,
+                chunk_rows=a.chunk_rows,
             )
         # resolved host codec per cached slab ("auto" is re-resolved by init,
         # which needs the frequency counts; shard_specs/device_bytes read this)

@@ -87,6 +87,7 @@ from repro.core.collection import (
     _read_full_rows,
 )
 from repro.dist import partitioning as dist_part
+from repro.kernels.cache_ops import ops as cache_ops
 from repro.store import (
     ArenaStore,
     HostStore,
@@ -399,6 +400,8 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             max_unique_per_step=spec.max_unique_per_step,
             protect_via_inverse=spec.protect_via_inverse,
             freq_half_life=spec.freq_half_life,
+            use_pallas_plan=spec.use_pallas_plan,
+            chunk_rows=spec.chunk_rows,
             # each shard's arena tiers at the same head ratio; an unresolved
             # "auto" (config built before ``init``) budgets at the policy's
             # no-stats pick, exactly like the unsharded ``cache_config``.
@@ -571,25 +574,38 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
         return jnp.where(ok, owner, -1), jnp.where(ok, local, -1)
 
     @staticmethod
-    def _dedup(rank: jnp.ndarray, vocab: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def _dedup(
+        rank: jnp.ndarray, vocab: int, fused: bool = False
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Dedup ranks ahead of the bucketize: [L] ranks (-1 pad) ->
         ``(uniq, pos)`` where ``uniq`` is the [U = min(L, vocab)] ascending
         unique buffer (``_PAD_RANK`` padding) and ``pos[i]`` locates lane
         i's rank in it.  A shard then receives each id at most ONCE per plan
         — duplicate lanes (within or across a slab's features) collapse to
-        one exchange lane and one cache-plan lane."""
+        one exchange lane and one cache-plan lane.
+
+        ``fused=True`` swaps ``jnp.unique`` for the one-sort dedup in
+        ``kernels/cache_ops`` (bit-identical; ``_PAD_RANK`` is the max
+        sentinel it collapses padding into)."""
         u = min(int(rank.shape[0]), int(vocab))
         key = jnp.where(rank >= 0, rank, _PAD_RANK)
-        uniq = jnp.unique(key, size=u, fill_value=_PAD_RANK)
+        if fused:
+            uniq, _ = cache_ops.dedup_impl(key, u, _PAD_RANK)
+        else:
+            uniq = jnp.unique(key, size=u, fill_value=_PAD_RANK)
         pos = jnp.minimum(jnp.searchsorted(uniq, key), u - 1).astype(jnp.int32)
         return uniq.astype(jnp.int32), pos
 
     def _bucketize(
-        self, owner: jnp.ndarray, local: jnp.ndarray
+        self, owner: jnp.ndarray, local: jnp.ndarray, fused: bool = False
     ) -> jnp.ndarray:
         """[lanes] routing -> [S, lanes] per-shard local-row image: shard s's
         row keeps only the lanes it owns (-1 elsewhere).  Sharding the
-        leading axis over ``model`` makes this the id all-to-all payload."""
+        leading axis over ``model`` makes this the id all-to-all payload.
+        ``fused=True`` routes through ``kernels/cache_ops`` (a per-shard-row
+        Pallas pass on accelerators; same where-image on CPU)."""
+        if fused:
+            return cache_ops.bucketize_impl(owner, local, self.num_shards)
         sids = jnp.arange(self.num_shards, dtype=jnp.int32)[:, None]
         return jnp.where(
             (owner[None, :] == sids) & (local[None, :] >= 0), local[None, :], -1
@@ -668,9 +684,11 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
 
     # ----- the non-diff bookkeeping pass ------------------------------------
 
-    # bounded-top-K declaration mirrors ``cache.plan_prepare`` (the vmapped
-    # per-shard plan inherits its full-capacity eviction argsort — same
-    # known-issue baseline entry until ROADMAP item 3).
+    # bounded-top-K declaration mirrors ``cache.plan_prepare``: with
+    # ``use_pallas_plan`` the vmapped per-shard plans and the router dedup/
+    # bucketize route through kernels/cache_ops (ROADMAP item 3), so no
+    # capacity-sized sort survives; the oracle route keeps the historical
+    # argsort and is covered by bit-identity tests instead.
     @contract(max_sort_size=64, int_counters=INT_COUNTERS)
     def plan_prepare(
         self,
@@ -716,11 +734,12 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             K = slab.rep.rows.shape[0]
             ncomb = self.num_shards * cap  # arena addresses live past this
             rank = self._rank_ids(slab, raw)
-            uniq, pos = self._dedup(rank, spec.vocab)  # [U], [lanes]
+            fused = spec.use_pallas_plan
+            uniq, pos = self._dedup(rank, spec.vocab, fused=fused)  # [U], [lanes]
             owner_u, local_u = self._route(slab, uniq)
             width = self._lane_width(int(uniq.shape[0]))
             if width is None:
-                rows_sh = self._bucketize(owner_u, local_u)  # [S, U] image
+                rows_sh = self._bucketize(owner_u, local_u, fused=fused)  # [S, U]
                 src_sh = lane_over = None
             else:
                 # bounded dense image: the vmapped per-shard plans run at
@@ -741,10 +760,12 @@ class ShardedEmbeddingCollection(EmbeddingCollection):
             if fut_parts:
                 # the window merges into ONE dedup'd image (the per-shard
                 # plan only needs the union of pinned rows)
-                fuq, _ = self._dedup(jnp.concatenate(fut_parts), spec.vocab)
+                fuq, _ = self._dedup(
+                    jnp.concatenate(fut_parts), spec.vocab, fused=fused
+                )
                 fo, fl = self._route(slab, fuq)
                 if width is None:
-                    fut_sh = self._bucketize(fo, fl)
+                    fut_sh = self._bucketize(fo, fl, fused=fused)
                 else:
                     # a dropped future lane only loses its prefetch pin; the
                     # pipelined group guard still counts it unresident, so

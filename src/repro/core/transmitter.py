@@ -50,6 +50,120 @@ def num_rounds(k: int, buffer_rows: int) -> int:
     return -(-k // buffer_rows)
 
 
+# ---------------------------------------------------------------------------
+# chunk-granularity staging (paper's chunk-based manager, arXiv 2208.05321)
+# ---------------------------------------------------------------------------
+#
+# Instead of gathering/scattering K scattered rows on the slow tier, the
+# chunked path groups the round's rows by their CONTIGUOUS chunk of
+# ``chunk_rows`` rows, dedups the chunk ids (one buffer-sized sort per
+# round — never a table-sized one), and moves whole chunks: loads gather at
+# most ``buffer_rows`` unique chunks and pick rows out of the staged block;
+# writebacks read-modify-write the touched chunks.  On a host<->device link
+# this turns K row-sized DMAs into a few large contiguous ones; values are
+# bit-identical to the row-granular path (tested).
+
+
+def _chunk_plan(
+    idx: jnp.ndarray, chunk: int, n_chunks: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-round chunk schedule: dedup'd chunk ids (``n_chunks`` = OOB pad)
+    plus each lane's flat position ``pos_in_dedup * chunk + offset`` into
+    the staged [B, chunk, ...] block (-1 for inactive lanes)."""
+    big = jnp.iinfo(jnp.int32).max
+    b = idx.shape[0]
+    cid = jnp.where(idx >= 0, idx // chunk, big)
+    srt = jnp.sort(cid)  # buffer-sized, bounded by the round
+    first = jnp.concatenate([jnp.ones((1,), bool), jnp.diff(srt) != 0]) & (srt != big)
+    pos = jnp.cumsum(first.astype(jnp.int32)) - 1
+    uniq_c = jnp.full((b,), n_chunks, jnp.int32).at[
+        jnp.where(first, pos, b)
+    ].set(srt.astype(jnp.int32), mode="drop")
+    lane_pos = jnp.clip(
+        jnp.searchsorted(uniq_c, jnp.where(idx >= 0, cid, 0).astype(jnp.int32)),
+        0,
+        b - 1,
+    ).astype(jnp.int32)
+    flat = jnp.where(idx >= 0, lane_pos * chunk + idx % chunk, -1)
+    return uniq_c, flat
+
+
+def _chunkable(tree: Any, chunk: int) -> bool:
+    """Chunking needs every leaf's row count to divide evenly (the reshaped
+    [rows/chunk, chunk, ...] view); otherwise fall back to row granularity."""
+    if chunk <= 0:
+        return False
+    leaves = jax.tree_util.tree_leaves(tree)
+    return bool(leaves) and all(leaf.shape[0] % chunk == 0 for leaf in leaves)
+
+
+def _gather_rows_chunked(tree: Any, idx: jnp.ndarray, chunk: int) -> Any:
+    """Chunked pack: gather the round's unique chunks, then pick each lane's
+    row out of the staged block.  Inactive lanes (-1) produce zero rows —
+    same convention as :func:`gather_rows`."""
+    b = idx.shape[0]
+
+    def g(leaf):
+        nc = leaf.shape[0] // chunk
+        uniq_c, flat = _chunk_plan(idx, chunk, nc)
+        view = leaf.reshape((nc, chunk) + leaf.shape[1:])
+        staged = jnp.take(view, uniq_c, axis=0, mode="fill", fill_value=0)
+        rows = staged.reshape((b * chunk,) + leaf.shape[1:])
+        safe = jnp.where(flat >= 0, flat, b * chunk)
+        return jnp.take(rows, safe, axis=0, mode="fill", fill_value=0)
+
+    return jax.tree_util.tree_map(g, tree)
+
+
+def _scatter_rows_chunked(
+    tree: Any, idx: jnp.ndarray, block: Any, active: jnp.ndarray, chunk: int
+) -> Any:
+    """Chunked unpack: read-modify-write the touched chunks — gather them,
+    overwrite the block's rows at their in-chunk offsets, scatter the chunks
+    back.  Untouched rows of a touched chunk keep their gathered values, so
+    the result is bit-identical to the row-granular scatter."""
+    b = idx.shape[0]
+    idx_eff = jnp.where(active, idx, -1)
+
+    def s(leaf, blk):
+        nc = leaf.shape[0] // chunk
+        uniq_c, flat = _chunk_plan(idx_eff, chunk, nc)
+        view = leaf.reshape((nc, chunk) + leaf.shape[1:])
+        staged = jnp.take(view, uniq_c, axis=0, mode="fill", fill_value=0)
+        rows = staged.reshape((b * chunk,) + leaf.shape[1:])
+        rows = rows.at[jnp.where(flat >= 0, flat, b * chunk)].set(blk, mode="drop")
+        staged = rows.reshape((b, chunk) + leaf.shape[1:])
+        new_view = view.at[uniq_c].set(staged, mode="drop")  # pad = OOB, dropped
+        return new_view.reshape(leaf.shape)
+
+    return jax.tree_util.tree_map(s, tree, block)
+
+
+def _gather_store_rows_chunked(store: HostStore, idx: jnp.ndarray, chunk: int) -> Any:
+    """Chunked pack from a host store: the chunks that cross the link are the
+    ENCODED payload + sideband (chunking composes with the wire codec)."""
+    block = _gather_rows_chunked(store.data, idx, chunk)
+    side = _gather_rows_chunked(store.sideband, idx, chunk)
+    return store.decode_block(block, side)
+
+
+def _scatter_store_rows_chunked(
+    store: HostStore, idx: jnp.ndarray, block: Any, active: jnp.ndarray, chunk: int
+) -> HostStore:
+    """Chunked unpack into a host store: encode on the device side, then RMW
+    whole payload/sideband chunks on the host side."""
+    data_blk, side_blk = store.encode_block(block)
+    data = _scatter_rows_chunked(store.data, idx, data_blk, active, chunk)
+    sideband = (
+        _scatter_rows_chunked(store.sideband, idx, side_blk, active, chunk)
+        if store.sideband
+        else store.sideband
+    )
+    return HostStore(
+        data=data, sideband=sideband, codec=store.codec, out_dtype=store.out_dtype
+    )
+
+
 def gather_rows(tree: Any, idx: jnp.ndarray) -> Any:
     """Pack: gather rows ``idx`` of every leaf into a contiguous block.
 
@@ -107,6 +221,8 @@ def move_rows(
     active: jnp.ndarray,
     *,
     buffer_rows: int,
+    src_chunk_rows: int = 0,
+    dst_chunk_rows: int = 0,
 ) -> Any:
     """Move rows ``src_idx`` of ``src_tree`` to positions ``dst_idx`` of ``dst_tree``.
 
@@ -120,6 +236,16 @@ def move_rows(
     before it crosses, then scatter payload + sideband into the store.  The
     device side may be an ``ArenaStore`` (tiered arena) — see module
     docstring for the encoded host->tail fast path.
+
+    ``src_chunk_rows`` / ``dst_chunk_rows`` (0 = off) switch the named side
+    to chunk-granularity staging: the round's rows are grouped into
+    contiguous ``chunk_rows``-row chunks and whole chunks cross the link
+    (loads pick rows out of the staged chunks; writebacks read-modify-write
+    them).  Callers set the knob on their SLOW-TIER side only.  Values are
+    bit-identical to the row-granular path; chunking silently falls back to
+    rows when a leaf's row count does not divide the chunk size.  The
+    host->tail verbatim fast path is row-granular (the staged chunks are
+    decoded at the device end), so it is bypassed under a chunked source.
     """
     k = src_idx.shape[0]
     buffer_rows = min(buffer_rows, k)
@@ -129,6 +255,18 @@ def move_rows(
         src_idx = jnp.concatenate([src_idx, jnp.full((pad,), -1, src_idx.dtype)])
         dst_idx = jnp.concatenate([dst_idx, jnp.full((pad,), -1, dst_idx.dtype)])
         active = jnp.concatenate([active, jnp.zeros((pad,), bool)])
+    src_store = src_tree.data if isinstance(src_tree, HostStore) else src_tree
+    chunk_src = (
+        src_chunk_rows
+        if not isinstance(src_tree, ArenaStore) and _chunkable(src_store, src_chunk_rows)
+        else 0
+    )
+    dst_store = dst_tree.data if isinstance(dst_tree, HostStore) else dst_tree
+    chunk_dst = (
+        dst_chunk_rows
+        if not isinstance(dst_tree, ArenaStore) and _chunkable(dst_store, dst_chunk_rows)
+        else 0
+    )
 
     def body(r, dst):
         s = r * buffer_rows
@@ -139,20 +277,29 @@ def move_rows(
         enc_payload: Optional[Any] = None
         enc_side: Optional[Any] = None
         if isinstance(src_tree, HostStore):  # pack + decode-on-load
-            # keep the encoded block around: if the destination is a tiered
-            # arena of the same codec, tail lanes take it verbatim below.
-            enc_payload = gather_rows(src_tree.data, si)
-            enc_side = gather_rows(src_tree.sideband, si)
-            block = src_tree.decode_block(enc_payload, enc_side)
+            if chunk_src:
+                block = _gather_store_rows_chunked(src_tree, si, chunk_src)
+            else:
+                # keep the encoded block around: if the destination is a
+                # tiered arena of the same codec, tail lanes take it
+                # verbatim below.
+                enc_payload = gather_rows(src_tree.data, si)
+                enc_side = gather_rows(src_tree.sideband, si)
+                block = src_tree.decode_block(enc_payload, enc_side)
         elif isinstance(src_tree, ArenaStore):  # pack + decode-on-read
             block = src_tree.gather_slots(si)
+        elif chunk_src:
+            block = _gather_rows_chunked(src_tree, si, chunk_src)
         else:
             block = gather_rows(src_tree, si)  # pack (staging buffer)
         if isinstance(dst, HostStore):  # encode-on-writeback + unpack
+            if chunk_dst:
+                return _scatter_store_rows_chunked(dst, di, block, ac, chunk_dst)
             return _scatter_store_rows(dst, di, block, ac)
         if isinstance(dst, ArenaStore):  # tiered unpack (tail encodes)
             payload_blk = side_blk = None
-            if isinstance(src_tree, HostStore) and src_tree.codec == dst.codec:
+            if enc_payload is not None and isinstance(src_tree, HostStore) \
+                    and src_tree.codec == dst.codec:
                 payload_blk = {
                     k_: enc_payload[k_]
                     for k_ in dst.tail
@@ -164,6 +311,8 @@ def move_rows(
             return dst.scatter_slots(
                 di, block, ac, payload_block=payload_blk, side_block=side_blk
             )
+        if chunk_dst:
+            return _scatter_rows_chunked(dst, di, block, ac, chunk_dst)
         return scatter_rows(dst, di, block, ac)  # move + unpack
 
     if rounds == 1:
@@ -178,6 +327,7 @@ def write_rows(
     active: jnp.ndarray,
     *,
     buffer_rows: int,
+    dst_chunk_rows: int = 0,
 ) -> Any:
     """Scatter an explicit block of ``rows`` (row i -> ``dst_idx[i]``) into
     ``dst_tree`` through the same bounded staging buffer as :func:`move_rows`
@@ -186,4 +336,7 @@ def write_rows(
     rows' slow-tier homes (flush, refresh demotions)."""
     k = dst_idx.shape[0]
     src_idx = jnp.arange(k, dtype=dst_idx.dtype)
-    return move_rows(rows, dst_tree, src_idx, dst_idx, active, buffer_rows=buffer_rows)
+    return move_rows(
+        rows, dst_tree, src_idx, dst_idx, active,
+        buffer_rows=buffer_rows, dst_chunk_rows=dst_chunk_rows,
+    )

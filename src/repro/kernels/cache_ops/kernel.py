@@ -1,0 +1,224 @@
+"""Pallas TPU kernels for the cache hot path (ROADMAP item 3).
+
+Three kernels, each the accelerator lowering of a ``ref.py`` function and
+verified bit-identical against it in interpret mode:
+
+* ``victim_threshold_pallas`` — the tiled streaming reducer behind bounded
+  top-K victim selection.  The eviction-key array streams HBM -> VMEM one
+  tile at a time; SMEM carries the running radix threshold and per-round
+  count across grid steps (grid iteration is sequential on TPU).  32 bit
+  rounds + one greater-than round produce ``(t, n_gt)`` — the kv-th largest
+  key and the count strictly above it — after which the O(kv) select/sort
+  epilogue runs in XLA (shared verbatim with the reference route).
+* ``bucketize_pallas`` — the [S, lanes] per-shard routing image, one shard
+  row per grid step (the id all-to-all payload of the sharded collection).
+* ``gather_decode_pallas`` — the tiered-arena fused gather+decode: slot ids
+  are scalar-prefetched so the BlockSpec index maps pick the head row OR
+  tail payload row per lane, and the kernel decodes tail lanes in-register
+  (fp16 upcast / int8 scale+zero-point) instead of decoding a full gathered
+  block and selecting afterwards.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "bucketize_pallas",
+    "gather_decode_pallas",
+    "victim_threshold_pallas",
+]
+
+
+# ---------------------------------------------------------------------------
+# bounded top-K: the threshold reducer
+# ---------------------------------------------------------------------------
+
+
+def _threshold_kernel(u_ref, t_ref, ngt_ref, cur_ref, cnt_ref, *, kv: int):
+    b, j = pl.program_id(0), pl.program_id(1)
+    tiles = pl.num_programs(1)
+
+    @pl.when((b == 0) & (j == 0))
+    def _init():
+        cur_ref[0, 0] = jnp.uint32(0)
+        cnt_ref[0, 0] = jnp.int32(0)
+
+    @pl.when((b > 0) & (j == 0))
+    def _commit():
+        # close bit round b-1: keep its candidate iff >= kv keys reach it
+        prev_bit = jnp.uint32(1) << (jnp.uint32(32) - b.astype(jnp.uint32))
+        cand = cur_ref[0, 0] | prev_bit
+        cur_ref[0, 0] = jnp.where(cnt_ref[0, 0] >= kv, cand, cur_ref[0, 0])
+        cnt_ref[0, 0] = jnp.int32(0)
+
+    tile = u_ref[...]
+
+    @pl.when(b < 32)
+    def _count_ge():
+        cand = cur_ref[0, 0] | (
+            jnp.uint32(1) << (jnp.uint32(31) - b.astype(jnp.uint32))
+        )
+        cnt_ref[0, 0] += jnp.sum((tile >= cand).astype(jnp.int32))
+
+    @pl.when(b == 32)
+    def _count_gt():  # final round: count keys strictly above the threshold
+        cnt_ref[0, 0] += jnp.sum((tile > cur_ref[0, 0]).astype(jnp.int32))
+
+    @pl.when((b == 32) & (j == tiles - 1))
+    def _finalize():
+        t_ref[0, 0] = cur_ref[0, 0]
+        ngt_ref[0, 0] = cnt_ref[0, 0]
+
+
+def victim_threshold_pallas(
+    u: jnp.ndarray,  # uint32 [C] order-transformed eviction keys
+    kv: int,
+    tile_rows: int = 2048,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(t, n_gt): the kv-th largest of ``u`` and the count strictly above it.
+
+    Padding note: ``u`` is padded with 0 (the minimum of the transformed
+    domain).  Every bit-round candidate has at least one bit set (> 0) and
+    the final round compares strictly, so pad lanes never count.
+    """
+    c = u.shape[0]
+    tile_rows = min(tile_rows, c)
+    tiles = -(-c // tile_rows)
+    pad = tiles * tile_rows - c
+    if pad:
+        u = jnp.concatenate([u, jnp.zeros((pad,), jnp.uint32)])
+    u2 = u.reshape(tiles, tile_rows)
+    t, ngt = pl.pallas_call(
+        functools.partial(_threshold_kernel, kv=int(kv)),
+        grid=(33, tiles),
+        in_specs=[pl.BlockSpec((1, tile_rows), lambda b, j: (j, 0))],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.uint32),  # running threshold
+            pltpu.SMEM((1, 1), jnp.int32),  # per-round count
+        ],
+        interpret=interpret,
+    )(u2)
+    return t[0, 0], ngt[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# [S, lanes] bucketize
+# ---------------------------------------------------------------------------
+
+
+def _bucketize_kernel(owner_ref, local_ref, out_ref):
+    s = pl.program_id(0)
+    local = local_ref[...]
+    mine = (owner_ref[...] == s) & (local >= 0)
+    out_ref[...] = jnp.where(mine, local, -1)
+
+
+def bucketize_pallas(
+    owner: jnp.ndarray,  # int32 [U] owning shard (-1 pad/replicated)
+    local: jnp.ndarray,  # int32 [U] shard-local row (-1 pad/replicated)
+    num_shards: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    u = owner.shape[0]
+    return pl.pallas_call(
+        _bucketize_kernel,
+        grid=(int(num_shards),),
+        in_specs=[
+            pl.BlockSpec((1, u), lambda s: (0, 0)),
+            pl.BlockSpec((1, u), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, u), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((int(num_shards), u), jnp.int32),
+        interpret=interpret,
+    )(owner.reshape(1, u), local.reshape(1, u))
+
+
+# ---------------------------------------------------------------------------
+# tiered-arena fused gather + decode
+# ---------------------------------------------------------------------------
+
+
+def _gather_decode_kernel(
+    slots_ref, head_ref, tail_ref, side_ref, out_ref, *, h: int, t: int, codec: str
+):
+    i = pl.program_id(0)
+    slot = slots_ref[i]
+    in_tail = slot >= h
+    valid = (slot >= 0) & (slot < h + t)  # OOB slots give zero rows, like the
+    # reference route's fill-gather (whose zero payload decodes to zero)
+    head_row = head_ref[...].astype(out_ref.dtype)
+    if codec == "int8":
+        scale = side_ref[0, 0]
+        zp = side_ref[0, 1]
+        # f32 accumulate then cast — the exact codec decode order
+        tail_row = (tail_ref[...].astype(jnp.float32) * scale + zp).astype(
+            out_ref.dtype
+        )
+    else:  # fp16: plain upcast
+        tail_row = tail_ref[...].astype(out_ref.dtype)
+    row = jnp.where(in_tail, tail_row, head_row)
+    out_ref[...] = jnp.where(valid, row, jnp.zeros_like(row))
+
+
+def gather_decode_pallas(
+    head: jnp.ndarray,  # [H, D] fp32 head rows
+    tail: jnp.ndarray,  # [T, D] encoded tail payload
+    sideband: Optional[jnp.ndarray],  # [T, 2] (scale, zero_point) or None
+    slots: jnp.ndarray,  # int32 [K] arena slots (-1 padding)
+    codec: str,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused decode-on-read gather: one [K, D] pass, each lane streaming
+    either its head row or its tail payload (+ sideband) through VMEM and
+    decoding in-register.  Bit-identical to ``ref.arena_gather`` with the
+    store codecs (fp16 upcast; int8 ``payload * scale + zero_point``)."""
+    if codec not in ("fp16", "int8"):
+        raise ValueError(f"gather_decode_pallas supports fp16/int8, got {codec!r}")
+    h, d = head.shape
+    t = tail.shape[0]
+    k = slots.shape[0]
+    side = sideband
+    if side is None:  # fp16: dummy sideband keeps the spec list static
+        side = jnp.zeros((max(t, 1), 2), jnp.float32)
+
+    def head_index(i, slots_pf):
+        s = slots_pf[i]
+        return jnp.where((s >= 0) & (s < h), s, 0), 0
+
+    def tail_index(i, slots_pf):
+        s = slots_pf[i]
+        return jnp.where((s >= h) & (s < h + t), s - h, 0), 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # slots
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, d), head_index),
+            pl.BlockSpec((1, d), tail_index),
+            pl.BlockSpec((1, 2), tail_index),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, slots_pf: (i, 0)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_gather_decode_kernel, h=h, t=t, codec=codec),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, d), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )
+    return fn(slots, head, tail, side)

@@ -28,7 +28,8 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
                    model_shards: int = 0, policy=None,
                    replicate_top_k: int = 0, exchange_codec: str = "fp32",
                    max_routed_per_shard: int = 0,
-                   arena_precision: str = "fp32"):
+                   arena_precision: str = "fp32",
+                   use_pallas_plan: bool = False, chunk_rows: int = 0):
     if model_shards and not arch.startswith("dlrm"):
         raise SystemExit(f"--model-shards is wired for dlrm archs; {arch} "
                          f"builds an unsharded collection")
@@ -45,6 +46,7 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
                          bottom_mlp=(64, 32), top_mlp=(64,),
                          host_precision=host_precision,
                          arena_precision=arena_precision,
+                         use_pallas_plan=use_pallas_plan, chunk_rows=chunk_rows,
                          model_shards=model_shards, policy=policy,
                          replicate_top_k=replicate_top_k,
                          exchange_codec=exchange_codec,
@@ -57,7 +59,8 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
 
         cfg = FMConfig(vocab_sizes=(100_000,) * 6, embed_dim=10, batch_size=batch,
                        cache_ratio=0.02, host_precision=host_precision,
-                       arena_precision=arena_precision, policy=policy)
+                       arena_precision=arena_precision, policy=policy,
+                       use_pallas_plan=use_pallas_plan, chunk_rows=chunk_rows)
         model = FMModel(cfg)
         spec = synth.ZipfSparseSpec(vocab_sizes=cfg.vocab_sizes)
         make = lambda s: {k: jnp.asarray(v) for k, v in synth.sparse_batch(spec, batch, 0, s).items()}
@@ -69,7 +72,9 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
             cfg = MINDConfig(n_items=200_000, n_users=20_000, embed_dim=32,
                              seq_len=50, batch_size=batch, cache_ratio=0.05,
                              host_precision=host_precision,
-                             arena_precision=arena_precision, policy=policy)
+                             arena_precision=arena_precision, policy=policy,
+                             use_pallas_plan=use_pallas_plan,
+                             chunk_rows=chunk_rows)
             model = MINDModel(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
                 cfg.n_items, cfg.n_users, cfg.seq_len, batch, 0, s).items()}
@@ -77,7 +82,8 @@ def _recsys_runner(arch: str, batch: int, host_precision: str = "fp32",
             kw = dict(n_items=200_000, n_cates=20_000, n_users=20_000, embed_dim=18,
                       seq_len=50, batch_size=batch, cache_ratio=0.05,
                       host_precision=host_precision,
-                      arena_precision=arena_precision, policy=policy)
+                      arena_precision=arena_precision, policy=policy,
+                      use_pallas_plan=use_pallas_plan, chunk_rows=chunk_rows)
             cfg = DINConfig(**kw) if arch == "din" else DIENConfig(gru_dim=36, **kw)
             model = (DINModel if arch == "din" else DIENModel)(cfg)
             make = lambda s: {k: jnp.asarray(v) for k, v in synth.recsys_batch(
@@ -134,6 +140,20 @@ def main():
                          "cache-plan cost so planning stops scaling with the "
                          "shard count; too tight a bound raises through the "
                          "uniq_overflows guard instead of dropping lanes")
+    ap.add_argument("--use-pallas-plan", action="store_true",
+                    help="route cache planning through the bounded-top-K / "
+                         "fused-prepare kernels (kernels/cache_ops): no "
+                         "capacity-sized sort in the plan hot path.  "
+                         "Bit-identical to the default route; Pallas lowers "
+                         "on TPU/GPU, XLA references elsewhere (recsys archs "
+                         "only)")
+    ap.add_argument("--chunk-rows", type=int, default=0,
+                    help="0 = scattered-row host staging (default); N = "
+                         "stage host<->device embedding traffic in "
+                         "contiguous N-row chunks (the paper's chunk-based "
+                         "cache manager).  Bit-identical either way; values "
+                         "that do not divide the table fall back to rows "
+                         "(recsys archs only)")
     ap.add_argument("--cache-policy", default=None,
                     choices=["freq_lfu", "lru", "runtime_lfu", "uvm_row"],
                     help="cache eviction policy (core.policies.Policy): "
@@ -190,7 +210,9 @@ def main():
                                             replicate_top_k=args.replicate_top_k,
                                             exchange_codec=args.exchange_codec,
                                             max_routed_per_shard=args.max_routed_per_shard,
-                                            arena_precision=args.arena_precision)
+                                            arena_precision=args.arena_precision,
+                                            use_pallas_plan=args.use_pallas_plan,
+                                            chunk_rows=args.chunk_rows)
 
     if args.cache_policy and not hasattr(model, "collection"):
         raise SystemExit(f"--cache-policy needs a collection-backed arch; "

@@ -71,6 +71,10 @@ class DLRMConfig:
     # full-width planning).  Bound too tight -> uniq_overflows trips the
     # trainer guard instead of silently dropping lanes.
     max_routed_per_shard: int = 0
+    # cache hot path: bounded-top-K/fused planning kernels and chunked host
+    # staging (see core.cache.CacheConfig; both bit-identical to defaults).
+    use_pallas_plan: bool = False
+    chunk_rows: int = 0
 
     @property
     def n_sparse(self) -> int:
@@ -113,6 +117,8 @@ class DLRM(common.CollectionModelMixin):
             host_precision=cfg.host_precision,
             arena_precision=cfg.arena_precision,
             arena_head_ratio=cfg.arena_head_ratio,
+            use_pallas_plan=cfg.use_pallas_plan,
+            chunk_rows=cfg.chunk_rows,
         )
         if cfg.model_shards > 0:
             from repro.core.sharded import ShardedEmbeddingCollection

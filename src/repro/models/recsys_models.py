@@ -63,6 +63,8 @@ class FMConfig:
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
     arena_precision: str = "fp32"  # device-arena tail codec (see repro.store)
     arena_head_ratio: float = 0.25  # fp32 head share of a tiered arena
+    use_pallas_plan: bool = False  # bounded-top-K fused cache planning
+    chunk_rows: int = 0  # chunk-granularity host staging
     policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
@@ -90,6 +92,8 @@ class FMModel(common.CollectionModelMixin):
             host_precision=cfg.host_precision,
             arena_precision=cfg.arena_precision,
             arena_head_ratio=cfg.arena_head_ratio,
+            use_pallas_plan=cfg.use_pallas_plan,
+            chunk_rows=cfg.chunk_rows,
             policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 
@@ -186,6 +190,8 @@ class DINConfig:
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
     arena_precision: str = "fp32"  # device-arena tail codec (see repro.store)
     arena_head_ratio: float = 0.25  # fp32 head share of a tiered arena
+    use_pallas_plan: bool = False  # bounded-top-K fused cache planning
+    chunk_rows: int = 0  # chunk-granularity host staging
     policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
@@ -209,6 +215,8 @@ class DINModel(common.CollectionModelMixin):
             host_precision=cfg.host_precision,
             arena_precision=cfg.arena_precision,
             arena_head_ratio=cfg.arena_head_ratio,
+            use_pallas_plan=cfg.use_pallas_plan,
+            chunk_rows=cfg.chunk_rows,
             policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 
@@ -429,6 +437,8 @@ class MINDConfig:
     host_precision: str = "fp32"  # host-tier codec (see repro.store)
     arena_precision: str = "fp32"  # device-arena tail codec (see repro.store)
     arena_head_ratio: float = 0.25  # fp32 head share of a tiered arena
+    use_pallas_plan: bool = False  # bounded-top-K fused cache planning
+    chunk_rows: int = 0  # chunk-granularity host staging
     policy: Any = None  # core.Policy eviction policy; None -> FREQ_LFU
 
 
@@ -450,6 +460,8 @@ class MINDModel(common.CollectionModelMixin):
             host_precision=cfg.host_precision,
             arena_precision=cfg.arena_precision,
             arena_head_ratio=cfg.arena_head_ratio,
+            use_pallas_plan=cfg.use_pallas_plan,
+            chunk_rows=cfg.chunk_rows,
             policy=cfg.policy or col.Policy.FREQ_LFU,
         )
 

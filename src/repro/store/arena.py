@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.cache_ops import ops as cache_ops
 from repro.store.codec import Codec, get_codec
 
 __all__ = ["ArenaStore", "tiered_arena_bytes"]
@@ -207,22 +208,20 @@ class ArenaStore:
         rows — the ``transmitter.gather_rows`` convention.  Head lanes are
         bit-exact reads; tail lanes decode payload + sideband."""
         c = self._codec
-        H = self.head_capacity
-        in_tail = slots >= H
         out: Dict[str, jnp.ndarray] = {}
         for k, hleaf in self.head.items():
-            safe_h = jnp.where((slots >= 0) & ~in_tail, slots, hleaf.shape[0])
-            head_rows = jnp.take(hleaf, safe_h, axis=0, mode="fill", fill_value=0)
-            tleaf = self.tail[k]
-            safe_t = jnp.where(in_tail, slots - H, tleaf.shape[0])
-            payload = jnp.take(tleaf, safe_t, axis=0, mode="fill", fill_value=0)
-            side = None
-            if k in self.sideband:
-                side = jnp.take(
-                    self.sideband[k], safe_t, axis=0, mode="fill", fill_value=0
-                )
-            tail_rows = c.decode(payload, side, self._out)
-            out[k] = jnp.where(_row_mask(in_tail, head_rows), tail_rows, head_rows)
+            # fused gather+decode (kernels/cache_ops): Pallas lowers the
+            # per-lane head-or-tail pick + in-register decode on accelerators;
+            # the reference route is the exact historical take/decode/select.
+            out[k] = cache_ops.arena_gather_impl(
+                hleaf,
+                self.tail[k],
+                self.sideband.get(k),
+                slots,
+                self.codec,
+                c.decode,
+                self._out,
+            )
         for k, leaf in self.raw.items():
             safe = jnp.where(slots >= 0, slots, leaf.shape[0])
             out[k] = jnp.take(leaf, safe, axis=0, mode="fill", fill_value=0)

@@ -396,16 +396,12 @@ def test_full_gate_passes_clean_modulo_baseline():
         run.load_baseline(run._DEFAULT_BASELINE),
     )
     assert report["new"] == [], f"new violations on main: {report['new']}"
-    # the ROADMAP-item-3 argsort is expected-fail, present and baselined
-    assert {
-        (b["check"], b["entry"]) for b in report["baselined"]
-    } == {
-        ("sort-bound", "repro.core.cache.plan_prepare"),
-        ("sort-bound",
-         "repro.core.sharded.ShardedEmbeddingCollection.plan_prepare"),
-    }
+    # the ROADMAP-item-3 argsorts are FIXED (bounded top-K + fused prepare):
+    # the baseline is empty and must stay empty — a new unbounded sort on a
+    # registered entry point is a hard failure, not a baseline candidate.
+    assert report["baselined"] == []
     assert report["stale_baseline"] == []
-    assert len(report["entries"]) >= 15
+    assert len(report["entries"]) >= 24
 
 
 def test_baseline_marks_stale_entries():
@@ -427,14 +423,22 @@ def test_baseline_marks_stale_entries():
 
 
 def test_cli_json_and_exit_codes(tmp_path, capsys):
-    # empty baseline -> the two known sort-bound findings become NEW -> exit 1
+    # a NEW violation -> exit 1.  The real tree is clean since PR 10 emptied
+    # the baseline, so point the AST pass at a synthetic root with a host
+    # sync inside a jit body (the jaxpr pass still traces the real registry).
+    bad_root = tmp_path / "badrepo"
+    (bad_root / "src").mkdir(parents=True)
+    (bad_root / "src" / "bad.py").write_text(
+        "import jax\n\n@jax.jit\ndef bad(x):\n    return x.item()\n"
+    )
+    root = str(Path(__file__).resolve().parents[1])
     empty = tmp_path / "empty.json"
     empty.write_text(json.dumps({"known_issues": []}))
-    root = str(Path(__file__).resolve().parents[1])
-    rc = run.main(["--json", "--skip-hlo", "--baseline", str(empty), "--root", root])
+    rc = run.main(["--json", "--skip-hlo", "--baseline", str(empty),
+                   "--root", str(bad_root)])
     out = json.loads(capsys.readouterr().out)
     assert rc == 1
-    assert {v["check"] for v in out["new"]} == {"sort-bound"}
+    assert "ast-host-sync" in {v["check"] for v in out["new"]}
 
     # the checked-in baseline -> clean -> exit 0 even under --strict
     rc = run.main(["--json", "--skip-hlo", "--strict", "--root", root])
